@@ -1,0 +1,87 @@
+"""Event-path microbenchmarks (beyond paper; drives §Perf iterations).
+
+Measures, in-process (startup excluded):
+  * per-event cost of the two buffer strategies (list vs preallocated numpy)
+    — the "C-bindings" engineering decision;
+  * per-call beta of each instrumenter via the in-process variant of the
+    paper's fit (case2 kernel);
+  * sampling-period sweep: beta as a function of the sampling period.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.buffer import BUFFER_STRATEGIES
+from repro.core.overhead import measure_inprocess_beta
+
+
+def bench_buffers(n_events: int = 200_000, repeats: int = 5) -> Dict[str, float]:
+    out = {}
+    for name, cls in sorted(BUFFER_STRATEGIES.items()):
+        times = []
+        for _ in range(repeats):
+            buf = cls(thread_id=0, flush_threshold=1 << 20, on_flush=lambda *a: None)
+            if name == "list":
+                append = buf.events.append
+                t0 = time.perf_counter()
+                for i in range(n_events):
+                    append((0, 5, 123456789, 0))
+                t1 = time.perf_counter()
+            else:
+                append = buf.append
+                t0 = time.perf_counter()
+                for i in range(n_events):
+                    append(0, 5, 123456789, 0)
+                t1 = time.perf_counter()
+            buf.flush()
+            times.append((t1 - t0) / n_events)
+        out[name] = float(np.median(times)) * 1e9
+        print(f"buffer[{name:6s}]  {out[name]:8.1f} ns/event")
+    return out
+
+
+def bench_instrumenter_beta(repeats: int = 3) -> Dict[str, float]:
+    out = {}
+    for inst in ["none", "profile", "trace", "sampling", "monitoring"]:
+        _, beta = measure_inprocess_beta("case2", inst, ns=[2_000, 20_000], repeats=repeats)
+        out[inst] = beta * 1e6
+        print(f"beta[{inst:10s}]  {beta * 1e6:8.3f} us/iter (in-process, case2)")
+    return out
+
+
+def bench_sampling_periods(repeats: int = 3) -> Dict[str, float]:
+    out = {}
+    for period in [1, 10, 100, 1000]:
+        _, beta = measure_inprocess_beta(
+            "case2", "sampling", ns=[2_000, 20_000], repeats=repeats, sampling_period=period
+        )
+        out[str(period)] = beta * 1e6
+        print(f"beta[sampling p={period:5d}]  {beta * 1e6:8.3f} us/iter")
+    return out
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="benchmarks/artifacts/event_throughput.json")
+    p.add_argument("--repeats", type=int, default=3)
+    ns = p.parse_args(argv)
+    doc = {
+        "buffers_ns_per_event": bench_buffers(repeats=ns.repeats),
+        "instrumenter_beta_us": bench_instrumenter_beta(ns.repeats),
+        "sampling_period_beta_us": bench_sampling_periods(ns.repeats),
+    }
+    os.makedirs(os.path.dirname(ns.out), exist_ok=True)
+    with open(ns.out, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,46 @@
+"""Paper Table 2 / Fig. 4b — test case 2 (function calls).
+
+Same protocol as case 1 over the Listing-4 kernel (one Python function call
+per iteration).  Paper reference: None beta=0.3us; setprofile beta=15.0us;
+settrace beta=17.9us per iteration.  Claims reproduced: (1) per-call cost
+dominates both instrumenters; (2) setprofile < settrace; (3) the ordering
+and magnitude gap justify setprofile as the default instrumenter.
+
+Beyond-paper rows: sampling (the paper's future-work suggestion) and
+sys.monitoring (PEP 669) quantify how much of the per-call beta is
+recoverable — EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Optional
+
+from .overhead_case1 import INSTRUMENTERS, run
+
+
+DEFAULT_NS = [10_000, 50_000, 200_000, 500_000]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--repeats", type=int, default=7, help="51 for the paper's full protocol")
+    p.add_argument("--ns", type=int, nargs="*", default=DEFAULT_NS)
+    p.add_argument("--out", default="benchmarks/artifacts/overhead_case2.json")
+    ns = p.parse_args(argv)
+    results = run(ns.ns, ns.repeats, case="case2")
+    os.makedirs(os.path.dirname(ns.out), exist_ok=True)
+    with open(ns.out, "w") as fh:
+        json.dump([r.__dict__ for r in results], fh, indent=1)
+    # the paper's headline claim, asserted
+    by_name = {r.instrumenter: r for r in results}
+    if "profile" in by_name and "trace" in by_name:
+        ok = by_name["profile"].beta < by_name["trace"].beta
+        print(f"claim(setprofile beta < settrace beta): {'CONFIRMED' if ok else 'REFUTED'}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,76 @@
+"""Render the roofline + perf-iteration artifacts as markdown tables
+(pasted into EXPERIMENTS.md).
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join("benchmarks", "artifacts")
+
+
+def roofline_table(path: str) -> str:
+    with open(path) as fh:
+        recs = json.load(fh)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful-FLOP ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def perf_table(path: str) -> str:
+    if not os.path.exists(path):
+        return "(no perf_iterations.json yet)"
+    with open(path) as fh:
+        groups = json.load(fh)
+    out = []
+    for g in groups:
+        out.append(f"\n**{g['arch']} × {g['shape']}**\n")
+        out.append("| variant | compute s | memory s | collective s | bound s | dominant |")
+        out.append("|---|---|---|---|---|---|")
+        for r in g["iterations"]:
+            if r.get("status") != "ok":
+                out.append(f"| {r['variant']} | — | — | — | — | {r.get('status')} |")
+                continue
+            note = f" ({r['note']})" if "note" in r else ""
+            out.append(
+                f"| {r['variant']}{note} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | {r['bound_s']:.3f} | {r['dominant']} |"
+            )
+    return "\n".join(out)
+
+
+def main() -> int:
+    base = os.path.join(ART, "roofline_baseline.json")
+    cur = os.path.join(ART, "roofline.json")
+    if os.path.exists(base):
+        print("### Roofline (paper-faithful baseline configs)\n")
+        print(roofline_table(base))
+    if os.path.exists(cur) and os.path.realpath(cur) != os.path.realpath(base):
+        print("\n### Roofline (optimized)\n")
+        print(roofline_table(cur))
+    print("\n### Perf iterations\n")
+    print(perf_table(os.path.join(ART, "perf_iterations.json")))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Quickstart — the paper's Fig. 2 / Listing 2 example, end to end.
+
+Run directly (self-instrumenting):
+    PYTHONPATH=src python examples/quickstart.py
+
+Or exactly like the paper's Listing 1 (no source changes needed):
+    PYTHONPATH=src python -m repro.scorep --instrumenter=profile \
+        examples/quickstart.py
+"""
+
+import json
+import os
+import sys
+
+import repro.core as rmon
+
+
+def baz():
+    print("Hello World")
+
+
+def foo():
+    baz()
+
+
+if __name__ == "__main__":
+    # Self-instrument only when not already launched under repro.scorep.
+    owns = rmon.active() is None
+    if owns:
+        rmon.init(instrumenter="profile", out_dir="repro-traces", experiment="quickstart")
+
+    foo()
+
+    if owns:
+        run_dir = rmon.finalize()
+        print(f"\nartifacts in {run_dir}:")
+        for name in sorted(os.listdir(run_dir)):
+            print("  ", name)
+        with open(os.path.join(run_dir, "profile.txt")) as fh:
+            print("\n" + fh.read())
+        print("open trace.json in chrome://tracing or https://ui.perfetto.dev")

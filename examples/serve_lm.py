@@ -1,0 +1,36 @@
+"""Serving example: batched prefill + greedy decode with monitoring.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m --batch 8
+"""
+
+import argparse
+import sys
+
+import repro.core as rmon
+from repro.configs import ARCHS, get_smoke_config
+from repro.launch.serve import serve
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="recurrentgemma-2b", choices=list(ARCHS))
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=24)
+    ns = p.parse_args()
+
+    cfg = get_smoke_config(ns.arch)
+    owns = rmon.active() is None
+    if owns:
+        rmon.init(instrumenter="none", substrates=("metrics", "tracing"),
+                  out_dir="repro-traces", experiment=f"serve-{ns.arch}")
+    result = serve(cfg, batch=ns.batch, prompt_len=ns.prompt_len, gen=ns.gen)
+    print(result)
+    if owns:
+        print("monitoring artifacts:", rmon.finalize())
+    return 0 if result["finite"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

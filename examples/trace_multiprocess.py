@@ -1,0 +1,87 @@
+"""Multi-process tracing + merge — the paper's `mpirun -n 2 python -m scorep
+--mpp=mpi` workflow, with JAX-style per-rank processes.
+
+Spawns N worker processes, each running an instrumented script under
+``python -m repro.scorep`` with a distinct rank; then merges the per-rank
+trace streams into one clock-aligned Chrome trace (the OTF2-unification
+step).
+
+    PYTHONPATH=src python examples/trace_multiprocess.py --ranks 2
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+WORKER = """
+import sys, time
+
+def compute_shard(rank, n):
+    # pretend-work with rank-dependent skew (a straggler!)
+    total = 0
+    for i in range(n * (1 + rank)):
+        total += i * i
+    return total
+
+def exchange(rank):
+    time.sleep(0.01)  # stand-in for a collective
+
+def main():
+    rank = int(sys.argv[1])
+    for step in range(3):
+        compute_shard(rank, 50_000)
+        exchange(rank)
+    print(f"rank {rank} done")
+
+main()
+"""
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--ranks", type=int, default=2)
+    p.add_argument("--out", default=None)
+    ns = p.parse_args()
+
+    root = ns.out or tempfile.mkdtemp(prefix="repro-mp-")
+    src_path = os.path.join(root, "worker.py")
+    with open(src_path, "w") as fh:
+        fh.write(textwrap.dedent(WORKER))
+
+    procs = []
+    for rank in range(ns.ranks):
+        env = dict(os.environ)
+        env["REPRO_MONITOR_RANK"] = str(rank)
+        env.setdefault("PYTHONPATH", os.path.join(os.path.dirname(__file__), "..", "src"))
+        cmd = [
+            sys.executable,
+            "-m",
+            "repro.scorep",
+            "--instrumenter=profile",
+            f"--out={root}",
+            "--experiment=mp",
+            "--no-chrome",
+            src_path,
+            str(rank),
+        ]
+        procs.append(subprocess.Popen(cmd, env=env))
+    for proc in procs:
+        assert proc.wait() == 0
+
+    from repro.core.merge import find_runs, merge_runs
+
+    runs = find_runs(root, "mp")
+    summary = merge_runs(runs, os.path.join(root, "merged_trace.json"))
+    print(f"merged {summary['total_events']} events from ranks "
+          f"{sorted(r['rank'] for r in summary['ranks'])}")
+    print("merged trace:", summary["out"])
+    print("open it in chrome://tracing — rank 1 runs ~2x longer per step "
+          "(the skew is visible in the timeline, paper Fig. 3 style)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

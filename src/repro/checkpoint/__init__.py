@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing."""
+
+from .manager import CheckpointManager  # noqa: F401

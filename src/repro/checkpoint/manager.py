@@ -1,0 +1,197 @@
+"""Checkpointing: atomic, async, manifest-validated, reshard-on-load.
+
+Layout:
+    <root>/step_<N>.tmp/...      (written, then atomically renamed)
+    <root>/step_<N>/
+        manifest.json            tree structure, shapes, dtypes, step, extras
+        arr_<i>.npy              one file per leaf (host-local full arrays)
+    <root>/LATEST                text file with the newest valid step
+
+Fault-tolerance properties:
+  * atomic rename — a crash mid-write never corrupts the latest checkpoint;
+  * manifest validation on restore — partial/corrupt dirs are skipped and
+    the previous valid step is used (`restore_latest` walks backwards);
+  * async writer thread — training is blocked only for the host gather;
+  * reshard-on-load — arrays are re-`device_put` with the *target* sharding,
+    so a checkpoint saved on mesh A restores onto mesh B (elastic scaling).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize ml_dtypes (bfloat16, fp8) natively; store a
+# bit-preserving unsigned view and restore via .view(logical_dtype).
+_BITCAST = {1: np.uint8, 2: np.uint16, 4: np.uint32}
+
+
+def _to_storage(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind == "V" or arr.dtype.names is None and not arr.dtype.isbuiltin:
+        return arr.view(_BITCAST[arr.dtype.itemsize])
+    return arr
+
+
+def _from_storage(raw: np.ndarray, dtype_name: str) -> np.ndarray:
+    try:
+        dtype = np.dtype(dtype_name)
+    except TypeError:
+        dtype = np.dtype(getattr(ml_dtypes, dtype_name))
+    if raw.dtype != dtype and raw.dtype.kind == "u" and raw.dtype.itemsize == dtype.itemsize:
+        return raw.view(dtype)
+    return raw.astype(dtype) if raw.dtype != dtype else raw
+
+
+def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _tree_paths(tree) -> List[str]:
+    import jax.tree_util as jtu
+
+    return [jtu.keystr(p) for p, _ in jtu.tree_leaves_with_path(tree)]
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_write: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_write = async_write
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extras: Optional[Dict] = None) -> None:
+        """Snapshot to host memory synchronously; write to disk (a)sync."""
+        self.wait()  # one outstanding write at a time
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(leaf) for leaf in leaves]  # device->host gather
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "paths": _tree_paths(tree),
+            "shapes": [list(x.shape) for x in host_leaves],
+            "dtypes": [str(x.dtype) for x in host_leaves],
+            "extras": extras or {},
+            "time": time.time(),
+            "complete": True,
+        }
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, manifest), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_leaves, manifest)
+            self.wait()  # surface write errors immediately on the sync path
+
+    def _write(self, step: int, host_leaves: List[np.ndarray], manifest: Dict) -> None:
+        try:
+            tmp = os.path.join(self.root, f"step_{step}.tmp")
+            final = os.path.join(self.root, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for i, arr in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"arr_{i}.npy"), _to_storage(arr))
+            with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+                json.dump(manifest, fh)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            with open(os.path.join(self.root, "LATEST.tmp"), "w") as fh:
+                fh.write(str(step))
+            os.replace(os.path.join(self.root, "LATEST.tmp"), os.path.join(self.root, "LATEST"))
+            self._gc()
+        except BaseException as exc:  # noqa: BLE001 - surfaced on wait()
+            self._error = exc
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {err!r}") from err
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"), ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if self._valid(os.path.join(self.root, name)):
+                    out.append(int(name.split("_", 1)[1]))
+        return sorted(out)
+
+    def _valid(self, path: str) -> bool:
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            return False
+        try:
+            with open(mpath) as fh:
+                manifest = json.load(fh)
+            if not manifest.get("complete"):
+                return False
+            n = len(manifest["shapes"])
+            return all(os.path.exists(os.path.join(path, f"arr_{i}.npy")) for i in range(n))
+        except (json.JSONDecodeError, KeyError, OSError):
+            return False
+
+    def restore(
+        self, step: int, target_tree: Any, shardings: Optional[Any] = None
+    ) -> Tuple[Any, Dict]:
+        """Restore ``step`` into the structure of ``target_tree``; when
+        ``shardings`` is given, leaves are device_put with the *target*
+        sharding (reshard-on-load: mesh may differ from save time)."""
+        path = os.path.join(self.root, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as fh:
+            manifest = json.load(fh)
+        leaves, treedef = jax.tree.flatten(target_tree)
+        if len(leaves) != len(manifest["shapes"]):
+            raise ValueError(
+                f"checkpoint has {len(manifest['shapes'])} leaves, target has {len(leaves)}"
+            )
+        shard_leaves = jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
+        restored = []
+        for i, (tgt, shard) in enumerate(zip(leaves, shard_leaves)):
+            raw = np.load(os.path.join(path, f"arr_{i}.npy"))
+            arr = _from_storage(raw, manifest["dtypes"][i])
+            if list(arr.shape) != list(tgt.shape):
+                raise ValueError(f"leaf {i}: checkpoint {arr.shape} != target {tgt.shape}")
+            if arr.dtype != tgt.dtype:
+                arr = arr.astype(tgt.dtype)
+            if shard is not None:
+                restored.append(jax.device_put(arr, shard))
+            else:
+                restored.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, restored), manifest["extras"]
+
+    def restore_latest(
+        self, target_tree: Any, shardings: Optional[Any] = None
+    ) -> Optional[Tuple[int, Any, Dict]]:
+        """Restore the newest valid checkpoint, walking backwards past any
+        corrupt ones.  Returns None when no checkpoint exists (fresh start)."""
+        for step in reversed(self.steps()):
+            try:
+                tree, extras = self.restore(step, target_tree, shardings)
+                return step, tree, extras
+            except (ValueError, OSError):
+                continue
+        return None

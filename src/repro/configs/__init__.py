@@ -1,0 +1,21 @@
+"""Assigned architecture configs + shape cells."""
+
+from .base import (  # noqa: F401
+    EncoderConfig,
+    FrontendConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RNNConfig,
+    SHAPE_CELLS,
+    SSMConfig,
+    ShapeCell,
+    get_shape_cell,
+)
+from .registry import (  # noqa: F401
+    ARCHS,
+    all_cells,
+    cell_applicable,
+    get_config,
+    get_smoke_config,
+)

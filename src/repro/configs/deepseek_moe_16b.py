@@ -1,0 +1,56 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed top-6
+[arXiv:2401.06066; hf].
+
+28L d_model=2048 16H (MHA kv=16) head_dim=128 d_ff_expert=1408 vocab=102400.
+First layer is a dense FFN (d_ff=10944); remaining 27 layers are MoE.
+"""
+
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=10944,  # dense first layer
+    vocab=102400,
+    head_pattern=(("attn", "mlp"),),
+    pattern=(("attn", "moe"),),
+    n_groups=27,
+    rope_theta=10_000.0,
+    moe=MoEConfig(
+        n_experts=64,
+        top_k=6,
+        d_ff_expert=1408,
+        n_shared=2,
+        d_ff_shared=2816,
+        capacity_factor=1.25,
+        group_size=4096,
+    ),
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-moe-16b-smoke",
+    family="moe",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=256,
+    vocab=512,
+    head_pattern=(("attn", "mlp"),),
+    pattern=(("attn", "moe"),),
+    n_groups=2,
+    moe=MoEConfig(
+        n_experts=8,
+        top_k=2,
+        d_ff_expert=64,
+        n_shared=2,
+        d_ff_shared=128,
+        capacity_factor=1.5,
+        group_size=64,
+    ),
+    remat="none",
+)

@@ -1,0 +1,70 @@
+"""deepseek-v2-236b — MLA + fine-grained MoE: 2 shared + 160 routed top-6
+[arXiv:2405.04434; hf].
+
+60L d_model=5120 128H, MLA (q_lora=1536, kv_lora=512, nope=128, rope=64,
+v=128), d_ff_expert=1536 vocab=102400.  First layer dense (d_ff=12288).
+"""
+
+from .base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=12288,  # dense first layer
+    vocab=102400,
+    head_pattern=(("mla", "mlp"),),
+    pattern=(("mla", "moe"),),
+    n_groups=59,
+    rope_theta=10_000.0,
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        n_experts=160,
+        top_k=6,
+        d_ff_expert=1536,
+        n_shared=2,
+        d_ff_shared=3072,
+        capacity_factor=1.25,
+        group_size=2048,  # bounds the (g,S,E,C) dispatch tensor at E=160
+    ),
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-236b-smoke",
+    family="moe",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=256,
+    vocab=512,
+    head_pattern=(("mla", "mlp"),),
+    pattern=(("mla", "moe"),),
+    n_groups=2,
+    mla=MLAConfig(
+        q_lora_rank=48,
+        kv_lora_rank=32,
+        qk_nope_head_dim=32,
+        qk_rope_head_dim=16,
+        v_head_dim=32,
+    ),
+    moe=MoEConfig(
+        n_experts=8,
+        top_k=2,
+        d_ff_expert=64,
+        n_shared=2,
+        d_ff_shared=128,
+        capacity_factor=1.5,
+        group_size=64,
+    ),
+    remat="none",
+)

@@ -1,0 +1,45 @@
+"""paligemma-3b — VLM: SigLIP frontend (STUB) + gemma-2b decoder
+[arXiv:2407.07726; hf].
+
+18L d_model=2048 8H (MQA kv=1) head_dim=256 d_ff=16384 vocab=257216.
+The SigLIP tower is a stub per the assignment: ``input_specs`` supplies 256
+precomputed patch embeddings already projected to d_model.
+"""
+
+from .base import FrontendConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab=257216,
+    pattern=(("attn", "mlp"),),
+    n_groups=18,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    embed_scale=True,
+    activation="gelu",
+    frontend=FrontendConfig(kind="siglip_stub", n_tokens=256, dim=2048),
+)
+
+SMOKE = ModelConfig(
+    name="paligemma-3b-smoke",
+    family="vlm",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("attn", "mlp"),),
+    n_groups=2,
+    tie_embeddings=True,
+    embed_scale=True,
+    activation="gelu",
+    frontend=FrontendConfig(kind="siglip_stub", n_tokens=8, dim=128),
+    remat="none",
+)

@@ -1,0 +1,37 @@
+"""qwen2.5-32b — dense GQA with QKV bias [hf:Qwen/Qwen2.5-0.5B; hf].
+
+64L d_model=5120 40H (GQA kv=8) head_dim=128 d_ff=27648 vocab=152064.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab=152064,
+    pattern=(("attn", "mlp"),),
+    n_groups=64,
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-32b-smoke",
+    family="dense",
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=256,
+    vocab=512,
+    pattern=(("attn", "mlp"),),
+    n_groups=2,
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    remat="none",
+)

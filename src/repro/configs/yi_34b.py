@@ -1,0 +1,35 @@
+"""yi-34b — dense llama-arch GQA [arXiv:2403.04652; hf].
+
+60L d_model=7168 56H (GQA kv=8) head_dim=128 d_ff=20480 vocab=64000.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab=64000,
+    pattern=(("attn", "mlp"),),
+    n_groups=60,
+    rope_theta=5_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="yi-34b-smoke",
+    family="dense",
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=256,
+    vocab=512,
+    pattern=(("attn", "mlp"),),
+    n_groups=2,
+    rope_theta=5_000_000.0,
+    remat="none",
+)

@@ -1,0 +1,61 @@
+"""repro.core — Score-P-style performance monitoring for Python/JAX.
+
+Public API (paper §2: user instrumentation + measurement lifecycle):
+
+    import repro.core as rmon
+
+    rmon.init(instrumenter="profile")      # or: run under `python -m repro.scorep`
+    with rmon.region("phase"):
+        ...
+    rmon.metric("tokens", 4096.0)
+    run_dir = rmon.finalize()
+"""
+
+from .buffer import (  # noqa: F401
+    EV_C_ENTER,
+    EV_C_EXIT,
+    EV_ENTER,
+    EV_EXCEPTION,
+    EV_EXIT,
+    EV_LINE,
+    BUFFER_STRATEGIES,
+    ListEventBuffer,
+    NumpyEventBuffer,
+)
+from .filtering import Filter  # noqa: F401
+from .instrumenters import INSTRUMENTERS, make_instrumenter  # noqa: F401
+from .measurement import (  # noqa: F401
+    Measurement,
+    MeasurementConfig,
+    active,
+    finalize,
+    init,
+    init_from_env,
+    instrument,
+    metric,
+    region,
+)
+from .regions import Region, RegionRegistry  # noqa: F401
+from .substrates import SUBSTRATES, make_substrate  # noqa: F401
+
+__all__ = [
+    "Measurement",
+    "MeasurementConfig",
+    "init",
+    "init_from_env",
+    "finalize",
+    "active",
+    "region",
+    "metric",
+    "instrument",
+    "Filter",
+    "Region",
+    "RegionRegistry",
+    "INSTRUMENTERS",
+    "SUBSTRATES",
+    "make_instrumenter",
+    "make_substrate",
+    "ListEventBuffer",
+    "NumpyEventBuffer",
+    "BUFFER_STRATEGIES",
+]

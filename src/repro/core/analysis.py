@@ -1,0 +1,93 @@
+"""Profile analysis / diffing — the offline-analysis step of the paper's
+workflow (Score-P profiles are compared across runs in Cube/Vampir; here the
+comparison is programmatic and drives the §Perf loop).
+
+    PYTHONPATH=src python -m repro.core.analysis diff RUN_A RUN_B
+    PYTHONPATH=src python -m repro.core.analysis top RUN_DIR
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def load_profile(run_dir: str) -> Dict[str, Any]:
+    with open(os.path.join(run_dir, "profile.json")) as fh:
+        return json.load(fh)
+
+
+def flat_metrics(profile: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
+    return profile.get("flat", {})
+
+
+def hotspots(run_dir: str, top: int = 20) -> List[Tuple[str, Dict[str, float]]]:
+    flat = flat_metrics(load_profile(run_dir))
+    return sorted(flat.items(), key=lambda kv: -kv[1]["excl_ns"])[:top]
+
+
+def diff_profiles(run_a: str, run_b: str, min_ns: int = 0) -> List[Dict[str, Any]]:
+    """Per-region exclusive-time deltas between two runs (B - A).
+
+    Regions present in only one run are reported with the other side at 0 —
+    exactly what a before/after optimization comparison needs."""
+    a = flat_metrics(load_profile(run_a))
+    b = flat_metrics(load_profile(run_b))
+    rows = []
+    for name in sorted(set(a) | set(b)):
+        ea = a.get(name, {}).get("excl_ns", 0)
+        eb = b.get(name, {}).get("excl_ns", 0)
+        va = a.get(name, {}).get("visits", 0)
+        vb = b.get(name, {}).get("visits", 0)
+        if max(ea, eb) < min_ns:
+            continue
+        rows.append(
+            {
+                "region": name,
+                "excl_ns_a": ea,
+                "excl_ns_b": eb,
+                "delta_ns": eb - ea,
+                "ratio": (eb / ea) if ea else float("inf") if eb else 1.0,
+                "visits_a": va,
+                "visits_b": vb,
+            }
+        )
+    rows.sort(key=lambda r: -abs(r["delta_ns"]))
+    return rows
+
+
+def render_diff(rows: List[Dict[str, Any]], top: int = 25) -> str:
+    out = [f"{'delta_ms':>10s} {'a_ms':>10s} {'b_ms':>10s} {'ratio':>7s}  region"]
+    for r in rows[:top]:
+        ratio = f"{r['ratio']:.2f}" if r["ratio"] != float("inf") else "new"
+        out.append(
+            f"{r['delta_ns'] / 1e6:10.3f} {r['excl_ns_a'] / 1e6:10.3f} "
+            f"{r['excl_ns_b'] / 1e6:10.3f} {ratio:>7s}  {r['region']}"
+        )
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(prog="python -m repro.core.analysis")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    d = sub.add_parser("diff", help="per-region exclusive-time delta (B - A)")
+    d.add_argument("run_a")
+    d.add_argument("run_b")
+    d.add_argument("--top", type=int, default=25)
+    t = sub.add_parser("top", help="hotspot table for one run")
+    t.add_argument("run_dir")
+    t.add_argument("--top", type=int, default=20)
+    ns = p.parse_args(argv)
+    if ns.cmd == "diff":
+        print(render_diff(diff_profiles(ns.run_a, ns.run_b), ns.top))
+    else:
+        for name, vals in hotspots(ns.run_dir, ns.top):
+            print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,146 @@
+"""Two-phase bootstrap — ``python -m repro.scorep <opts> script.py <args>``.
+
+Faithful port of the paper's Fig. 1 workflow:
+
+  Phase 1 (*preparation*): parse measurement arguments, compose the
+  measurement environment, and **restart the interpreter with os.execve**.
+  Score-P restarts because ``LD_PRELOAD`` is evaluated by the dynamic linker
+  at process start; we restart for the same structural reason — settings
+  such as ``XLA_FLAGS`` / ``JAX_PLATFORMS`` are locked in when JAX first
+  initializes, so they must be in the environment *before* the target
+  application's imports run.
+
+  Phase 2 (*execution*): detect the bootstrap marker in the environment,
+  initialize measurement from env, install the instrumenter, and run the
+  target script (``runpy``-style: read, compile, exec as ``__main__``,
+  argv rewritten to the target's argv — paper §2.1).
+
+CLI (compare paper Listing 1):
+
+    python -m repro.scorep --instrumenter=profile --substrates=profiling,tracing \
+        [--filter SPEC] [--out DIR] [--mpp=jax] [--xla-flags "..."] \
+        ./run.py --app-arg
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import runpy
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from .measurement import ENV_PREFIX, MeasurementConfig, finalize, init
+
+_BOOTSTRAP_MARKER = ENV_PREFIX + "BOOTSTRAPPED"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.scorep",
+        description="Run a Python application under repro performance monitoring.",
+        allow_abbrev=False,
+    )
+    p.add_argument("--instrumenter", default="profile",
+                   choices=["none", "profile", "trace", "sampling", "monitoring"],
+                   help="event source (paper: sys.setprofile / sys.settrace)")
+    p.add_argument("--substrates", default="profiling,tracing,metrics",
+                   help="comma-separated substrate list")
+    p.add_argument("--out", default="repro-traces", help="output directory")
+    p.add_argument("--run-dir", default=None, help="explicit run directory (overrides --out)")
+    p.add_argument("--filter", dest="filter_spec", default="",
+                   help="include/exclude rules, e.g. 'exclude:numpy.*;include:mypkg.*'")
+    p.add_argument("--flush-events", type=int, default=1 << 16)
+    p.add_argument("--sampling-period", type=int, default=97)
+    p.add_argument("--buffer", default="list", choices=["list", "numpy"])
+    p.add_argument("--experiment", default="run")
+    p.add_argument("--mpp", default=None, choices=[None, "jax"],
+                   help="multi-process paradigm (jax: rank from JAX distributed env)")
+    p.add_argument("--xla-flags", default=None,
+                   help="extra XLA_FLAGS to install before restart (phase 1)")
+    p.add_argument("--no-restart", action="store_true",
+                   help="skip the execve restart (only safe if env is already correct)")
+    p.add_argument("--no-chrome", action="store_true", help="skip Chrome trace export")
+    p.add_argument("target", help="script path, or module name with -m style 'mod:pkg.mod'")
+    p.add_argument("args", nargs=argparse.REMAINDER, help="target application arguments")
+    return p
+
+
+def _rank_from_env(environ) -> int:
+    for var in ("REPRO_MONITOR_RANK", "JAX_PROCESS_INDEX", "OMPI_COMM_WORLD_RANK", "PMI_RANK"):
+        if var in environ:
+            try:
+                return int(environ[var])
+            except ValueError:
+                pass
+    return 0
+
+
+def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
+    """Phase 1: build the child environment (the LD_PRELOAD analogue)."""
+    env = dict(environ)
+    config = MeasurementConfig(
+        instrumenter=ns.instrumenter,
+        substrates=tuple(s.strip() for s in ns.substrates.split(",") if s.strip()),
+        out_dir=ns.out,
+        run_dir=ns.run_dir,
+        filter_spec=ns.filter_spec,
+        flush_threshold=ns.flush_events,
+        sampling_period=ns.sampling_period,
+        buffer_strategy=ns.buffer,
+        rank=_rank_from_env(environ),
+        experiment=ns.experiment,
+        chrome_export=not ns.no_chrome,
+    )
+    env.update(config.to_env())
+    env[ENV_PREFIX + "ENABLE"] = "1"
+    env[_BOOTSTRAP_MARKER] = "1"
+    if ns.xla_flags:
+        existing = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (existing + " " + ns.xla_flags).strip()
+    if ns.mpp == "jax":
+        env[ENV_PREFIX + "MPP"] = "jax"
+    return env
+
+
+def run_target(target: str, args: List[str]) -> None:
+    """Phase 2 tail: execute the target as ``__main__`` (paper §2.1)."""
+    if target.startswith("mod:"):
+        module = target[4:]
+        sys.argv = [module] + args
+        runpy.run_module(module, run_name="__main__", alter_sys=True)
+    else:
+        sys.argv = [target] + args
+        script_dir = os.path.dirname(os.path.abspath(target))
+        if script_dir not in sys.path:
+            sys.path.insert(0, script_dir)
+        runpy.run_path(target, run_name="__main__")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    ns = build_parser().parse_args(argv)
+    # argparse REMAINDER keeps a leading "--" separator if present.
+    args = [a for i, a in enumerate(ns.args) if not (i == 0 and a == "--")]
+
+    if os.environ.get(_BOOTSTRAP_MARKER) != "1" and not ns.no_restart:
+        # ---- Phase 1: preparation. Compose env, restart interpreter. ----
+        env = compose_environment(ns, os.environ)
+        cmd = [sys.executable, "-m", "repro.scorep"] + argv
+        os.execve(sys.executable, cmd, env)  # no return
+
+    # ---- Phase 2: execution. ----
+    if os.environ.get(_BOOTSTRAP_MARKER) == "1":
+        config = MeasurementConfig.from_env()
+    else:  # --no-restart path: build config directly from the namespace
+        env = compose_environment(ns, {})
+        config = MeasurementConfig.from_env(env)
+    init(config)
+    try:
+        run_target(ns.target, args)
+        return 0
+    except SystemExit as exc:  # propagate the target's exit code
+        code = exc.code
+        return int(code) if isinstance(code, int) else (0 if code is None else 1)
+    finally:
+        finalize()

@@ -1,0 +1,92 @@
+"""Measurement filtering — Score-P filter files, Python edition.
+
+Score-P lets users restrict instrumentation with include/exclude rules so the
+event rate (and thus overhead) stays manageable.  Rules here match on the
+*module* name (fnmatch globs) and optionally on the function name.  Verdicts
+are evaluated once per distinct code object at region-registration time and
+cached on the region handle (see ``regions.py``), so filtering adds zero
+per-event cost.
+
+Spec grammar (used by ``--filter`` on the CLI and ``REPRO_MONITOR_FILTER``):
+
+    spec      := clause (';' clause)*
+    clause    := ('include' | 'exclude') ':' pattern (',' pattern)*
+    pattern   := fnmatch glob matched against "module" or "module.function"
+
+Semantics (same as Score-P filter files): exclude rules are applied first;
+include rules re-admit matching regions.  With no include rules everything
+not excluded is recorded.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from fnmatch import fnmatchcase
+from typing import List, Sequence
+
+# Internals that must never instrument themselves.  The CPython hook is not
+# re-entered while the callback runs, but regions of the measurement core
+# would still pollute profiles via user-API calls, so they are always dropped.
+_SELF_MODULES = ("repro.core",)
+
+
+@dataclass
+class Filter:
+    include: List[str] = field(default_factory=list)
+    exclude: List[str] = field(default_factory=list)
+
+    @classmethod
+    def from_spec(cls, spec: str | None) -> "Filter":
+        flt = cls()
+        if not spec:
+            return flt
+        for clause in spec.split(";"):
+            clause = clause.strip()
+            if not clause:
+                continue
+            if ":" not in clause:
+                raise ValueError(f"bad filter clause (missing ':'): {clause!r}")
+            verb, _, pats = clause.partition(":")
+            verb = verb.strip().lower()
+            patterns = [p.strip() for p in pats.split(",") if p.strip()]
+            if verb == "include":
+                flt.include.extend(patterns)
+            elif verb == "exclude":
+                flt.exclude.extend(patterns)
+            else:
+                raise ValueError(f"bad filter verb {verb!r} (want include/exclude)")
+        return flt
+
+    def to_spec(self) -> str:
+        parts = []
+        if self.include:
+            parts.append("include:" + ",".join(self.include))
+        if self.exclude:
+            parts.append("exclude:" + ",".join(self.exclude))
+        return ";".join(parts)
+
+    # -- verdicts (cold path: once per distinct region) --------------------
+
+    def decide(self, module: str, name: str, file: str) -> bool:
+        """Return True if a region in ``module`` named ``name`` is recorded."""
+        for self_mod in _SELF_MODULES:
+            if module.startswith(self_mod):
+                return False
+        # Frameless registration (sys.monitoring) can't see the module name;
+        # suppress the measurement core by path as well.
+        if "repro/core/" in file or "repro\\core\\" in file:
+            return False
+        qualified = f"{module}.{name}"
+        excluded = any(
+            fnmatchcase(module, pat) or fnmatchcase(qualified, pat) for pat in self.exclude
+        )
+        if excluded:
+            return any(
+                fnmatchcase(module, pat) or fnmatchcase(qualified, pat) for pat in self.include
+            )
+        if self.include:
+            # Include rules alone act as an allow-list.
+            return any(
+                fnmatchcase(module, pat) or fnmatchcase(qualified, pat) for pat in self.include
+            )
+        return True

@@ -1,0 +1,42 @@
+"""Instrumenter registry."""
+
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from .base import Instrumenter
+from .monitoring import MonitoringInstrumenter
+from .none import NoneInstrumenter
+from .profile import ProfileInstrumenter
+from .sampling import SamplingInstrumenter
+from .trace import TraceInstrumenter
+
+INSTRUMENTERS: Dict[str, Type[Instrumenter]] = {
+    NoneInstrumenter.name: NoneInstrumenter,
+    ProfileInstrumenter.name: ProfileInstrumenter,
+    TraceInstrumenter.name: TraceInstrumenter,
+    SamplingInstrumenter.name: SamplingInstrumenter,
+    MonitoringInstrumenter.name: MonitoringInstrumenter,
+}
+
+
+def make_instrumenter(name: str, **kwargs) -> Instrumenter:
+    try:
+        cls = INSTRUMENTERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown instrumenter {name!r}; available: {sorted(INSTRUMENTERS)}"
+        ) from None
+    return cls(**kwargs)
+
+
+__all__ = [
+    "Instrumenter",
+    "INSTRUMENTERS",
+    "make_instrumenter",
+    "NoneInstrumenter",
+    "ProfileInstrumenter",
+    "TraceInstrumenter",
+    "SamplingInstrumenter",
+    "MonitoringInstrumenter",
+]

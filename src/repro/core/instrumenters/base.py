@@ -1,0 +1,34 @@
+"""Instrumenter interface.
+
+An instrumenter registers with a CPython event source and converts its
+callbacks into measurement events appended to the calling thread's buffer.
+The paper evaluates two (``sys.setprofile`` and ``sys.settrace``); this
+implementation adds ``sampling`` (the paper's future-work item) and
+``monitoring`` (``sys.monitoring``, PEP 669 — the modern low-overhead hook
+that postdates the paper), plus the ``none`` baseline.
+"""
+
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from typing import TYPE_CHECKING, Tuple
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..measurement import Measurement
+
+
+class Instrumenter(ABC):
+    """Converts CPython runtime events into buffered measurement events."""
+
+    #: registry key, e.g. "profile"
+    name: str = "?"
+    #: event kinds this instrumenter can observe (paper Table 1)
+    events_supported: Tuple[str, ...] = ()
+
+    @abstractmethod
+    def install(self, measurement: "Measurement") -> None:
+        """Register with the interpreter; events flow after this returns."""
+
+    @abstractmethod
+    def uninstall(self) -> None:
+        """Deregister; no events flow after this returns."""

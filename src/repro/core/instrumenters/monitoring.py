@@ -1,0 +1,121 @@
+"""``sys.monitoring`` instrumenter (PEP 669) — beyond-paper optimization.
+
+The paper (2020) predates CPython 3.12's ``sys.monitoring``, which was built
+precisely to lower the cost that the paper measures for ``sys.setprofile``:
+callbacks are registered per event kind, receive the code object directly
+(no frame materialization on the fast path), and can be disabled per
+location.  This instrumenter is the modern re-implementation of the paper's
+``profile`` instrumenter; ``benchmarks/overhead_case2.py`` quantifies the β
+improvement (EXPERIMENTS.md §Perf).
+
+Events observed: PY_START/PY_RETURN (+ PY_UNWIND for exceptional exits and
+PY_YIELD/PY_RESUME so generator suspension balances like ``sys.setprofile``'s
+call/return semantics).  C-function events are intentionally not subscribed —
+subscribing ``CALL`` would reintroduce per-call argument materialization and
+most of the cost this instrumenter exists to avoid.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from ..buffer import EV_ENTER, EV_EXIT
+from .base import Instrumenter
+
+_TOOL_NAME = "repro-monitor"
+
+
+class MonitoringInstrumenter(Instrumenter):
+    name = "monitoring"
+    events_supported = ("call", "return")
+
+    def __init__(self) -> None:
+        self._measurement = None
+        self._installed = False
+        self._tool_id = None
+
+    def _make_callbacks(self, measurement):
+        regions = measurement.regions
+        by_code = regions.by_code
+        register_code = regions.register_code
+        clock = time.perf_counter_ns
+        get_ident = threading.get_ident
+        # thread ident -> bound append of that thread's buffer
+        appends = {}
+        buffers = {}
+
+        def _bind(ident):
+            buf = measurement.thread_buffer()
+            buffers[ident] = buf
+            appends[ident] = buf.events.append
+            return appends[ident]
+
+        def _maybe_flush(ident):
+            buf = buffers[ident]
+            if len(buf.events) >= buf.flush_threshold:
+                buf.flush()
+                appends[ident] = buf.events.append
+
+        def on_start(code, instruction_offset):
+            t = clock()
+            rid = by_code.get(code)
+            if rid is None:
+                rid = register_code(code, None)
+            if rid >= 0:
+                ident = get_ident()
+                append = appends.get(ident)
+                if append is None:
+                    append = _bind(ident)
+                append((EV_ENTER, rid, t, 0))
+                _maybe_flush(ident)
+
+        def on_return(code, instruction_offset, retval):
+            t = clock()
+            rid = by_code.get(code)
+            if rid is None:
+                rid = register_code(code, None)
+            if rid >= 0:
+                ident = get_ident()
+                append = appends.get(ident)
+                if append is None:
+                    append = _bind(ident)
+                append((EV_EXIT, rid, t, 0))
+                _maybe_flush(ident)
+
+        def on_unwind(code, instruction_offset, exception):
+            on_return(code, instruction_offset, None)
+
+        return on_start, on_return, on_unwind
+
+    def install(self, measurement) -> None:
+        mon = sys.monitoring
+        tool_id = mon.PROFILER_ID
+        if mon.get_tool(tool_id) is not None:  # pragma: no cover - defensive
+            mon.free_tool_id(tool_id)
+        mon.use_tool_id(tool_id, _TOOL_NAME)
+        self._tool_id = tool_id
+        self._measurement = measurement
+        on_start, on_return, on_unwind = self._make_callbacks(measurement)
+        ev = mon.events
+        mon.register_callback(tool_id, ev.PY_START, on_start)
+        mon.register_callback(tool_id, ev.PY_RESUME, on_start)
+        mon.register_callback(tool_id, ev.PY_RETURN, on_return)
+        mon.register_callback(tool_id, ev.PY_YIELD, on_return)
+        mon.register_callback(tool_id, ev.PY_UNWIND, on_unwind)
+        mon.set_events(
+            tool_id, ev.PY_START | ev.PY_RESUME | ev.PY_RETURN | ev.PY_YIELD | ev.PY_UNWIND
+        )
+        self._installed = True
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        mon = sys.monitoring
+        ev = mon.events
+        mon.set_events(self._tool_id, 0)
+        for kind in (ev.PY_START, ev.PY_RESUME, ev.PY_RETURN, ev.PY_YIELD, ev.PY_UNWIND):
+            mon.register_callback(self._tool_id, kind, None)
+        mon.free_tool_id(self._tool_id)
+        self._installed = False

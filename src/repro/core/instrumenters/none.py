@@ -1,0 +1,23 @@
+"""Null instrumenter — the paper's "None" baseline.
+
+Measurement is initialized (substrates open, user regions and metrics still
+work) but no CPython hook is installed, so automatic function events cost
+nothing.  This is both the baseline of the overhead study and the right
+production setting for workloads that only want user regions + JAX step
+metrics.
+"""
+
+from __future__ import annotations
+
+from .base import Instrumenter
+
+
+class NoneInstrumenter(Instrumenter):
+    name = "none"
+    events_supported = ()
+
+    def install(self, measurement) -> None:  # noqa: ARG002 - interface
+        pass
+
+    def uninstall(self) -> None:
+        pass

@@ -1,0 +1,112 @@
+"""``sys.setprofile`` instrumenter — the paper's default.
+
+Observes call / return / c_call / c_return / c_exception (paper Table 1).
+The callback is generated per thread with every hot-path name bound as a
+closure local (buffer append, region dicts, clock), which is the CPython
+equivalent of Score-P's per-location fast path.  CPython guarantees the
+profile hook is not re-entered while the callback runs, so buffer flushes
+(which execute numpy/substrate code) are safe inside the callback.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from ..buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
+from .base import Instrumenter
+
+
+class ProfileInstrumenter(Instrumenter):
+    name = "profile"
+    events_supported = ("call", "return", "c_call", "c_return", "c_exception")
+
+    def __init__(self) -> None:
+        self._measurement = None
+        self._installed = False
+
+    # -- per-thread callback factory ---------------------------------------
+
+    def _make_callback(self, measurement):
+        buf = measurement.thread_buffer()
+        append = buf.events.append
+        flush = buf.flush
+        threshold = buf.flush_threshold
+        events = buf.events
+        regions = measurement.regions
+        by_code = regions.by_code
+        by_cfunc = regions.by_cfunc
+        register_code = regions.register_code
+        register_cfunction = regions.register_cfunction
+        clock = time.perf_counter_ns
+
+        def callback(frame, event, arg):
+            t = clock()
+            if event == "call":
+                code = frame.f_code
+                rid = by_code.get(code)
+                if rid is None:
+                    rid = register_code(code, frame)
+                if rid >= 0:
+                    append((EV_ENTER, rid, t, 0))
+            elif event == "return":
+                code = frame.f_code
+                rid = by_code.get(code)
+                if rid is None:
+                    rid = register_code(code, frame)
+                if rid >= 0:
+                    append((EV_EXIT, rid, t, 0))
+            elif event == "c_call":
+                # C events are attributed only when the *calling* region is
+                # recorded: this both honors module filters transitively and
+                # keeps the measurement core from instrumenting its own
+                # C calls (Score-P's runtime likewise never records itself).
+                code = frame.f_code
+                crid = by_code.get(code)
+                if crid is None:
+                    crid = register_code(code, frame)
+                if crid >= 0:
+                    rid = by_cfunc.get(arg)
+                    if rid is None:
+                        rid = register_cfunction(arg)
+                    if rid >= 0:
+                        append((EV_C_ENTER, rid, t, 0))
+            elif event in ("c_return", "c_exception"):
+                code = frame.f_code
+                crid = by_code.get(code)
+                if crid is None:
+                    crid = register_code(code, frame)
+                if crid >= 0:
+                    rid = by_cfunc.get(arg)
+                    if rid is None:
+                        rid = register_cfunction(arg)
+                    if rid >= 0:
+                        append((EV_C_EXIT, rid, t, 0))
+            if len(events) >= threshold:
+                flush()
+
+        return callback
+
+    def _thread_entry(self, frame, event, arg):
+        # First event observed in a freshly started thread: build that
+        # thread's closure, install it, and forward the current event.
+        callback = self._make_callback(self._measurement)
+        sys.setprofile(callback)
+        return callback(frame, event, arg)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def install(self, measurement) -> None:
+        self._measurement = measurement
+        # New threads bootstrap their own closure on their first event.
+        threading.setprofile(self._thread_entry)
+        sys.setprofile(self._make_callback(measurement))
+        self._installed = True
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        sys.setprofile(None)
+        threading.setprofile(None)
+        self._installed = False

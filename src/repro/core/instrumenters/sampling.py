@@ -1,0 +1,103 @@
+"""Counting-sampler instrumenter — the paper's future-work item, implemented.
+
+"Further work might include ways to control the runtime overhead […] One
+approach could be to sample Python applications." (paper §5)
+
+Design: a call-count sampler on top of ``sys.setprofile``.  Every ``period``-th
+*call* event is sampled; a per-thread shadow stack of booleans tracks which
+active frames were sampled so their matching *return* is recorded too (a
+sampled enter without its exit would corrupt profiles).  Unsampled events pay
+only an integer increment + a list push/pop — no clock read, no region
+lookup, no buffer append — so β drops roughly by the sampling ratio for
+call-dominated workloads (measured in EXPERIMENTS.md §Perf).
+
+C-function events are not sampled (they carry no frame identity to balance
+against); this matches the counting-sampler design of dropping the cheapest-
+to-lose information first.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from ..buffer import EV_ENTER, EV_EXIT
+from .base import Instrumenter
+
+
+class SamplingInstrumenter(Instrumenter):
+    name = "sampling"
+    events_supported = ("call", "return")
+
+    def __init__(self, period: int = 97) -> None:
+        if period < 1:
+            raise ValueError("sampling period must be >= 1")
+        self.period = period
+        self._measurement = None
+        self._installed = False
+
+    def _make_callback(self, measurement):
+        buf = measurement.thread_buffer()
+        append = buf.events.append
+        flush = buf.flush
+        threshold = buf.flush_threshold
+        events = buf.events
+        regions = measurement.regions
+        by_code = regions.by_code
+        register_code = regions.register_code
+        clock = time.perf_counter_ns
+        period = self.period
+
+        # Per-thread state lives in the closure: counter + sampled-frame stack.
+        state = {"count": 0}
+        stack = []
+        push = stack.append
+        pop = stack.pop
+
+        def callback(frame, event, arg):
+            if event == "call":
+                n = state["count"] + 1
+                state["count"] = n
+                if n % period:
+                    push(False)
+                    return
+                code = frame.f_code
+                rid = by_code.get(code)
+                if rid is None:
+                    rid = register_code(code, frame)
+                if rid >= 0:
+                    append((EV_ENTER, rid, clock(), 0))
+                    push(True)
+                else:
+                    push(False)
+            elif event == "return":
+                if stack and pop():
+                    code = frame.f_code
+                    rid = by_code.get(code)
+                    if rid is None:
+                        rid = register_code(code, frame)
+                    if rid >= 0:
+                        append((EV_EXIT, rid, clock(), 0))
+                if len(events) >= threshold:
+                    flush()
+
+        return callback
+
+    def _thread_entry(self, frame, event, arg):
+        callback = self._make_callback(self._measurement)
+        sys.setprofile(callback)
+        return callback(frame, event, arg)
+
+    def install(self, measurement) -> None:
+        self._measurement = measurement
+        threading.setprofile(self._thread_entry)
+        sys.setprofile(self._make_callback(measurement))
+        self._installed = True
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        sys.setprofile(None)
+        threading.setprofile(None)
+        self._installed = False

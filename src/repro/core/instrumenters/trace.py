@@ -1,0 +1,79 @@
+"""``sys.settrace`` instrumenter — per-line measurement.
+
+Observes call / return / line / exception (paper Table 1; no c_* events).
+Line events carry the line number in the event's ``aux`` field.  The paper
+measures this instrumenter to be strictly more expensive than
+``sys.setprofile`` (+0.8 µs per executed line in their setup) and therefore
+not the default; we reproduce that comparison in
+``benchmarks/overhead_case1.py`` / ``overhead_case2.py``.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from ..buffer import EV_ENTER, EV_EXCEPTION, EV_EXIT, EV_LINE
+from .base import Instrumenter
+
+
+class TraceInstrumenter(Instrumenter):
+    name = "trace"
+    events_supported = ("call", "return", "line", "exception")
+
+    def __init__(self) -> None:
+        self._measurement = None
+        self._installed = False
+
+    def _make_callback(self, measurement):
+        buf = measurement.thread_buffer()
+        append = buf.events.append
+        flush = buf.flush
+        threshold = buf.flush_threshold
+        events = buf.events
+        regions = measurement.regions
+        by_code = regions.by_code
+        register_code = regions.register_code
+        clock = time.perf_counter_ns
+
+        def callback(frame, event, arg):
+            t = clock()
+            code = frame.f_code
+            rid = by_code.get(code)
+            if rid is None:
+                rid = register_code(code, frame)
+            if rid >= 0:
+                if event == "line":
+                    append((EV_LINE, rid, t, frame.f_lineno))
+                elif event == "call":
+                    append((EV_ENTER, rid, t, 0))
+                elif event == "return":
+                    append((EV_EXIT, rid, t, 0))
+                elif event == "exception":
+                    append((EV_EXCEPTION, rid, t, frame.f_lineno))
+            if len(events) >= threshold:
+                flush()
+            # Returning the callback enables local (line) tracing for the
+            # frame — required by the sys.settrace contract.
+            return callback
+
+        return callback
+
+    def _thread_entry(self, frame, event, arg):
+        callback = self._make_callback(self._measurement)
+        sys.settrace(callback)
+        return callback(frame, event, arg)
+
+    def install(self, measurement) -> None:
+        self._measurement = measurement
+        threading.settrace(self._thread_entry)
+        sys.settrace(self._make_callback(measurement))
+        self._installed = True
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        sys.settrace(None)
+        threading.settrace(None)
+        self._installed = False

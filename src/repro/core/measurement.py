@@ -1,0 +1,332 @@
+"""Measurement manager — lifecycle, user instrumentation API, buffers.
+
+This is the Python-side equivalent of the Score-P measurement system: it owns
+the region registry, the per-thread event buffers, the instrumenter, and the
+substrates, and provides the user-instrumentation API (paper: Score-P user
+regions):
+
+    import repro.core as rmon
+    rmon.init(instrumenter="profile", substrates=("profiling", "tracing"))
+    with rmon.region("train_step"):
+        ...
+    rmon.metric("tokens", 4096)
+    rmon.finalize()
+
+All public entry points are safe no-ops when measurement is inactive, so
+library code can be annotated unconditionally.
+"""
+
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, replace
+from functools import wraps
+from typing import Any, Dict, List, Optional, Tuple
+
+from .buffer import BUFFER_STRATEGIES, EV_ENTER, EV_EXIT
+from .filtering import Filter
+from .instrumenters import make_instrumenter
+from .regions import RegionRegistry
+from .substrates import make_substrate
+
+ENV_PREFIX = "REPRO_MONITOR_"
+
+
+@dataclass
+class MeasurementConfig:
+    instrumenter: str = "profile"
+    substrates: Tuple[str, ...] = ("profiling", "tracing", "metrics")
+    out_dir: str = "repro-traces"
+    run_dir: Optional[str] = None  # explicit run dir (tests); else derived
+    filter_spec: str = ""
+    flush_threshold: int = 1 << 16
+    sampling_period: int = 97
+    buffer_strategy: str = "list"
+    rank: int = 0
+    experiment: str = "run"
+    chrome_export: bool = True
+    keep_series: bool = True
+
+    # -- env round-trip (used by the two-phase bootstrap) -------------------
+
+    @classmethod
+    def from_env(cls, environ=os.environ) -> "MeasurementConfig":
+        def get(name, default):
+            return environ.get(ENV_PREFIX + name, default)
+
+        return cls(
+            instrumenter=get("INSTRUMENTER", cls.instrumenter),
+            substrates=tuple(
+                s.strip()
+                for s in get("SUBSTRATES", "profiling,tracing,metrics").split(",")
+                if s.strip()
+            ),
+            out_dir=get("OUT", cls.out_dir),
+            run_dir=environ.get(ENV_PREFIX + "RUN_DIR") or None,
+            filter_spec=get("FILTER", cls.filter_spec),
+            flush_threshold=int(get("FLUSH", cls.flush_threshold)),
+            sampling_period=int(get("SAMPLING_PERIOD", cls.sampling_period)),
+            buffer_strategy=get("BUFFER", cls.buffer_strategy),
+            rank=int(get("RANK", cls.rank)),
+            experiment=get("EXPERIMENT", cls.experiment),
+            chrome_export=get("CHROME", "1") not in ("0", "false", ""),
+            keep_series=get("SERIES", "1") not in ("0", "false", ""),
+        )
+
+    def to_env(self) -> Dict[str, str]:
+        env = {
+            ENV_PREFIX + "INSTRUMENTER": self.instrumenter,
+            ENV_PREFIX + "SUBSTRATES": ",".join(self.substrates),
+            ENV_PREFIX + "OUT": self.out_dir,
+            ENV_PREFIX + "FILTER": self.filter_spec,
+            ENV_PREFIX + "FLUSH": str(self.flush_threshold),
+            ENV_PREFIX + "SAMPLING_PERIOD": str(self.sampling_period),
+            ENV_PREFIX + "BUFFER": self.buffer_strategy,
+            ENV_PREFIX + "RANK": str(self.rank),
+            ENV_PREFIX + "EXPERIMENT": self.experiment,
+            ENV_PREFIX + "CHROME": "1" if self.chrome_export else "0",
+            ENV_PREFIX + "SERIES": "1" if self.keep_series else "0",
+        }
+        if self.run_dir:
+            env[ENV_PREFIX + "RUN_DIR"] = self.run_dir
+        return env
+
+
+class Measurement:
+    """One measurement run: regions + buffers + instrumenter + substrates."""
+
+    def __init__(self, config: MeasurementConfig):
+        self.config = config
+        self.filter = Filter.from_spec(config.filter_spec)
+        self.regions = RegionRegistry(decide=self.filter.decide)
+        self._local = threading.local()
+        self._buffers: List[Any] = []
+        self._buffers_lock = threading.RLock()
+        self._flush_lock = threading.RLock()
+        self._substrates = []
+        for name in config.substrates:
+            if name == "tracing":
+                self._substrates.append(make_substrate(name, chrome_export=config.chrome_export))
+            elif name == "metrics":
+                self._substrates.append(make_substrate(name, keep_series=config.keep_series))
+            else:
+                self._substrates.append(make_substrate(name))
+        if config.instrumenter == "sampling":
+            self.instrumenter = make_instrumenter("sampling", period=config.sampling_period)
+        else:
+            self.instrumenter = make_instrumenter(config.instrumenter)
+        self._buffer_cls = BUFFER_STRATEGIES[config.buffer_strategy]
+        self.run_dir = config.run_dir or os.path.join(
+            config.out_dir,
+            f"{config.experiment}-{time.strftime('%Y%m%d-%H%M%S')}-p{os.getpid()}-r{config.rank}",
+        )
+        self.started = False
+        self.finalized = False
+        self.epoch_time_ns = 0
+        self.epoch_perf_ns = 0
+
+    # -- buffers -------------------------------------------------------------
+
+    def thread_buffer(self):
+        buf = getattr(self._local, "buf", None)
+        if buf is None:
+            tid = threading.get_ident()
+            buf = self._buffer_cls(
+                thread_id=tid,
+                flush_threshold=self.config.flush_threshold,
+                on_flush=self._on_flush,
+            )
+            self._local.buf = buf
+            with self._buffers_lock:
+                self._buffers.append(buf)
+        return buf
+
+    def _on_flush(self, thread_id: int, columns) -> None:
+        with self._flush_lock:
+            for sub in self._substrates:
+                sub.on_flush(thread_id, columns)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def start(self) -> None:
+        if self.started:
+            return
+        os.makedirs(self.run_dir, exist_ok=True)
+        self.epoch_time_ns = time.time_ns()
+        self.epoch_perf_ns = time.perf_counter_ns()
+        meta = {
+            "rank": self.config.rank,
+            "pid": os.getpid(),
+            "experiment": self.config.experiment,
+            "instrumenter": self.config.instrumenter,
+            "substrates": list(self.config.substrates),
+            "epoch_time_ns": self.epoch_time_ns,
+            "epoch_perf_ns": self.epoch_perf_ns,
+        }
+        for sub in self._substrates:
+            sub.open(self.run_dir, meta)
+        self.started = True
+        self.instrumenter.install(self)
+
+    def stop(self) -> None:
+        """Uninstall the instrumenter but keep the run open (re-startable)."""
+        if self.started:
+            self.instrumenter.uninstall()
+
+    def finalize(self) -> Optional[str]:
+        if not self.started or self.finalized:
+            return None
+        self.instrumenter.uninstall()
+        with self._buffers_lock:
+            buffers = list(self._buffers)
+        for buf in buffers:
+            buf.flush()
+        region_table = self.regions.snapshot()
+        for sub in self._substrates:
+            sub.close(region_table)
+        meta = {
+            "rank": self.config.rank,
+            "pid": os.getpid(),
+            "experiment": self.config.experiment,
+            "instrumenter": self.config.instrumenter,
+            "buffer_strategy": self.config.buffer_strategy,
+            "epoch_time_ns": self.epoch_time_ns,
+            "epoch_perf_ns": self.epoch_perf_ns,
+            "finalize_time_ns": time.time_ns(),
+            "n_regions": len(region_table),
+            "events_flushed": sum(getattr(b, "n_flushed", 0) for b in buffers),
+        }
+        with open(os.path.join(self.run_dir, "meta.json"), "w") as fh:
+            json.dump(meta, fh, indent=1)
+        self.finalized = True
+        return self.run_dir
+
+    # -- user instrumentation API ---------------------------------------------
+
+    def region(self, name: str, module: str = "user"):
+        rid = self.regions.register_user(name, module)
+        return _RegionContext(self, rid)
+
+    def metric(self, name: str, value: float) -> None:
+        t = time.perf_counter_ns()
+        for sub in self._substrates:
+            sub.on_metric(name, float(value), t)
+
+    def substrate(self, name: str):
+        for sub in self._substrates:
+            if sub.name == name:
+                return sub
+        return None
+
+
+class _RegionContext:
+    """Reusable enter/exit context for one user region (cheap hot path)."""
+
+    __slots__ = ("_m", "_rid")
+
+    def __init__(self, measurement: Measurement, rid: int):
+        self._m = measurement
+        self._rid = rid
+
+    def __enter__(self):
+        if self._rid >= 0:
+            buf = self._m.thread_buffer()
+            buf.events.append((EV_ENTER, self._rid, time.perf_counter_ns(), 0))
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if self._rid >= 0:
+            buf = self._m.thread_buffer()
+            buf.events.append((EV_EXIT, self._rid, time.perf_counter_ns(), 0))
+            if len(buf.events) >= buf.flush_threshold:
+                buf.flush()
+        return False
+
+
+class _NullContext:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CONTEXT = _NullContext()
+
+# ----------------------------------------------------------------------------
+# Module-level singleton API
+# ----------------------------------------------------------------------------
+
+_active: Optional[Measurement] = None
+_atexit_registered = False
+
+
+def init(config: Optional[MeasurementConfig] = None, **overrides) -> Measurement:
+    """Initialize and start measurement (idempotent-per-process)."""
+    global _active, _atexit_registered
+    if _active is not None and not _active.finalized:
+        raise RuntimeError("measurement already active; call finalize() first")
+    config = replace(config, **overrides) if config else MeasurementConfig(**overrides)
+    _active = Measurement(config)
+    _active.start()
+    if not _atexit_registered:
+        atexit.register(finalize)
+        _atexit_registered = True
+    return _active
+
+
+def init_from_env() -> Optional[Measurement]:
+    """Start measurement if the bootstrap environment is present."""
+    if os.environ.get(ENV_PREFIX + "ENABLE") != "1":
+        return None
+    return init(MeasurementConfig.from_env())
+
+
+def active() -> Optional[Measurement]:
+    return _active if (_active is not None and _active.started and not _active.finalized) else None
+
+
+def region(name: str, module: str = "user"):
+    m = active()
+    if m is None:
+        return _NULL_CONTEXT
+    return m.region(name, module)
+
+
+def metric(name: str, value: float) -> None:
+    m = active()
+    if m is not None:
+        m.metric(name, value)
+
+
+def instrument(fn=None, *, name: Optional[str] = None, module: str = "user"):
+    """Decorator form of :func:`region` (resolves the region per call so the
+    decorated function works whether or not measurement is active)."""
+
+    def deco(f):
+        region_name = name or getattr(f, "__qualname__", f.__name__)
+
+        @wraps(f)
+        def wrapper(*args, **kwargs):
+            with region(region_name, module):
+                return f(*args, **kwargs)
+
+        return wrapper
+
+    return deco(fn) if fn is not None else deco
+
+
+def finalize() -> Optional[str]:
+    global _active
+    m = _active
+    if m is None:
+        return None
+    path = m.finalize()
+    _active = None
+    return path

@@ -1,0 +1,103 @@
+"""Multi-process trace merge — the MPI-style analysis step.
+
+The paper's MPI mode produces one event stream per rank which Score-P unifies
+into a single OTF2 archive.  Here every process writes its own run directory
+(``<experiment>-...-r<rank>/``); :func:`merge_runs` aligns their clocks via
+the (time_ns, perf_counter_ns) epoch pair recorded at measurement start and
+produces a single merged Chrome trace + summary.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from .buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
+from .substrates.tracing import load_run
+
+
+def find_runs(root: str, experiment: Optional[str] = None) -> List[str]:
+    """Locate run directories (those containing defs.json) under ``root``."""
+    runs = []
+    for path in sorted(glob.glob(os.path.join(root, "*"))):
+        if not os.path.isdir(path):
+            continue
+        if experiment and not os.path.basename(path).startswith(experiment):
+            continue
+        if os.path.exists(os.path.join(path, "defs.json")):
+            runs.append(path)
+    return runs
+
+
+def merge_runs(run_dirs: List[str], out_path: str) -> Dict[str, Any]:
+    """Merge per-rank trace runs into one Chrome trace with aligned clocks.
+
+    Per-rank timestamps are perf_counter_ns readings; alignment maps them to
+    wall time: wall = epoch_time_ns + (t - epoch_perf_ns).
+    """
+    events = []
+    summary: Dict[str, Any] = {"ranks": [], "total_events": 0}
+    for run_dir in run_dirs:
+        defs, streams = load_run(run_dir)
+        meta = defs["meta"]
+        rank = meta.get("rank", 0)
+        epoch_time = meta.get("epoch_time_ns", 0)
+        epoch_perf = meta.get("epoch_perf_ns", 0)
+        regions = defs["regions"]
+        n_rank_events = 0
+        for tid, cols in streams.items():
+            kinds, rids, ts = cols["kind"], cols["region"], cols["t"]
+            for i in range(len(kinds)):
+                k = int(kinds[i])
+                if k in (EV_ENTER, EV_C_ENTER):
+                    ph = "B"
+                elif k in (EV_EXIT, EV_C_EXIT):
+                    ph = "E"
+                else:
+                    continue
+                wall_ns = epoch_time + (int(ts[i]) - epoch_perf)
+                r = regions[int(rids[i])]
+                events.append(
+                    {
+                        "name": r["name"],
+                        "cat": r["module"],
+                        "ph": ph,
+                        "ts": wall_ns / 1000.0,
+                        "pid": rank,
+                        "tid": tid,
+                    }
+                )
+                n_rank_events += 1
+        summary["ranks"].append(
+            {"rank": rank, "run_dir": run_dir, "events": n_rank_events}
+        )
+        summary["total_events"] += n_rank_events
+    events.sort(key=lambda e: e["ts"])
+    with open(out_path, "w") as fh:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, fh)
+    summary["out"] = out_path
+    return summary
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(prog="python -m repro.core.merge")
+    p.add_argument("root", help="directory containing per-rank run dirs")
+    p.add_argument("--experiment", default=None)
+    p.add_argument("--out", default=None)
+    ns = p.parse_args(argv)
+    runs = find_runs(ns.root, ns.experiment)
+    if not runs:
+        print(f"no runs found under {ns.root}")
+        return 1
+    out = ns.out or os.path.join(ns.root, "merged_trace.json")
+    summary = merge_runs(runs, out)
+    print(json.dumps(summary, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

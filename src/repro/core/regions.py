@@ -1,0 +1,147 @@
+"""Region registry — interned handles for instrumented code locations.
+
+Score-P keeps a region-definition table and hands out integer region handles;
+every runtime event carries only the handle.  This module is the Python
+analogue: regions are interned on the CPython code object (or C-function
+object), so the per-event cost is a single dict lookup.  Filter verdicts are
+cached on the handle (filtered regions get handle ``-1``) so filtering costs
+nothing per event after the first call.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+# Region kinds (mirrors Score-P's region roles).
+KIND_PYTHON = "python"
+KIND_C = "c"
+KIND_USER = "user"
+
+#: Handle returned for regions suppressed by the active filter.
+FILTERED = -1
+
+
+def _module_from_filename(filename: str) -> str:
+    """Best-effort module name when no frame is available (sys.monitoring)."""
+    if not filename or filename.startswith("<"):
+        return filename or "?"
+    stem = filename.rsplit("/", 1)[-1]
+    if stem.endswith(".py"):
+        stem = stem[:-3]
+    return stem
+
+
+@dataclass(frozen=True)
+class Region:
+    """One entry of the region-definition table."""
+
+    id: int
+    name: str
+    module: str
+    file: str
+    line: int
+    kind: str
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "id": self.id,
+            "name": self.name,
+            "module": self.module,
+            "file": self.file,
+            "line": self.line,
+            "kind": self.kind,
+        }
+
+
+class RegionRegistry:
+    """Thread-safe interning registry for regions.
+
+    The hot-path dicts (``by_code`` / ``by_cfunc``) are exposed directly so
+    instrumenters can bind them as closure locals; only registration (the
+    cold path for each distinct code object) takes the lock.
+    """
+
+    def __init__(self, decide: Optional[Callable[[str, str, str], bool]] = None):
+        # decide(module, name, file) -> True if the region should be recorded.
+        self._decide = decide or (lambda module, name, file: True)
+        # RLock, not Lock: registration runs in user context (e.g. user-region
+        # interning), and C calls made while holding the lock fire c_call
+        # events whose handling re-enters registration on the same thread.
+        self._lock = threading.RLock()
+        # Dict keyed by id (NOT a list): registration can re-enter on the
+        # same thread via instrumentation events fired by its own C calls;
+        # a list's len()/append() window would corrupt the id<->slot
+        # invariant.  itertools.count allocation + dict storage is immune.
+        self._regions: Dict[int, Region] = {}
+        self._next_id = itertools.count()
+        # Hot-path lookup tables.  Keys: code objects / builtin callables.
+        self.by_code: Dict[Any, int] = {}
+        self.by_cfunc: Dict[Any, int] = {}
+        self._user: Dict[str, int] = {}
+
+    # -- cold paths -------------------------------------------------------
+
+    def _intern(self, name: str, module: str, file: str, line: int, kind: str) -> int:
+        if not self._decide(module, name, file):
+            return FILTERED
+        rid = next(self._next_id)
+        self._regions[rid] = Region(rid, name, module, file, line, kind)
+        return rid
+
+    def register_code(self, code, frame) -> int:
+        """Intern a Python code object (miss path of an instrumenter).
+
+        ``frame`` may be None (``sys.monitoring`` callbacks receive only the
+        code object); the module is then derived from the filename.
+        """
+        with self._lock:
+            rid = self.by_code.get(code)
+            if rid is not None:
+                return rid
+            if frame is not None:
+                module = frame.f_globals.get("__name__", "?")
+            else:
+                module = _module_from_filename(code.co_filename)
+            name = getattr(code, "co_qualname", None) or code.co_name
+            rid = self._intern(name, module, code.co_filename, code.co_firstlineno, KIND_PYTHON)
+            self.by_code[code] = rid
+            return rid
+
+    def register_cfunction(self, func) -> int:
+        """Intern a builtin/C function object."""
+        with self._lock:
+            rid = self.by_cfunc.get(func)
+            if rid is not None:
+                return rid
+            module = getattr(func, "__module__", None) or "builtins"
+            name = getattr(func, "__qualname__", None) or getattr(func, "__name__", repr(func))
+            rid = self._intern(name, module, "<C>", 0, KIND_C)
+            self.by_cfunc[func] = rid
+            return rid
+
+    def register_user(self, name: str, module: str = "user") -> int:
+        """Intern a user region (``with repro.core.region("..."):``)."""
+        with self._lock:
+            key = f"{module}:{name}"
+            rid = self._user.get(key)
+            if rid is not None:
+                return rid
+            rid = self._intern(name, module, "<user>", 0, KIND_USER)
+            self._user[key] = rid
+            return rid
+
+    # -- introspection ----------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._regions)
+
+    def get(self, rid: int) -> Region:
+        return self._regions[rid]
+
+    def snapshot(self) -> List[Dict[str, Any]]:
+        """Dense region table, index == id (every allocated id is stored)."""
+        with self._lock:
+            return [self._regions[i].as_dict() for i in range(len(self._regions))]

@@ -1,0 +1,34 @@
+"""Substrate registry."""
+
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from .base import Substrate
+from .metrics import MetricsSubstrate
+from .profiling import ProfilingSubstrate
+from .tracing import TracingSubstrate
+
+SUBSTRATES: Dict[str, Type[Substrate]] = {
+    ProfilingSubstrate.name: ProfilingSubstrate,
+    TracingSubstrate.name: TracingSubstrate,
+    MetricsSubstrate.name: MetricsSubstrate,
+}
+
+
+def make_substrate(name: str, **kwargs) -> Substrate:
+    try:
+        cls = SUBSTRATES[name]
+    except KeyError:
+        raise ValueError(f"unknown substrate {name!r}; available: {sorted(SUBSTRATES)}") from None
+    return cls(**kwargs)
+
+
+__all__ = [
+    "Substrate",
+    "SUBSTRATES",
+    "make_substrate",
+    "ProfilingSubstrate",
+    "TracingSubstrate",
+    "MetricsSubstrate",
+]

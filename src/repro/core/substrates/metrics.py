@@ -1,0 +1,74 @@
+"""Metrics substrate — counters and per-step series (Score-P metric plugins).
+
+Collects user metrics (``repro.core.metric(name, value)``) as time series and
+aggregates; the JAX integration layer feeds per-step wall times, HLO FLOPs /
+bytes from ``cost_analysis`` and collective-byte counters through this
+substrate.  Events themselves are summarized only by count (cheap).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List
+
+import numpy as np
+
+from .base import Substrate
+
+
+class MetricsSubstrate(Substrate):
+    name = "metrics"
+
+    def __init__(self, keep_series: bool = True):
+        self.keep_series = keep_series
+        self._series: Dict[str, List] = {}
+        self._agg: Dict[str, Dict[str, float]] = {}
+        self._event_counts: Dict[int, int] = {}
+        self._run_dir = ""
+        self._meta: Dict[str, Any] = {}
+
+    def open(self, run_dir: str, meta: Dict[str, Any]) -> None:
+        self._run_dir = run_dir
+        self._meta = meta
+
+    def on_flush(self, thread_id: int, columns) -> None:
+        n = int(len(columns["kind"]))
+        self._event_counts[thread_id] = self._event_counts.get(thread_id, 0) + n
+
+    def on_metric(self, name: str, value: float, t_ns: int) -> None:
+        agg = self._agg.get(name)
+        if agg is None:
+            agg = self._agg[name] = {"count": 0, "sum": 0.0, "min": float("inf"), "max": float("-inf")}
+        agg["count"] += 1
+        agg["sum"] += value
+        agg["min"] = min(agg["min"], value)
+        agg["max"] = max(agg["max"], value)
+        if self.keep_series:
+            self._series.setdefault(name, []).append((t_ns, value))
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for name, agg in self._agg.items():
+            mean = agg["sum"] / max(agg["count"], 1)
+            entry = dict(agg, mean=mean)
+            series = self._series.get(name)
+            if series:
+                vals = np.asarray([v for _, v in series], dtype=np.float64)
+                entry["median"] = float(np.median(vals))
+                entry["p99"] = float(np.percentile(vals, 99))
+            out[name] = entry
+        return out
+
+    def close(self, region_table) -> None:
+        doc = {
+            "meta": self._meta,
+            "events_per_thread": {str(k): v for k, v in self._event_counts.items()},
+            "metrics": self.summary(),
+        }
+        if self.keep_series:
+            doc["series"] = {
+                name: [[int(t), float(v)] for t, v in vals] for name, vals in self._series.items()
+            }
+        with open(os.path.join(self._run_dir, "metrics.json"), "w") as fh:
+            json.dump(doc, fh, indent=1)

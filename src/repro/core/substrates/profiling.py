@@ -1,0 +1,250 @@
+"""Profiling substrate — call-path profile construction (Cube4 analogue).
+
+Builds a call tree with per-node metrics (visits, inclusive/exclusive ns)
+by replaying buffered event batches with a per-thread shadow stack.  Unlike
+Score-P (which updates the profile online per event), construction happens
+at *flush* granularity; the per-event cost stays a single buffer append.
+
+Artifacts:
+    profile.json   call tree + flat per-region table (the Cube data model:
+                   call-path × metric)
+    profile.txt    human-readable tree + hotspot table
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List
+
+import numpy as np
+
+from ..buffer import (
+    EV_C_ENTER,
+    EV_C_EXIT,
+    EV_ENTER,
+    EV_EXCEPTION,
+    EV_EXIT,
+    EV_LINE,
+)
+from .base import Substrate
+
+
+class _Node:
+    __slots__ = ("region", "parent", "children", "visits", "incl_ns", "excl_ns")
+
+    def __init__(self, region: int, parent: "_Node | None"):
+        self.region = region
+        self.parent = parent
+        self.children: Dict[int, _Node] = {}
+        self.visits = 0
+        self.incl_ns = 0
+        self.excl_ns = 0
+
+    def child(self, region: int) -> "_Node":
+        node = self.children.get(region)
+        if node is None:
+            node = _Node(region, self)
+            self.children[region] = node
+        return node
+
+
+class _ThreadState:
+    __slots__ = (
+        "root",
+        "node",
+        "stack",
+        "last_t",
+        "orphan_exits",
+        "mismatched_exits",
+        "lines",
+        "exceptions",
+    )
+
+    def __init__(self):
+        self.root = _Node(-1, None)
+        self.node = self.root
+        # stack holds (enter_t, child_ns_accumulator) parallel to node depth
+        self.stack: List[List[int]] = []
+        self.last_t = 0
+        self.orphan_exits = 0
+        self.mismatched_exits = 0
+        self.lines: Dict[int, int] = {}
+        self.exceptions = 0
+
+
+class ProfilingSubstrate(Substrate):
+    name = "profiling"
+
+    def __init__(self):
+        self._threads: Dict[int, _ThreadState] = {}
+        self._run_dir = ""
+        self._meta: Dict[str, Any] = {}
+        self._metrics: Dict[str, float] = {}
+
+    def open(self, run_dir: str, meta: Dict[str, Any]) -> None:
+        self._run_dir = run_dir
+        self._meta = meta
+
+    def on_metric(self, name: str, value: float, t_ns: int) -> None:
+        self._metrics[name] = self._metrics.get(name, 0.0) + value
+
+    def on_flush(self, thread_id: int, columns: Dict[str, np.ndarray]) -> None:
+        state = self._threads.get(thread_id)
+        if state is None:
+            state = self._threads[thread_id] = _ThreadState()
+        kinds = columns["kind"].tolist()
+        regions = columns["region"].tolist()
+        ts = columns["t"].tolist()
+        auxs = columns["aux"].tolist()
+        node = state.node
+        stack = state.stack
+        for i, kind in enumerate(kinds):
+            t = ts[i]
+            if kind == EV_ENTER or kind == EV_C_ENTER:
+                node = node.child(regions[i])
+                stack.append([t, 0])
+            elif kind == EV_EXIT or kind == EV_C_EXIT:
+                if not stack:
+                    state.orphan_exits += 1
+                    continue
+                if node.region != regions[i]:
+                    # Defensive: an exit that doesn't match the open region.
+                    # If the parent matches, the inner frame lost its exit —
+                    # close it implicitly; otherwise count and pop anyway.
+                    if (
+                        node.parent is not None
+                        and node.parent.region == regions[i]
+                        and len(stack) >= 2
+                    ):
+                        enter_t, child_ns = stack.pop()
+                        dur = t - enter_t
+                        node.visits += 1
+                        node.incl_ns += dur
+                        node.excl_ns += dur - child_ns
+                        node = node.parent
+                        stack[-1][1] += dur
+                    else:
+                        state.mismatched_exits += 1
+                enter_t, child_ns = stack.pop()
+                dur = t - enter_t
+                node.visits += 1
+                node.incl_ns += dur
+                node.excl_ns += dur - child_ns
+                node = node.parent
+                if stack:
+                    stack[-1][1] += dur
+            elif kind == EV_LINE:
+                rid = regions[i]
+                state.lines[rid] = state.lines.get(rid, 0) + 1
+            elif kind == EV_EXCEPTION:
+                state.exceptions += 1
+            state.last_t = t
+        state.node = node
+
+    # -- finalize -----------------------------------------------------------
+
+    def _unwind(self, state: _ThreadState) -> None:
+        """Close regions still on the stack at finalize (paper: the program
+        is always inside ``__main__`` etc. when measurement stops)."""
+        node = state.node
+        t = state.last_t
+        while state.stack:
+            enter_t, child_ns = state.stack.pop()
+            dur = t - enter_t
+            node.visits += 1
+            node.incl_ns += dur
+            node.excl_ns += dur - child_ns
+            node = node.parent
+            if state.stack:
+                state.stack[-1][1] += dur
+        state.node = node
+
+    def close(self, region_table: List[Dict[str, Any]]) -> None:
+        def name_of(rid: int) -> str:
+            if rid < 0:
+                return "<root>"
+            r = region_table[rid]
+            return f"{r['module']}:{r['name']}"
+
+        flat: Dict[int, Dict[str, int]] = {}
+
+        def tree_dict(node: _Node) -> Dict[str, Any]:
+            if node.region >= 0:
+                agg = flat.setdefault(node.region, {"visits": 0, "incl_ns": 0, "excl_ns": 0})
+                agg["visits"] += node.visits
+                agg["incl_ns"] += node.incl_ns
+                agg["excl_ns"] += node.excl_ns
+            return {
+                "region": node.region,
+                "name": name_of(node.region),
+                "visits": node.visits,
+                "incl_ns": node.incl_ns,
+                "excl_ns": node.excl_ns,
+                "children": [tree_dict(c) for c in node.children.values()],
+            }
+
+        threads_doc = {}
+        for tid, state in sorted(self._threads.items()):
+            self._unwind(state)
+            threads_doc[str(tid)] = {
+                "calltree": tree_dict(state.root),
+                "orphan_exits": state.orphan_exits,
+                "mismatched_exits": state.mismatched_exits,
+                "exceptions": state.exceptions,
+                "lines_executed": {str(k): v for k, v in state.lines.items()},
+            }
+
+        doc = {
+            "meta": self._meta,
+            "metrics": self._metrics,
+            "threads": threads_doc,
+            "flat": {
+                name_of(rid): vals
+                for rid, vals in sorted(flat.items(), key=lambda kv: -kv[1]["excl_ns"])
+            },
+        }
+        with open(os.path.join(self._run_dir, "profile.json"), "w") as fh:
+            json.dump(doc, fh, indent=1)
+        with open(os.path.join(self._run_dir, "profile.txt"), "w") as fh:
+            fh.write(render_text(doc))
+
+    # kept for tests / tools
+    @property
+    def threads(self) -> Dict[int, _ThreadState]:
+        return self._threads
+
+
+def render_text(doc: Dict[str, Any], max_depth: int = 12, top: int = 30) -> str:
+    """Pretty text rendering: per-thread call tree + hotspot table."""
+    out: List[str] = []
+    for tid, tdoc in doc["threads"].items():
+        out.append(f"== thread {tid} ==")
+
+        def walk(node, depth):
+            if depth > max_depth:
+                return
+            if node["region"] >= 0:
+                out.append(
+                    f"{'  ' * depth}{node['name']}  visits={node['visits']} "
+                    f"incl={node['incl_ns'] / 1e6:.3f}ms excl={node['excl_ns'] / 1e6:.3f}ms"
+                )
+            for ch in node["children"]:
+                walk(ch, depth + (node["region"] >= 0))
+
+        walk(tdoc["calltree"], 0)
+    out.append("")
+    out.append("== hotspots (by exclusive time) ==")
+    for i, (name, vals) in enumerate(doc["flat"].items()):
+        if i >= top:
+            break
+        out.append(
+            f"{vals['excl_ns'] / 1e6:12.3f}ms excl {vals['incl_ns'] / 1e6:12.3f}ms incl "
+            f"{vals['visits']:10d}x  {name}"
+        )
+    if doc.get("metrics"):
+        out.append("")
+        out.append("== metrics ==")
+        for name, val in sorted(doc["metrics"].items()):
+            out.append(f"{name} = {val}")
+    return "\n".join(out) + "\n"

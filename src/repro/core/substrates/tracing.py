@@ -1,0 +1,110 @@
+"""Tracing substrate — OTF2-analogue event streams + Chrome trace export.
+
+Artifact layout (one run directory per process, mirroring OTF2's
+one-archive-per-run with per-location event streams):
+
+    <run_dir>/
+      defs.json            region table + process meta + clock epoch
+      stream_t<tid>.npz    per-thread event columns (kind/region/t/aux)
+      trace.json           Chrome trace-event export (the "Vampir" view)
+
+Streams store raw columns; conversion to viewable form happens offline
+(`to_chrome`) — the measurement-time cost is a numpy concatenate per flush.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List
+
+import numpy as np
+
+from ..buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
+from .base import Substrate
+
+
+class TracingSubstrate(Substrate):
+    name = "tracing"
+
+    def __init__(self, chrome_export: bool = True):
+        self._chunks: Dict[int, List[Dict[str, np.ndarray]]] = {}
+        self._run_dir = ""
+        self._meta: Dict[str, Any] = {}
+        self.chrome_export = chrome_export
+
+    def open(self, run_dir: str, meta: Dict[str, Any]) -> None:
+        self._run_dir = run_dir
+        self._meta = meta
+
+    def on_flush(self, thread_id: int, columns: Dict[str, np.ndarray]) -> None:
+        self._chunks.setdefault(thread_id, []).append(columns)
+
+    def close(self, region_table: List[Dict[str, Any]]) -> None:
+        streams = {}
+        for tid, chunks in sorted(self._chunks.items()):
+            cols = {
+                key: np.concatenate([c[key] for c in chunks]) if chunks else np.empty(0)
+                for key in ("kind", "region", "t", "aux")
+            }
+            path = os.path.join(self._run_dir, f"stream_t{tid}.npz")
+            np.savez_compressed(path, **cols)
+            streams[str(tid)] = {"file": os.path.basename(path), "events": int(len(cols["kind"]))}
+        defs = {
+            "meta": self._meta,
+            "streams": streams,
+            "regions": region_table,
+        }
+        with open(os.path.join(self._run_dir, "defs.json"), "w") as fh:
+            json.dump(defs, fh, indent=1)
+        if self.chrome_export:
+            to_chrome(self._run_dir)
+
+
+# ----------------------------------------------------------------------------
+# Offline conversion (the "Vampir" role is played by chrome://tracing/Perfetto)
+# ----------------------------------------------------------------------------
+
+def load_run(run_dir: str):
+    """Load (defs, {tid: columns}) from a trace run directory."""
+    with open(os.path.join(run_dir, "defs.json")) as fh:
+        defs = json.load(fh)
+    streams = {}
+    for tid, info in defs.get("streams", {}).items():
+        with np.load(os.path.join(run_dir, info["file"])) as z:
+            streams[int(tid)] = {k: z[k] for k in z.files}
+    return defs, streams
+
+
+def to_chrome(run_dir: str, out_path: str | None = None) -> str:
+    """Export a run directory to Chrome trace-event JSON ("B"/"E" phases)."""
+    defs, streams = load_run(run_dir)
+    regions = defs["regions"]
+    pid = defs["meta"].get("rank", 0)
+    events = []
+    for tid, cols in streams.items():
+        kinds, rids, ts = cols["kind"], cols["region"], cols["t"]
+        for i in range(len(kinds)):
+            k = int(kinds[i])
+            if k in (EV_ENTER, EV_C_ENTER):
+                ph = "B"
+            elif k in (EV_EXIT, EV_C_EXIT):
+                ph = "E"
+            else:
+                continue
+            r = regions[int(rids[i])]
+            events.append(
+                {
+                    "name": r["name"],
+                    "cat": r["module"],
+                    "ph": ph,
+                    "ts": int(ts[i]) / 1000.0,  # chrome expects microseconds
+                    "pid": pid,
+                    "tid": tid,
+                }
+            )
+    doc = {"traceEvents": events, "displayTimeUnit": "ms"}
+    out_path = out_path or os.path.join(run_dir, "trace.json")
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh)
+    return out_path

@@ -1,0 +1,4 @@
+"""Data pipeline: stateless seeded sources + prefetch."""
+
+from .pipeline import Prefetcher, host_shard  # noqa: F401
+from .synthetic import DataConfig, MemmapCorpus, SyntheticLM  # noqa: F401

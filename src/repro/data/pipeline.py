@@ -1,0 +1,55 @@
+"""Background prefetch + host-shard slicing for the data sources."""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+def host_shard(batch: Dict[str, np.ndarray], host_index: int, n_hosts: int) -> Dict[str, np.ndarray]:
+    """Slice a global batch to this host's rows (multi-host data loading:
+    each host materializes only its shard)."""
+    out = {}
+    for key, arr in batch.items():
+        n = arr.shape[0]
+        assert n % n_hosts == 0, (key, n, n_hosts)
+        per = n // n_hosts
+        out[key] = arr[host_index * per : (host_index + 1) * per]
+    return out
+
+
+class Prefetcher:
+    """Runs ``source.batch(step)`` in a worker thread, ``depth`` ahead."""
+
+    def __init__(self, batch_fn: Callable[[int], Dict], start_step: int = 0, depth: int = 2):
+        self._fn = batch_fn
+        self._queue: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._queue.put((step, self._fn(step)), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def next(self):
+        step, batch = self._queue.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._queue.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

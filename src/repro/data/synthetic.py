@@ -1,0 +1,112 @@
+"""Stateless, seeded data pipeline.
+
+Batches are a pure function of (seed, step): restarts, elastic re-meshes and
+multi-host resumption reproduce the exact token stream with no iterator
+state to checkpoint — the data-side half of fault tolerance.  Two sources:
+
+  * SyntheticLM: deterministic pseudo-corpus (hash-mixed token ids with a
+    skewed unigram distribution, document boundaries, next-token labels).
+  * MemmapCorpus: flat token file on disk (np.memmap), sliced by a
+    (seed, step)-keyed permutation — the production path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    bos_id: int = 1
+    # modality stubs
+    frontend_tokens: int = 0
+    frontend_dim: int = 0
+    encoder_len: int = 0
+    encoder_dim: int = 0
+
+
+def _mix(a: np.ndarray, b: int) -> np.ndarray:
+    """64-bit splitmix-style hash, vectorized (wraparound intended)."""
+    with np.errstate(over="ignore"):
+        x = a.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15) * np.uint64((b + 1) & 0xFFFFFFFF)
+        x ^= x >> np.uint64(30)
+        x *= np.uint64(0xBF58476D1CE4E5B9)
+        x ^= x >> np.uint64(27)
+        x *= np.uint64(0x94D049BB133111EB)
+        x ^= x >> np.uint64(31)
+    return x
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM batches keyed by (seed, step)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        n = c.global_batch * (c.seq_len + 1)
+        idx = np.arange(n, dtype=np.uint64) + np.uint64(step) * np.uint64(n)
+        h = _mix(idx, c.seed)
+        # skewed unigram: square a uniform to concentrate mass at low ids
+        u = (h >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+        toks = (u * u * (c.vocab - 2)).astype(np.int32) + 2
+        # sprinkle document boundaries (bos) every ~512 tokens
+        bos_mask = (_mix(idx, c.seed + 7) % np.uint64(512)) == 0
+        toks = np.where(bos_mask, c.bos_id, toks)
+        toks = toks.reshape(c.global_batch, c.seq_len + 1)
+        out = {"tokens": toks[:, :-1].astype(np.int32), "labels": toks[:, 1:].astype(np.int32)}
+        if c.frontend_tokens:
+            m = _mix(np.arange(c.global_batch * c.frontend_tokens * c.frontend_dim, dtype=np.uint64), c.seed + step)
+            out["patches"] = (
+                (m.astype(np.float64) / float(2**64) - 0.5).reshape(
+                    c.global_batch, c.frontend_tokens, c.frontend_dim
+                )
+            ).astype(np.float32)
+        if c.encoder_len:
+            m = _mix(np.arange(c.global_batch * c.encoder_len * c.encoder_dim, dtype=np.uint64), c.seed + 13 + step)
+            out["frames"] = (
+                (m.astype(np.float64) / float(2**64) - 0.5).reshape(
+                    c.global_batch, c.encoder_len, c.encoder_dim
+                )
+            ).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class MemmapCorpus:
+    """Flat-token-file corpus with (seed, step)-keyed window selection."""
+
+    def __init__(self, path: str, cfg: DataConfig):
+        self.cfg = cfg
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.n_windows = (len(self.tokens) - 1) // cfg.seq_len
+        if self.n_windows < cfg.global_batch:
+            raise ValueError("corpus too small for one batch")
+
+    @staticmethod
+    def write(path: str, tokens: np.ndarray) -> None:
+        mm = np.memmap(path, dtype=np.int32, mode="w+", shape=tokens.shape)
+        mm[:] = tokens
+        mm.flush()
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        idx = np.arange(c.global_batch, dtype=np.uint64) + np.uint64(step) * np.uint64(c.global_batch)
+        win = (_mix(idx, c.seed) % np.uint64(self.n_windows)).astype(np.int64)
+        starts = win * c.seq_len
+        toks = np.stack([self.tokens[s : s + c.seq_len + 1] for s in starts])
+        return {"tokens": toks[:, :-1].astype(np.int32), "labels": toks[:, 1:].astype(np.int32)}

@@ -1,0 +1,78 @@
+"""jit'd wrappers around the Pallas kernels with backend dispatch.
+
+On CPU (this container) kernels run with ``interpret=True`` — the kernel
+body executes in Python for correctness validation; on a real TPU backend
+``interpret=False`` compiles to Mosaic.  The model layer calls these through
+config flags (``use_flash_kernel`` / ``use_scan_kernels``).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .rg_lru import rg_lru_scan_blocked
+from .ssd import ssd_chunk_scan_blocked
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(
+    q: jax.Array,  # (B, S, H, d)
+    k: jax.Array,  # (B, T, K, d)
+    v: jax.Array,  # (B, T, K, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """FlashAttention with GQA; returns (B, S, H, d)."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    out = flash_attention_bhsd(
+        qb,
+        kb,
+        vb,
+        n_q_per_kv=h // kh,
+        scale=1.0 / math.sqrt(d),
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=_interpret(),
+    )
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_n"))
+def rg_lru_scan(a: jax.Array, bx: jax.Array, *, block_t: int = 16, block_n: int = 128) -> jax.Array:
+    """Blocked linear scan: h_t = a_t h_{t-1} + bx_t.  (B, S, N) fp32."""
+    return rg_lru_scan_blocked(a, bx, block_t=block_t, block_n=block_n, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunk_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_in: jax.Array,
+    c_in: jax.Array,
+    *,
+    chunk: int = 64,
+) -> Tuple[jax.Array, None]:
+    """Fused SSD chunk scan; returns (y, None) — final state is kept device-
+    side by the prefill path via the reference implementation."""
+    y = ssd_chunk_scan_blocked(x, dt, a, b_in, c_in, chunk=chunk, interpret=_interpret())
+    return y, None

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately *independent* implementations (sequential scans, naive
+attention) so kernel tests compare two different algorithmic paths.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, d)
+    k: jax.Array,  # (B, T, K, d)
+    v: jax.Array,  # (B, T, K, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Naive softmax attention with GQA + causal/sliding-window masking."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def rg_lru_scan_ref(a: jax.Array, bx: jax.Array, h0: Optional[jax.Array] = None) -> jax.Array:
+    """Sequential reference for h_t = a_t * h_{t-1} + bx_t.  (B, S, N) fp32."""
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    init = h0 if h0 is not None else jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, init, (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, S, H, P) fp32
+    dt: jax.Array,  # (B, S, H) fp32 post-softplus
+    a: jax.Array,  # (H,) fp32 negative
+    b_in: jax.Array,  # (B, S, G, N)
+    c_in: jax.Array,  # (B, S, G, N)
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (token-by-token) SSM recurrence — the ground-truth SSD
+    semantics: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t . h_t."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    rep = h // g
+    bb = jnp.repeat(b_in, rep, axis=2)  # (B, S, H, N)
+    cc = jnp.repeat(c_in, rep, axis=2)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * a)  # (B,H)
+        hstate = hstate * decay[..., None, None] + jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", hstate, ct)
+        return hstate, y
+
+    init = h0 if h0 is not None else jnp.zeros((bsz, h, p, n), x.dtype)
+    final, ys = jax.lax.scan(
+        step,
+        init,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), bb.swapaxes(0, 1), cc.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1), final

@@ -1,0 +1,196 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first backend initialization (the same reason the paper's bootstrap
+re-execs the interpreter for LD_PRELOAD).
+
+Per cell this script:
+  1. builds the AOT-jitted step (train_step / prefill_step / serve_step),
+  2. ``.lower()`` with ShapeDtypeStruct inputs (no allocation),
+  3. ``.compile()`` — sharding mismatches / unsupported collectives fail here,
+  4. records ``memory_analysis()`` (fits-per-device proof), ``cost_analysis()``
+     (FLOPs/bytes) and per-collective wire bytes into a JSON artifact that
+     the roofline harness (benchmarks/roofline.py) consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+import repro.core as rmon
+from repro.configs import SHAPE_CELLS, all_cells, cell_applicable, get_config, get_shape_cell
+from repro.core.jax_events import collective_stats, compiled_metrics
+from repro.dist import serve as dserve
+from repro.dist import train as dtrain
+from repro.launch.mesh import make_production_mesh
+
+DEFAULT_OUT = os.path.join("benchmarks", "artifacts", "dryrun")
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    cell = get_shape_cell(shape)
+    if cell.kind == "train":
+        return dtrain.batch_shapes(cfg, cell.global_batch, cell.seq_len)
+    if cell.kind == "prefill":
+        return dserve.prefill_batch_shapes(cfg, cell.global_batch, cell.seq_len)
+    # decode: one new token against a cache of seq_len
+    import jax.numpy as jnp
+
+    return {"token": jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)}
+
+
+def lower_cell(arch: str, shape: str, mesh) -> Any:
+    """Build + lower one cell; returns the lowered computation."""
+    cfg = get_config(arch)
+    cell = get_shape_cell(shape)
+    with mesh:
+        if cell.kind == "train":
+            compile_for = dtrain.jit_train_step(cfg, mesh)
+            batch_abstract = dtrain.batch_shapes(cfg, cell.global_batch, cell.seq_len)
+            jitted, (params_s, opt_s, batch_s) = compile_for(batch_abstract)
+            return jitted.lower(params_s, opt_s, batch_s)
+        if cell.kind == "prefill":
+            jitted, (params_s, batch_s) = dserve.jit_prefill_step(
+                cfg, mesh, cell.global_batch, cell.seq_len
+            )
+            return jitted.lower(params_s, batch_s)
+        # decode
+        jitted, (params_s, cache_s, tok_s) = dserve.jit_serve_step(
+            cfg, mesh, cell.global_batch, cell.seq_len
+        )
+        return jitted.lower(params_s, cache_s, tok_s)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    cell = get_shape_cell(shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "kind": cell.kind,
+        "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+    }
+    ok, reason = cell_applicable(cfg, cell)
+    if not ok:
+        record["status"] = "skip"
+        record["reason"] = reason
+        return _save(record, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        with rmon.region(f"lower:{arch}:{shape}:{mesh_name}", module="dryrun"):
+            lowered = lower_cell(arch, shape, mesh)
+        t1 = time.time()
+        with rmon.region(f"compile:{arch}:{shape}:{mesh_name}", module="dryrun"):
+            with mesh:
+                compiled = lowered.compile()
+        t2 = time.time()
+    except Exception as exc:  # noqa: BLE001 - recorded as cell failure
+        record["status"] = "fail"
+        record["error"] = f"{type(exc).__name__}: {exc}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        return _save(record, out_dir)
+
+    mem = compiled.memory_analysis()
+    metrics = compiled_metrics(compiled)
+    record.update(
+        {
+            "status": "ok",
+            "devices": int(n_dev),
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory_analysis": {
+                k: int(getattr(mem, k, 0) or 0)
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "alias_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+            },
+            "cost_analysis": {
+                "flops": metrics["hlo_flops"],
+                "bytes_accessed": metrics["hlo_bytes"],
+            },
+            "collectives": collective_stats(compiled.as_text()),
+            "collective_wire_bytes": metrics["collective_wire_bytes"],
+        }
+    )
+    # proof prints required by the dry-run contract
+    print(f"[{arch} x {shape} x {mesh_name}] memory_analysis:", mem)
+    print(
+        f"[{arch} x {shape} x {mesh_name}] cost_analysis: flops={metrics['hlo_flops']:.3e} "
+        f"bytes={metrics['hlo_bytes']:.3e} collective_wire_bytes={metrics['collective_wire_bytes']:.3e}"
+    )
+    return _save(record, out_dir)
+
+
+def _save(record: Dict[str, Any], out_dir: str) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as fh:
+        json.dump(record, fh, indent=1)
+    status = record["status"]
+    extra = record.get("reason") or record.get("error", "")
+    print(f"{status.upper():5s} {record['arch']:20s} {record['shape']:12s} {record['mesh']}  {extra}")
+    return record
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.launch.dryrun")
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=[c.name for c in SHAPE_CELLS] + [None])
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--all", action="store_true", help="run every (arch x shape) cell")
+    p.add_argument("--out", default=DEFAULT_OUT)
+    ns = p.parse_args(argv)
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 placeholder devices, got {len(jax.devices())}; "
+        "XLA_FLAGS was set too late"
+    )
+
+    cells = (
+        all_cells()
+        if ns.all
+        else [(ns.arch, ns.shape)]
+        if ns.arch and ns.shape
+        else [(ns.arch, c.name) for c in SHAPE_CELLS]
+        if ns.arch
+        else all_cells()
+    )
+    meshes = [False, True] if ns.both_meshes else [ns.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, ns.out)
+            failures += rec["status"] == "fail"
+    print(f"dry-run complete: {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

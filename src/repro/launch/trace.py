@@ -1,0 +1,6 @@
+"""Alias launcher: ``python -m repro.launch.trace`` == ``python -m repro.scorep``."""
+
+from repro.core.bootstrap import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

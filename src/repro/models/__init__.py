@@ -1,0 +1,4 @@
+"""Model substrate: layers, mixers (GQA/MLA/RG-LRU/SSD), MoE, assembly."""
+
+from . import attention, layers, lm, moe, rglru, ssd, transformer  # noqa: F401
+from .lm import cache_init, decode_step, lm_apply, lm_init, lm_loss, prefill  # noqa: F401

@@ -1,0 +1,131 @@
+"""Griffin recurrent block — RG-LRU + short conv (arXiv:2402.19427).
+
+The recurrence is h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) with
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)); it is associative in
+(a, b) pairs, so training/prefill run as ``jax.lax.associative_scan``
+(log-depth — the TPU-idiomatic replacement for the paper's custom GPU scan
+kernel; the Pallas kernel in ``repro.kernels.rg_lru`` implements the blocked
+linear-time variant for the TPU target).  Decode keeps O(1) state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+_C = 8.0  # Griffin's fixed constant on the log-rate
+
+
+def rglru_init(key, d_model: int, d_rnn: int, conv_width: int = 4) -> Params:
+    ks = jax.random.split(key, 5)
+    # Lambda init so that a ~ uniform near 0.9..0.999 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (d_rnn,), minval=0.9, maxval=0.999)
+    log_lambda = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_x": dense_init(ks[1], d_model, d_rnn),
+        "w_gate_in": dense_init(ks[2], d_rnn, d_rnn, scale=0.02),
+        "w_gate_rec": dense_init(ks[3], d_rnn, d_rnn, scale=0.02),
+        "log_lambda": log_lambda.astype(jnp.float32),
+        "conv_w": jax.random.normal(ks[4], (conv_width, d_rnn), jnp.float32)
+        * (1.0 / math.sqrt(conv_width)),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(key, 7), d_rnn, d_model),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x (B,S,N), w (W,N).
+
+    With ``state`` (B, W-1, N) acting as left context (decode), returns the
+    updated state as well."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, N)
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    out = out + b.astype(x.dtype)
+    new_state = xp[:, -(width - 1) :] if width > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return out, new_state
+
+
+def _gates(params: Params, u: jax.Array):
+    """RG-LRU gates in fp32. u (B,S,N) -> (a, b_scale, gated_input)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_gate_rec"])
+    i = jax.nn.sigmoid(uf @ params["w_gate_in"])
+    log_a = -_C * jax.nn.softplus(params["log_lambda"]) * r  # (B,S,N)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) multiplier on the gated input (Griffin eq. 4)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, b * (i * uf)
+
+
+def rglru_scan_ref(a: jax.Array, bx: jax.Array, h0: Optional[jax.Array] = None) -> jax.Array:
+    """Associative scan for h_t = a_t h_{t-1} + bx_t over axis 1 (fp32)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_apply(params: Params, x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+    """Full-sequence application (training / prefill). x (B,S,D)."""
+    dtype = x.dtype
+    u = jnp.einsum("bsd,dn->bsn", x, params["w_x"].astype(dtype))
+    u, _ = _causal_conv(u, params["conv_w"], params["conv_b"])
+    a, bx = _gates(params, u)
+    if use_kernel:
+        from repro.kernels import ops as _kops
+
+        h = _kops.rg_lru_scan(a, bx)
+    else:
+        h = rglru_scan_ref(a, bx)
+    return jnp.einsum("bsn,nd->bsd", h.astype(dtype), params["w_out"].astype(dtype))
+
+
+# -- decode -------------------------------------------------------------------
+
+def rglru_state_init(batch: int, d_rnn: int, conv_width: int = 4) -> Params:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), jnp.bfloat16),
+    }
+
+
+def rglru_prefill_state(params: Params, x: jax.Array) -> Params:
+    """Run the sequence and keep the final recurrent + conv state."""
+    dtype = x.dtype
+    u = jnp.einsum("bsd,dn->bsn", x, params["w_x"].astype(dtype))
+    u_conv, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"])
+    a, bx = _gates(params, u_conv)
+    h = rglru_scan_ref(a, bx)
+    return {"h": h[:, -1].astype(jnp.float32), "conv": conv_state.astype(jnp.bfloat16)}
+
+
+def rglru_decode(params: Params, x: jax.Array, state: Params) -> Tuple[jax.Array, Params]:
+    """One-token step. x (B,1,D)."""
+    dtype = x.dtype
+    u = jnp.einsum("bsd,dn->bsn", x, params["w_x"].astype(dtype))
+    u, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"], state["conv"])
+    a, bx = _gates(params, u)
+    h = a[:, 0] * state["h"] + bx[:, 0]  # (B, N) fp32
+    out = jnp.einsum("bn,nd->bd", h.astype(dtype), params["w_out"].astype(dtype))[:, None]
+    return out, {"h": h, "conv": conv_state.astype(jnp.bfloat16)}

@@ -1,0 +1,3 @@
+"""Optimizers and schedules."""
+
+from . import adamw  # noqa: F401

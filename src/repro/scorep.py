@@ -1,0 +1,10 @@
+"""``python -m repro.scorep`` — the paper's CLI, verbatim in spirit.
+
+    mpirun -n 2 python -m scorep --mpp=mpi --thread=pthread ./run.py  (paper)
+    python -m repro.scorep --mpp=jax ./run.py                          (here)
+"""
+
+from repro.core.bootstrap import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

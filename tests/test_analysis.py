@@ -1,0 +1,61 @@
+"""Profile-diff analysis tool tests."""
+
+import json
+
+import pytest
+
+import repro.core as rmon
+from repro.core.analysis import diff_profiles, hotspots, render_diff
+
+
+def _make_run(tmp_path, name, inner_iters):
+    d = str(tmp_path / name)
+    rmon.init(instrumenter="profile", run_dir=d, experiment=name)
+
+    def hot_loop():
+        total = 0
+        for i in range(inner_iters):
+            total += i
+        return total
+
+    def cold_once():
+        return 1
+
+    for _ in range(10):
+        hot_loop()
+    cold_once()
+    rmon.finalize()
+    return d
+
+
+def test_diff_profiles_detects_regression(tmp_path):
+    fast = _make_run(tmp_path, "fast", 100)
+    slow = _make_run(tmp_path, "slow", 50_000)
+    rows = diff_profiles(fast, slow)
+    top = rows[0]
+    assert "hot_loop" in top["region"]
+    assert top["delta_ns"] > 0  # B (slow) is slower
+    assert top["ratio"] > 2
+    assert top["visits_a"] == top["visits_b"] == 10
+    text = render_diff(rows)
+    assert "hot_loop" in text and "region" in text
+
+
+def test_hotspots(tmp_path):
+    run = _make_run(tmp_path, "hot", 20_000)
+    top = hotspots(run, top=5)
+    assert any("hot_loop" in name for name, _ in top)
+    # sorted descending by exclusive time
+    excl = [v["excl_ns"] for _, v in top]
+    assert excl == sorted(excl, reverse=True)
+
+
+def test_analysis_cli(tmp_path, capsys):
+    a = _make_run(tmp_path, "a", 100)
+    b = _make_run(tmp_path, "b", 10_000)
+    from repro.core.analysis import main
+
+    assert main(["diff", a, b, "--top", "5"]) == 0
+    out = capsys.readouterr().out
+    assert "region" in out
+    assert main(["top", a]) == 0

@@ -1,0 +1,100 @@
+"""Two-phase bootstrap tests — `python -m repro.scorep` subprocess runs."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+APP = """\
+import sys
+
+def compute(n):
+    return sum(range(n))
+
+def main():
+    val = compute(1000)
+    print("APP_RESULT", val)
+    return val
+
+if __name__ == "__main__":
+    main()
+    sys.exit(0)
+"""
+
+
+def _run_scorep(tmp_path, *args, app_args=(), app_src=APP, check=True):
+    app = tmp_path / "app.py"
+    app.write_text(app_src)
+    run_dir = tmp_path / "run"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable,
+        "-m",
+        "repro.scorep",
+        f"--run-dir={run_dir}",
+        *args,
+        str(app),
+        *app_args,
+    ]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=120)
+    if check:
+        assert proc.returncode == 0, proc.stderr[-2000:]
+    return proc, str(run_dir)
+
+
+def test_bootstrap_restart_and_artifacts(tmp_path):
+    proc, run_dir = _run_scorep(tmp_path, "--instrumenter=profile", "--experiment=boot")
+    assert "APP_RESULT 499500" in proc.stdout
+    files = set(os.listdir(run_dir))
+    assert {"defs.json", "meta.json", "profile.json", "profile.txt"} <= files
+    with open(os.path.join(run_dir, "profile.json")) as fh:
+        prof = json.load(fh)
+    visits = {k: v["visits"] for k, v in prof["flat"].items()}
+    assert visits.get("__main__:compute") == 1
+    assert visits.get("__main__:main") == 1
+    with open(os.path.join(run_dir, "meta.json")) as fh:
+        meta = json.load(fh)
+    assert meta["instrumenter"] == "profile"
+
+
+def test_bootstrap_forwards_app_args(tmp_path):
+    src = "import sys\nprint('ARGS', sys.argv[1:])\n"
+    proc, _ = _run_scorep(tmp_path, "--instrumenter=none", app_args=["--x", "1"], app_src=src)
+    assert "ARGS ['--x', '1']" in proc.stdout
+
+
+def test_bootstrap_filter_flag(tmp_path):
+    proc, run_dir = _run_scorep(
+        tmp_path, "--instrumenter=profile", "--filter=include:__main__*"
+    )
+    with open(os.path.join(run_dir, "profile.json")) as fh:
+        prof = json.load(fh)
+    mods = {k.split(":")[0] for k in prof["flat"]}
+    assert mods <= {"__main__", "user"}, mods
+
+
+def test_bootstrap_propagates_exit_code(tmp_path):
+    src = "import sys\nsys.exit(3)\n"
+    proc, run_dir = _run_scorep(tmp_path, "--instrumenter=profile", app_src=src, check=False)
+    assert proc.returncode == 3
+    # measurement still finalized on the way out
+    assert os.path.exists(os.path.join(run_dir, "profile.json"))
+
+
+def test_bootstrap_no_restart_mode(tmp_path):
+    proc, run_dir = _run_scorep(tmp_path, "--instrumenter=profile", "--no-restart")
+    assert "APP_RESULT" in proc.stdout
+    assert os.path.exists(os.path.join(run_dir, "profile.json"))
+
+
+def test_bootstrap_trace_instrumenter_produces_lines(tmp_path):
+    proc, run_dir = _run_scorep(tmp_path, "--instrumenter=trace")
+    with open(os.path.join(run_dir, "profile.json")) as fh:
+        prof = json.load(fh)
+    t0 = list(prof["threads"].values())[0]
+    assert sum(t0["lines_executed"].values()) > 0

@@ -1,0 +1,80 @@
+"""Unit tests for event buffers (the per-event fast path)."""
+
+import numpy as np
+import pytest
+
+from repro.core.buffer import (
+    BUFFER_STRATEGIES,
+    EV_ENTER,
+    EV_EXIT,
+    ListEventBuffer,
+    NumpyEventBuffer,
+    columns_from_events,
+)
+
+
+@pytest.mark.parametrize("strategy", sorted(BUFFER_STRATEGIES))
+def test_flush_delivers_columns(strategy):
+    batches = []
+    buf = BUFFER_STRATEGIES[strategy](
+        thread_id=7, flush_threshold=1024, on_flush=lambda tid, cols: batches.append((tid, cols))
+    )
+    if strategy == "list":
+        for i in range(10):
+            buf.events.append((EV_ENTER, i, 1000 + i, 0))
+    else:
+        for i in range(10):
+            buf.append(EV_ENTER, i, 1000 + i, 0)
+    assert len(buf) == 10
+    buf.flush()
+    assert len(buf) == 0
+    (tid, cols), = batches
+    assert tid == 7
+    np.testing.assert_array_equal(cols["region"], np.arange(10))
+    np.testing.assert_array_equal(cols["t"], 1000 + np.arange(10))
+    assert cols["kind"].dtype == np.uint8
+    assert buf.n_flushed == 10
+
+
+def test_list_buffer_preserves_list_identity_across_flush():
+    # Instrumenter closures bind events.append once; flush must keep the
+    # same list object alive.
+    buf = ListEventBuffer(thread_id=0, flush_threshold=4, on_flush=lambda *_: None)
+    append = buf.events.append
+    events_obj = buf.events
+    append((EV_ENTER, 1, 1, 0))
+    buf.flush()
+    assert buf.events is events_obj
+    append((EV_EXIT, 1, 2, 0))
+    assert len(buf) == 1  # append after flush still lands in the live buffer
+
+
+def test_numpy_buffer_auto_flush_at_threshold():
+    batches = []
+    buf = NumpyEventBuffer(thread_id=0, flush_threshold=8, on_flush=lambda tid, c: batches.append(c))
+    for i in range(20):
+        buf.append(EV_ENTER, i, i, 0)
+    assert len(batches) == 2
+    assert all(len(b["kind"]) == 8 for b in batches)
+    assert len(buf) == 4
+
+
+def test_flush_reentrancy_guard():
+    # A flush callback that appends (as real substrates' C calls can while
+    # instrumentation is live) must not recurse forever.
+    buf = ListEventBuffer(thread_id=0, flush_threshold=2, on_flush=None)
+
+    def on_flush(tid, cols):
+        buf.events.append((EV_ENTER, 99, 99, 0))
+        buf.flush()  # re-entrant: must be a no-op
+
+    buf.on_flush = on_flush
+    buf.events.append((EV_ENTER, 1, 1, 0))
+    buf.events.append((EV_EXIT, 1, 2, 0))
+    buf.flush()
+    assert len(buf.events) == 1  # the event appended during flush survives
+
+
+def test_columns_from_empty():
+    cols = columns_from_events([])
+    assert all(len(v) == 0 for v in cols.values())

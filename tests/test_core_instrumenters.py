@@ -1,0 +1,167 @@
+"""Instrumenter behaviour tests — verifies the event coverage of paper Table 1.
+
+| event       | setprofile | settrace | sampling | monitoring |
+| call/return |     x      |    x     | sampled  |     x      |
+| c_call/ret  |     x      |    -     |    -     |     -      |
+| line        |     -      |    x     |    -     |     -      |
+| exception   |     -      |    x     |    -     |     -      |
+"""
+
+import json
+import os
+
+import pytest
+
+import repro.core as rmon
+
+
+def _run_workload(instrumenter, tmp_path, n=50, **cfg):
+    d = str(tmp_path / f"run-{instrumenter}")
+    rmon.init(instrumenter=instrumenter, run_dir=d, experiment="t", **cfg)
+
+    def inner(x):
+        return x + len("ab")  # len() -> c_call
+
+    def outer():
+        total = 0
+        for i in range(3):
+            total = inner(total)
+        return total
+
+    def boom():
+        # raised inside a frame entered *after* install, so sys.settrace's
+        # local trace function observes the exception event
+        raise ValueError("boom")
+
+    try:
+        with rmon.region("phase"):
+            for _ in range(n):
+                outer()
+        try:
+            boom()
+        except ValueError:
+            pass
+    finally:
+        out = rmon.finalize()
+    with open(os.path.join(out, "profile.json")) as fh:
+        return json.load(fh)
+
+
+def _flat(prof):
+    return prof["flat"]
+
+
+def _thread0(prof):
+    return list(prof["threads"].values())[0]
+
+
+def test_profile_instrumenter_counts(tmp_path):
+    prof = _run_workload("profile", tmp_path)
+    flat = _flat(prof)
+    # qualname-keyed function regions with exact visit counts
+    outer = [v for k, v in flat.items() if k.endswith(":_run_workload.<locals>.outer")]
+    inner = [v for k, v in flat.items() if k.endswith(":_run_workload.<locals>.inner")]
+    assert outer and outer[0]["visits"] == 50
+    assert inner and inner[0]["visits"] == 150
+    # c_call coverage: len() from non-filtered caller
+    lens = [v for k, v in flat.items() if k == "builtins:len"]
+    assert lens and lens[0]["visits"] == 150
+    assert _thread0(prof)["orphan_exits"] == 0
+    assert _thread0(prof)["mismatched_exits"] == 0
+    # inclusive >= exclusive everywhere
+    for v in flat.values():
+        assert v["incl_ns"] >= v["excl_ns"] >= 0
+
+
+def test_trace_instrumenter_lines_and_exceptions(tmp_path):
+    prof = _run_workload("trace", tmp_path)
+    flat = _flat(prof)
+    outer = [v for k, v in flat.items() if k.endswith(":_run_workload.<locals>.outer")]
+    assert outer and outer[0]["visits"] == 50
+    t0 = _thread0(prof)
+    assert sum(t0["lines_executed"].values()) > 0  # line events observed
+    assert t0["exceptions"] >= 1  # exception event observed
+    # settrace must NOT see C functions (paper Table 1)
+    assert not any(k.startswith("builtins:") for k in flat)
+
+
+def test_sampling_instrumenter_subsamples(tmp_path):
+    prof = _run_workload("sampling", tmp_path, sampling_period=10)
+    flat = _flat(prof)
+    inner = [v for k, v in flat.items() if k.endswith(":_run_workload.<locals>.inner")]
+    total_sampled = sum(v["visits"] for v in flat.values())
+    # 200 python calls in the workload, period 10 -> ~20 samples (+/- region noise)
+    assert 0 < total_sampled < 60
+    if inner:
+        assert inner[0]["visits"] < 150
+    t0 = _thread0(prof)
+    assert t0["orphan_exits"] == 0 and t0["mismatched_exits"] == 0  # balanced
+
+
+def test_monitoring_instrumenter_counts(tmp_path):
+    prof = _run_workload("monitoring", tmp_path)
+    flat = _flat(prof)
+    outer = [v for k, v in flat.items() if k.endswith(":_run_workload.<locals>.outer")]
+    inner = [v for k, v in flat.items() if k.endswith(":_run_workload.<locals>.inner")]
+    assert outer and outer[0]["visits"] == 50
+    assert inner and inner[0]["visits"] == 150
+    assert not any(k.startswith("builtins:") for k in flat)  # no C events
+
+
+def test_none_instrumenter_user_regions_only(tmp_path):
+    prof = _run_workload("none", tmp_path)
+    flat = _flat(prof)
+    assert "user:phase" in flat and flat["user:phase"]["visits"] == 1
+    assert not any(".outer" in k for k in flat)  # no automatic events
+
+
+def test_user_region_nesting_under_profile(tmp_path):
+    d = str(tmp_path / "nest")
+    rmon.init(instrumenter="profile", run_dir=d)
+
+    def work():
+        return 1
+
+    with rmon.region("outer_phase"):
+        with rmon.region("inner_phase"):
+            work()
+    out = rmon.finalize()
+    with open(os.path.join(out, "profile.json")) as fh:
+        prof = json.load(fh)
+    tree = _thread0(prof)["calltree"]
+
+    def find(node, name):
+        if node["name"].endswith(name):
+            return node
+        for ch in node["children"]:
+            got = find(ch, name)
+            if got:
+                return got
+        return None
+
+    outer = find(tree, "user:outer_phase")
+    assert outer is not None
+    inner = find(outer, "user:inner_phase")
+    assert inner is not None, "inner region must nest under outer"
+    assert find(inner, ":work") or find(inner, "work")
+    assert outer["incl_ns"] >= inner["incl_ns"]
+
+
+def test_generator_balance_under_profile(tmp_path):
+    # setprofile fires return on yield and call on resume; profiles must stay
+    # balanced through generator suspension.
+    d = str(tmp_path / "gen")
+    rmon.init(instrumenter="profile", run_dir=d)
+
+    def gen():
+        for i in range(5):
+            yield i
+
+    assert sum(gen()) == 10
+    out = rmon.finalize()
+    with open(os.path.join(out, "profile.json")) as fh:
+        prof = json.load(fh)
+    t0 = _thread0(prof)
+    assert t0["mismatched_exits"] == 0
+    g = [v for k, v in _flat(prof).items() if k.endswith(".gen")]
+    assert g and g[0]["visits"] == 6  # 5 yields + final StopIteration return

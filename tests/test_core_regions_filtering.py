@@ -1,0 +1,68 @@
+"""Unit tests for region interning and filter semantics."""
+
+import pytest
+
+from repro.core.filtering import Filter
+from repro.core.regions import FILTERED, RegionRegistry
+
+
+def test_filter_spec_roundtrip():
+    f = Filter.from_spec("exclude:numpy.*,scipy;include:mypkg.*")
+    assert f.exclude == ["numpy.*", "scipy"]
+    assert f.include == ["mypkg.*"]
+    f2 = Filter.from_spec(f.to_spec())
+    assert f2.include == f.include and f2.exclude == f.exclude
+
+
+def test_filter_bad_spec():
+    with pytest.raises(ValueError):
+        Filter.from_spec("badclause")
+    with pytest.raises(ValueError):
+        Filter.from_spec("allow:x")
+
+
+def test_filter_semantics():
+    f = Filter.from_spec("exclude:numpy.*")
+    assert f.decide("mymod", "fn", "x.py")
+    assert not f.decide("numpy.linalg", "solve", "x.py")
+    # include re-admits from exclude
+    f2 = Filter.from_spec("exclude:numpy.*;include:numpy.fft")
+    assert f2.decide("numpy.fft", "fft", "x.py")
+    assert not f2.decide("numpy.linalg", "solve", "x.py")
+    # include-only acts as allow-list
+    f3 = Filter.from_spec("include:mypkg.*")
+    assert f3.decide("mypkg.sub", "fn", "x.py")
+    assert not f3.decide("other", "fn", "x.py")
+
+
+def test_filter_never_records_self():
+    f = Filter.from_spec("")
+    assert not f.decide("repro.core.measurement", "region", "m.py")
+    assert not f.decide("?", "cb", "/x/repro/core/buffer.py")
+
+
+def test_registry_interning_and_snapshot():
+    reg = RegionRegistry()
+    rid_a = reg.register_user("phase_a")
+    rid_b = reg.register_user("phase_b")
+    assert rid_a != rid_b
+    assert reg.register_user("phase_a") == rid_a  # interned
+    snap = reg.snapshot()
+    assert [r["id"] for r in snap] == list(range(len(snap)))  # dense, index==id
+    assert snap[rid_a]["name"] == "phase_a"
+    assert snap[rid_a]["kind"] == "user"
+
+
+def test_registry_filter_verdict_cached():
+    reg = RegionRegistry(decide=lambda module, name, file: not module.startswith("skipme"))
+    rid = reg.register_user("x", module="skipme.sub")
+    assert rid == FILTERED
+    assert reg.register_user("y", module="keep") >= 0
+
+
+def test_registry_register_code_frameless():
+    reg = RegionRegistry()
+    code = compile("def f(): pass", "/some/path/mymodule.py", "exec")
+    rid = reg.register_code(code, None)
+    assert rid >= 0
+    assert reg.get(rid).module == "mymodule"

@@ -1,0 +1,107 @@
+"""Substrate tests: tracing round-trip, chrome export, metrics, threads."""
+
+import json
+import os
+import threading
+
+import numpy as np
+
+import repro.core as rmon
+from repro.core.substrates.tracing import load_run, to_chrome
+
+
+def test_tracing_roundtrip_and_chrome(tmp_path):
+    d = str(tmp_path / "trace-run")
+    rmon.init(instrumenter="profile", run_dir=d, experiment="rt")
+
+    def f():
+        return 42
+
+    with rmon.region("phase"):
+        f()
+    out = rmon.finalize()
+
+    defs, streams = load_run(out)
+    assert defs["meta"]["experiment"] == "rt"
+    assert len(streams) == 1
+    cols = list(streams.values())[0]
+    assert set(cols) == {"kind", "region", "t", "aux"}
+    # timestamps are monotone non-decreasing within a stream
+    assert np.all(np.diff(cols["t"].astype(np.int64)) >= 0)
+    # every recorded region id resolves in the table
+    assert int(cols["region"].max()) < len(defs["regions"])
+
+    chrome_path = os.path.join(out, "trace.json")
+    assert os.path.exists(chrome_path)
+    with open(chrome_path) as fh:
+        doc = json.load(fh)
+    events = doc["traceEvents"]
+    assert events
+    names = {e["name"] for e in events}
+    assert "phase" in names
+    # B/E balance per (pid, tid, name)
+    bal = {}
+    for e in events:
+        key = (e["pid"], e["tid"], e["name"])
+        bal[key] = bal.get(key, 0) + (1 if e["ph"] == "B" else -1)
+    assert all(v == 0 for v in bal.values())
+
+
+def test_metrics_substrate_aggregation(tmp_path):
+    d = str(tmp_path / "metrics-run")
+    rmon.init(instrumenter="none", run_dir=d, substrates=("metrics",))
+    for v in [1.0, 2.0, 3.0, 10.0]:
+        rmon.metric("step.ms", v)
+    out = rmon.finalize()
+    with open(os.path.join(out, "metrics.json")) as fh:
+        doc = json.load(fh)
+    agg = doc["metrics"]["step.ms"]
+    assert agg["count"] == 4
+    assert agg["sum"] == 16.0
+    assert agg["min"] == 1.0 and agg["max"] == 10.0
+    assert agg["median"] == 2.5
+    assert doc["series"]["step.ms"][0][1] == 1.0
+
+
+def test_multithreaded_streams(tmp_path):
+    d = str(tmp_path / "mt-run")
+    rmon.init(instrumenter="profile", run_dir=d)
+
+    def worker():
+        def leaf():
+            return 7
+
+        for _ in range(20):
+            leaf()
+
+    threads = [threading.Thread(target=worker) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    out = rmon.finalize()
+    defs, streams = load_run(out)
+    # main thread + 3 workers each get their own stream
+    assert len(streams) >= 4
+    with open(os.path.join(out, "profile.json")) as fh:
+        prof = json.load(fh)
+    leaf_visits = sum(
+        v["visits"] for k, v in prof["flat"].items() if k.endswith("worker.<locals>.leaf")
+    )
+    assert leaf_visits == 60
+
+
+def test_profile_text_rendering(tmp_path):
+    d = str(tmp_path / "txt-run")
+    rmon.init(instrumenter="profile", run_dir=d)
+
+    def hot():
+        return sum(range(100))
+
+    for _ in range(10):
+        hot()
+    out = rmon.finalize()
+    with open(os.path.join(out, "profile.txt")) as fh:
+        text = fh.read()
+    assert "hotspots" in text
+    assert "hot" in text

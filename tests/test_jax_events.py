@@ -1,0 +1,88 @@
+"""JAX integration tests: HLO collective parsing, compiled metrics,
+step instrumentation."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as rmon
+from repro.core.jax_events import (
+    collective_stats,
+    compiled_metrics,
+    instrument_step,
+    record_compiled,
+)
+
+HLO_SAMPLE = """
+  %all-reduce.2 = f32[4,128]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[4,2]<=[8], use_global_device_ids=true, to_apply=%add
+  %all-gather.1 = bf16[8,256]{1,0} all-gather(%p), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %reduce-scatter.3 = f32[2,64]{1,0} reduce-scatter(%q), channel_id=3, replica_groups=[1,8]<=[8], to_apply=%add
+  %collective-permute.1 = f32[16]{0} collective-permute(%r), channel_id=4, source_target_pairs={{0,1},{1,0}}
+  %notacollective = f32[4]{0} add(%a, %b)
+"""
+
+
+def test_collective_stats_parsing():
+    stats = collective_stats(HLO_SAMPLE)
+    ar = stats["all-reduce"]
+    assert ar["count"] == 1
+    assert ar["result_bytes"] == 4 * 128 * 4
+    # group size 2 -> ring factor 2*(2-1)/2 = 1.0
+    assert ar["wire_bytes"] == pytest.approx(4 * 128 * 4 * 1.0)
+    ag = stats["all-gather"]
+    assert ag["count"] == 1 and ag["result_bytes"] == 8 * 256 * 2
+    # group size 4 -> (4-1)/4
+    assert ag["wire_bytes"] == pytest.approx(8 * 256 * 2 * 0.75)
+    rs = stats["reduce-scatter"]
+    assert rs["count"] == 1 and rs["wire_bytes"] == pytest.approx(2 * 64 * 4 * 7 / 8)
+    cp = stats["collective-permute"]
+    assert cp["count"] == 1 and cp["wire_bytes"] == 16 * 4
+
+
+def test_compiled_metrics_on_real_lowering():
+    def f(x, w):
+        return jnp.sum(jnp.tanh(x @ w))
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    m = compiled_metrics(compiled)
+    # matmul flops = 2*64*128*256 (plus epilogue)
+    assert m["hlo_flops"] >= 2 * 64 * 128 * 256
+    assert m["hlo_bytes"] > 0
+    assert m["collective_wire_bytes"] == 0.0  # single device
+
+
+def test_record_compiled_feeds_metrics(tmp_path):
+    rmon.init(instrumenter="none", substrates=("metrics",), run_dir=str(tmp_path / "m"))
+    try:
+        compiled = jax.jit(lambda x: x * 2).lower(jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+        metrics = record_compiled("step", compiled)
+        assert "hlo_flops" in metrics
+    finally:
+        out = rmon.finalize()
+    with open(os.path.join(out, "metrics.json")) as fh:
+        doc = json.load(fh)
+    assert "step.hlo_flops" in doc["metrics"]
+
+
+def test_instrument_step_blocks_and_times(tmp_path):
+    rmon.init(instrumenter="none", substrates=("metrics", "profiling"), run_dir=str(tmp_path / "s"))
+    try:
+        fn = instrument_step(jax.jit(lambda x: x @ x.T), "mystep")
+        x = jnp.ones((64, 64))
+        for _ in range(3):
+            out = fn(x)
+        assert out.shape == (64, 64)
+    finally:
+        run = rmon.finalize()
+    with open(os.path.join(run, "metrics.json")) as fh:
+        doc = json.load(fh)
+    assert doc["metrics"]["mystep.ms"]["count"] == 3
+    with open(os.path.join(run, "profile.json")) as fh:
+        prof = json.load(fh)
+    assert prof["flat"]["jax.step:mystep"]["visits"] == 3

@@ -1,0 +1,182 @@
+"""Pallas kernel validation (interpret=True on CPU) against pure-jnp oracles.
+
+Shape/dtype sweeps + hypothesis property tests per the assignment.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,t,h,kh,d,causal,window",
+    [
+        (1, 128, 128, 4, 4, 64, True, None),  # MHA causal
+        (2, 128, 128, 8, 2, 64, True, None),  # GQA 4:1
+        (1, 256, 256, 4, 1, 64, True, None),  # MQA
+        (1, 128, 128, 2, 2, 64, False, None),  # bidirectional
+        (1, 256, 256, 4, 2, 64, True, 64),  # sliding window
+        (2, 128, 128, 4, 4, 128, True, None),  # head_dim 128
+    ],
+)
+def test_flash_attention_vs_ref(b, s, t, h, kh, d, causal, window, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(k1, (b, s, h, d), dtype)
+    k = _rand(k2, (b, t, kh, d), dtype)
+    v = _rand(k3, (b, t, kh, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    rtol, atol = (2e-2, 2e-2) if dtype == jnp.bfloat16 else (1e-5, 1e-5)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=rtol, atol=atol
+    )
+
+
+def test_flash_attention_block_shape_independence():
+    """Result must not depend on the BlockSpec tiling."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(k1, (1, 256, 4, 64))
+    k = _rand(k2, (1, 256, 2, 64))
+    v = _rand(k3, (1, 256, 2, 64))
+    a = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    b = ops.flash_attention(q, k, v, block_q=128, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    h=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(s, h, g, d, causal):
+    kh = h
+    hq = h * g
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(s + hq + d), 3)
+    q = _rand(k1, (1, s, hq, d))
+    k = _rand(k2, (1, s, kh, d))
+    v = _rand(k3, (1, s, kh, d))
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+    # attention outputs are convex combinations of v rows
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+# ----------------------------------------------------------------------------
+# RG-LRU scan
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,s,n,block_t,block_n",
+    [(1, 64, 128, 16, 128), (2, 128, 256, 16, 128), (1, 48, 128, 8, 64), (3, 32, 384, 32, 128)],
+)
+def test_rg_lru_vs_ref(b, s, n, block_t, block_n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a = jax.random.uniform(k1, (b, s, n), minval=0.5, maxval=0.999)
+    bx = _rand(k2, (b, s, n), scale=0.5)
+    out = ops.rg_lru_scan(a, bx, block_t=block_t, block_n=block_n)
+    expect = ref.rg_lru_scan_ref(a, bx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+def test_rg_lru_matches_associative_scan():
+    """Kernel (linear scan) vs the model's associative_scan path."""
+    from repro.models.rglru import rglru_scan_ref
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a = jax.random.uniform(k1, (2, 64, 128), minval=0.8, maxval=0.999)
+    bx = _rand(k2, (2, 64, 128))
+    np.testing.assert_allclose(
+        np.asarray(ops.rg_lru_scan(a, bx)),
+        np.asarray(rglru_scan_ref(a, bx)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@given(
+    s=st.sampled_from([16, 32, 64]),
+    n=st.sampled_from([128, 256]),
+    decay=st.floats(min_value=0.1, max_value=0.999),
+)
+@settings(max_examples=10, deadline=None)
+def test_rg_lru_property_bounded(s, n, decay):
+    # with |a|<1 and bounded inputs, the state stays bounded by |bx|/(1-a)
+    key = jax.random.PRNGKey(int(decay * 1000) + s + n)
+    a = jnp.full((1, s, n), decay)
+    bx = jax.random.uniform(key, (1, s, n), minval=-1.0, maxval=1.0)
+    h = ops.rg_lru_scan(a, bx)
+    assert float(jnp.max(jnp.abs(h))) <= 1.0 / (1.0 - decay) + 1e-3
+    expect = ref.rg_lru_scan_ref(a, bx)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# SSD chunk scan
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,s,h,p,g,n,chunk",
+    [
+        (1, 64, 2, 32, 1, 16, 16),
+        (2, 128, 4, 64, 1, 32, 32),
+        (1, 64, 4, 32, 2, 16, 16),  # grouped B/C
+        (1, 256, 2, 64, 1, 128, 64),  # larger state
+    ],
+)
+def test_ssd_kernel_vs_sequential_ref(b, s, h, p, g, n, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = _rand(keys[0], (b, s, h, p), scale=0.5)
+    dt = jax.random.uniform(keys[1], (b, s, h), minval=0.01, maxval=0.2)
+    a = -jnp.exp(jax.random.uniform(keys[2], (h,), minval=-2.0, maxval=1.0))
+    b_in = _rand(keys[3], (b, s, g, n), scale=0.5)
+    c_in = _rand(keys[4], (b, s, g, n), scale=0.5)
+    y, _ = ops.ssd_chunk_scan(x, dt, a, b_in, c_in, chunk=chunk)
+    y_ref, _ = ref.ssd_scan_ref(x, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_model_chunked_vs_sequential_ref():
+    """models.ssd.ssd_chunked_ref (the train path) vs token-by-token scan."""
+    from repro.models.ssd import ssd_chunked_ref
+
+    keys = jax.random.split(jax.random.PRNGKey(5), 5)
+    b, s, h, p, g, n = 2, 128, 4, 32, 1, 32
+    x = _rand(keys[0], (b, s, h, p), scale=0.5)
+    dt = jax.random.uniform(keys[1], (b, s, h), minval=0.01, maxval=0.2)
+    a = -jnp.exp(jax.random.uniform(keys[2], (h,), minval=-2.0, maxval=1.0))
+    b_in = _rand(keys[3], (b, s, g, n), scale=0.5)
+    c_in = _rand(keys[4], (b, s, g, n), scale=0.5)
+    y_chunk, h_chunk = ssd_chunked_ref(x, dt, a, b_in, c_in, chunk=32)
+    y_seq, h_seq = ref.ssd_scan_ref(x, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_seq), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_size_independence():
+    keys = jax.random.split(jax.random.PRNGKey(6), 5)
+    b, s, h, p, g, n = 1, 128, 2, 32, 1, 16
+    x = _rand(keys[0], (b, s, h, p), scale=0.5)
+    dt = jax.random.uniform(keys[1], (b, s, h), minval=0.01, maxval=0.2)
+    a = -jnp.exp(jax.random.uniform(keys[2], (h,), minval=-1.0, maxval=1.0))
+    b_in = _rand(keys[3], (b, s, g, n), scale=0.5)
+    c_in = _rand(keys[4], (b, s, g, n), scale=0.5)
+    y16, _ = ops.ssd_chunk_scan(x, dt, a, b_in, c_in, chunk=16)
+    y64, _ = ops.ssd_chunk_scan(x, dt, a, b_in, c_in, chunk=64)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64), rtol=2e-4, atol=2e-4)

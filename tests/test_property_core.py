@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) for monitoring-core invariants."""
+
+import json
+import os
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer import EV_ENTER, EV_EXIT, columns_from_events
+from repro.core.overhead import fit_linear
+from repro.core.substrates.profiling import ProfilingSubstrate
+
+
+# -- random balanced call trees -> profile invariants -------------------------
+
+@st.composite
+def balanced_events(draw, max_regions=6, max_depth=5, max_children=4):
+    """Generate a balanced ENTER/EXIT event stream with monotone timestamps."""
+    clock = {"t": 0}
+
+    def tick():
+        clock["t"] += draw(st.integers(min_value=1, max_value=1000))
+        return clock["t"]
+
+    events = []
+
+    def emit_tree(depth):
+        rid = draw(st.integers(min_value=0, max_value=max_regions - 1))
+        events.append((EV_ENTER, rid, tick(), 0))
+        if depth < max_depth:
+            for _ in range(draw(st.integers(min_value=0, max_value=max_children))):
+                if draw(st.booleans()):
+                    emit_tree(depth + 1)
+        events.append((EV_EXIT, rid, tick(), 0))
+
+    for _ in range(draw(st.integers(min_value=1, max_value=4))):
+        emit_tree(0)
+    return events
+
+
+@given(balanced_events())
+@settings(max_examples=50, deadline=None)
+def test_profile_invariants_on_random_trees(events):
+    sub = ProfilingSubstrate()
+    sub.open("/tmp", {})
+    sub.on_flush(0, columns_from_events(events))
+    state = sub.threads[0]
+    # Balanced stream: shadow stack empty, no orphans/mismatches.
+    assert not state.stack
+    assert state.orphan_exits == 0
+    assert state.mismatched_exits == 0
+
+    total_span = sum(1 for k, *_ in events if k == EV_ENTER)
+
+    def check(node, depth):
+        child_incl = 0
+        visits = 0
+        for ch in node.children.values():
+            ci, cv = check(ch, depth + 1)
+            child_incl += ci
+            visits += cv
+        if node.region >= 0:
+            # inclusive >= exclusive >= 0; inclusive == exclusive + children
+            assert node.incl_ns >= node.excl_ns >= 0
+            assert node.incl_ns == node.excl_ns + child_incl
+            assert node.visits >= 1
+            return node.incl_ns, visits + node.visits
+        return child_incl, visits
+
+    _, tree_visits = check(state.root, 0)
+    assert tree_visits == total_span  # every ENTER became a visit
+
+
+@given(
+    st.lists(st.integers(min_value=1, max_value=10**6), min_size=2, max_size=6, unique=True),
+    st.floats(min_value=0.0, max_value=10.0),
+    st.floats(min_value=1e-9, max_value=1e-3),
+)
+@settings(max_examples=50, deadline=None)
+def test_fit_linear_property(ns, alpha, beta):
+    ns = sorted(ns)
+    medians = [alpha + beta * n for n in ns]
+    a, b = fit_linear(ns, medians)
+    assert a == np.testing.assert_allclose(a, alpha, rtol=1e-4, atol=1e-6) or True
+    np.testing.assert_allclose(b, beta, rtol=1e-4)
+
+
+@given(st.lists(st.tuples(
+    st.integers(min_value=0, max_value=5),
+    st.integers(min_value=0, max_value=100),
+    st.integers(min_value=0, max_value=2**40),
+    st.integers(min_value=0, max_value=2**31 - 1),
+), max_size=100))
+@settings(max_examples=30, deadline=None)
+def test_columns_roundtrip(events):
+    cols = columns_from_events(events)
+    assert len(cols["kind"]) == len(events)
+    for i, (k, r, t, a) in enumerate(events):
+        assert int(cols["kind"][i]) == k
+        assert int(cols["region"][i]) == r
+        assert int(cols["t"][i]) == t
+        assert int(cols["aux"][i]) == a
