@@ -1,0 +1,93 @@
+"""JAX API-drift shims, applied once at import.
+
+The dist layer and its tests target the current jax surface
+(``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``).  Older jaxlib builds (the CPU wheels this container
+ships) predate those names; this module backfills them from their
+``jax.experimental`` ancestors so the same source runs on both.  Importing
+any ``repro.dist`` or ``repro.launch.mesh`` module installs the shims —
+including in the subprocess harness used by the multi-device tests, which
+imports ``repro.dist.*`` before touching a mesh.
+
+Everything here is a no-op on a jax that already has the real API.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _ensure_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType (Auto/Explicit/Manual)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _ensure_make_mesh() -> None:
+    orig = getattr(jax, "make_mesh", None)
+    if orig is None:
+        # Pre-0.4.35 jax: synthesize make_mesh from Mesh + device reshape.
+        import numpy as np
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            del axis_types
+            devices = list(jax.devices() if devices is None else devices)
+            n = int(np.prod(axis_shapes)) if axis_shapes else 1
+            grid = np.asarray(devices[:n]).reshape(axis_shapes)
+            return jax.sharding.Mesh(grid, axis_names)
+
+        jax.make_mesh = make_mesh
+        return
+    try:
+        params = inspect.signature(orig).parameters
+    except (TypeError, ValueError):  # C-accelerated signature: assume current
+        return
+    if "axis_types" in params:
+        return
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # pre-AxisType jax: every mesh axis is Auto
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _ensure_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, **kwargs):
+        # check_rep/check_vma predates the modern replication checker and
+        # rejects some valid collectives (masked psum of ppermute chains);
+        # outputs declared replicated here really are (psum-produced).
+        kwargs.setdefault("check_rep", False)
+        if f is None:
+            return functools.partial(
+                shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+            )
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def ensure_jax_compat() -> None:
+    _ensure_axis_type()
+    _ensure_make_mesh()
+    _ensure_shard_map()
+
+
+ensure_jax_compat()

@@ -28,6 +28,7 @@ from .measurement import (  # noqa: F401
     Measurement,
     MeasurementConfig,
     active,
+    current_topology,
     finalize,
     init,
     init_from_env,
@@ -37,10 +38,13 @@ from .measurement import (  # noqa: F401
 )
 from .regions import Region, RegionRegistry  # noqa: F401
 from .substrates import SUBSTRATES, make_substrate  # noqa: F401
+from .topology import ProcessTopology  # noqa: F401
 
 __all__ = [
     "Measurement",
     "MeasurementConfig",
+    "ProcessTopology",
+    "current_topology",
     "init",
     "init_from_env",
     "finalize",

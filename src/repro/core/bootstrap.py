@@ -31,6 +31,7 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 from .measurement import ENV_PREFIX, MeasurementConfig, finalize, init
+from .topology import ProcessTopology
 
 _BOOTSTRAP_MARKER = ENV_PREFIX + "BOOTSTRAPPED"
 
@@ -66,19 +67,15 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
-def _rank_from_env(environ) -> int:
-    for var in ("REPRO_MONITOR_RANK", "JAX_PROCESS_INDEX", "OMPI_COMM_WORLD_RANK", "PMI_RANK"):
-        if var in environ:
-            try:
-                return int(environ[var])
-            except ValueError:
-                pass
-    return 0
-
-
 def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
-    """Phase 1: build the child environment (the LD_PRELOAD analogue)."""
+    """Phase 1: build the child environment (the LD_PRELOAD analogue).
+
+    Topology (rank / world size / local rank / mesh) is detected from the
+    launcher environment — our own bootstrap vars, JAX distributed, Open
+    MPI, PMI — and re-serialized into the child env so phase 2 and any
+    further forks see a consistent view."""
     env = dict(environ)
+    topology = ProcessTopology.from_env(environ)
     config = MeasurementConfig(
         instrumenter=ns.instrumenter,
         substrates=tuple(s.strip() for s in ns.substrates.split(",") if s.strip()),
@@ -88,7 +85,8 @@ def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
         flush_threshold=ns.flush_events,
         sampling_period=ns.sampling_period,
         buffer_strategy=ns.buffer,
-        rank=_rank_from_env(environ),
+        rank=topology.rank,
+        topology=topology,
         experiment=ns.experiment,
         chrome_export=not ns.no_chrome,
     )

@@ -111,6 +111,11 @@ class NumpyEventBuffer:
 
     strategy = "numpy"
 
+    #: Hard ceiling on growth, as a multiple of flush_threshold.  Events
+    #: past it are dropped (counted in ``n_dropped``) rather than letting a
+    #: flush-callback feedback loop grow the buffer without bound.
+    MAX_GROWTH = 8
+
     def __init__(
         self,
         thread_id: int,
@@ -127,13 +132,39 @@ class NumpyEventBuffer:
         self._aux = np.empty(n, dtype=np.uint32)
         self.cursor = 0
         self.n_flushed = 0
+        self.n_dropped = 0
         self._flushing = False
 
     def __len__(self) -> int:
         return self.cursor
 
+    @property
+    def capacity(self) -> int:
+        return self._kind.shape[0]
+
+    def _grow(self) -> bool:
+        """Double the column arrays in place; False once MAX_GROWTH is hit."""
+        cap = self.capacity
+        if cap >= self.flush_threshold * self.MAX_GROWTH:
+            return False
+        new_cap = min(cap * 2, self.flush_threshold * self.MAX_GROWTH)
+        for name in ("_kind", "_region", "_t", "_aux"):
+            old = getattr(self, name)
+            arr = np.empty(new_cap, dtype=old.dtype)
+            arr[:cap] = old
+            setattr(self, name, arr)
+        return True
+
     def append(self, kind: int, region: int, t: int, aux: int) -> None:
         i = self.cursor
+        if i >= self.capacity:
+            # Appends can outrun the preallocated columns when a flush is in
+            # progress (the re-entrancy guard makes the threshold-triggered
+            # flush a no-op, so the cursor keeps climbing): grow, or drop
+            # once the growth ceiling is reached — never IndexError.
+            if not self._grow():
+                self.n_dropped += 1
+                return
         self._kind[i] = kind
         self._region[i] = region
         self._t[i] = t

@@ -32,8 +32,7 @@ from .filtering import Filter
 from .instrumenters import make_instrumenter
 from .regions import RegionRegistry
 from .substrates import make_substrate
-
-ENV_PREFIX = "REPRO_MONITOR_"
+from .topology import ENV_PREFIX, ProcessTopology  # noqa: F401  (re-exported)
 
 
 @dataclass
@@ -46,10 +45,25 @@ class MeasurementConfig:
     flush_threshold: int = 1 << 16
     sampling_period: int = 97
     buffer_strategy: str = "list"
-    rank: int = 0
+    # ``rank`` is kept as a convenience init arg; ``topology`` is the source
+    # of truth (rank + world size + local rank + mesh shape) and the two are
+    # synchronized in __post_init__.  ``rank=None`` (the default) means
+    # "take it from topology"; an explicit integer — including 0 — wins.
+    rank: Optional[int] = None
+    topology: Optional[ProcessTopology] = None
     experiment: str = "run"
     chrome_export: bool = True
     keep_series: bool = True
+
+    def __post_init__(self):
+        if self.topology is None:
+            # world size is unknown here; rank+1 is the smallest valid value
+            r = self.rank or 0
+            self.topology = ProcessTopology(rank=r, world_size=r + 1)
+        if self.rank is None:
+            self.rank = self.topology.rank
+        elif self.topology.rank != self.rank:
+            self.topology = self.topology.with_rank(self.rank)
 
     # -- env round-trip (used by the two-phase bootstrap) -------------------
 
@@ -58,6 +72,7 @@ class MeasurementConfig:
         def get(name, default):
             return environ.get(ENV_PREFIX + name, default)
 
+        topology = ProcessTopology.from_env(environ)
         return cls(
             instrumenter=get("INSTRUMENTER", cls.instrumenter),
             substrates=tuple(
@@ -71,7 +86,8 @@ class MeasurementConfig:
             flush_threshold=int(get("FLUSH", cls.flush_threshold)),
             sampling_period=int(get("SAMPLING_PERIOD", cls.sampling_period)),
             buffer_strategy=get("BUFFER", cls.buffer_strategy),
-            rank=int(get("RANK", cls.rank)),
+            rank=topology.rank,
+            topology=topology,
             experiment=get("EXPERIMENT", cls.experiment),
             chrome_export=get("CHROME", "1") not in ("0", "false", ""),
             keep_series=get("SERIES", "1") not in ("0", "false", ""),
@@ -86,11 +102,11 @@ class MeasurementConfig:
             ENV_PREFIX + "FLUSH": str(self.flush_threshold),
             ENV_PREFIX + "SAMPLING_PERIOD": str(self.sampling_period),
             ENV_PREFIX + "BUFFER": self.buffer_strategy,
-            ENV_PREFIX + "RANK": str(self.rank),
             ENV_PREFIX + "EXPERIMENT": self.experiment,
             ENV_PREFIX + "CHROME": "1" if self.chrome_export else "0",
             ENV_PREFIX + "SERIES": "1" if self.keep_series else "0",
         }
+        env.update(self.topology.to_env())  # RANK / WORLD_SIZE / LOCAL_RANK / MESH
         if self.run_dir:
             env[ENV_PREFIX + "RUN_DIR"] = self.run_dir
         return env
@@ -105,6 +121,7 @@ class Measurement:
         self.regions = RegionRegistry(decide=self.filter.decide)
         self._local = threading.local()
         self._buffers: List[Any] = []
+        self._buffer_tids: set = set()
         self._buffers_lock = threading.RLock()
         self._flush_lock = threading.RLock()
         self._substrates = []
@@ -122,7 +139,8 @@ class Measurement:
         self._buffer_cls = BUFFER_STRATEGIES[config.buffer_strategy]
         self.run_dir = config.run_dir or os.path.join(
             config.out_dir,
-            f"{config.experiment}-{time.strftime('%Y%m%d-%H%M%S')}-p{os.getpid()}-r{config.rank}",
+            f"{config.experiment}-{time.strftime('%Y%m%d-%H%M%S')}"
+            f"-p{os.getpid()}-{config.topology.tag()}",
         )
         self.started = False
         self.finalized = False
@@ -135,13 +153,19 @@ class Measurement:
         buf = getattr(self._local, "buf", None)
         if buf is None:
             tid = threading.get_ident()
-            buf = self._buffer_cls(
-                thread_id=tid,
-                flush_threshold=self.config.flush_threshold,
-                on_flush=self._on_flush,
-            )
-            self._local.buf = buf
             with self._buffers_lock:
+                # CPython reuses thread idents once a thread exits; each
+                # buffer must keep its own event stream (one OTF2 location
+                # per thread lifetime), so de-collide reused idents.
+                while tid in self._buffer_tids:
+                    tid += 1
+                self._buffer_tids.add(tid)
+                buf = self._buffer_cls(
+                    thread_id=tid,
+                    flush_threshold=self.config.flush_threshold,
+                    on_flush=self._on_flush,
+                )
+                self._local.buf = buf
                 self._buffers.append(buf)
         return buf
 
@@ -160,6 +184,7 @@ class Measurement:
         self.epoch_perf_ns = time.perf_counter_ns()
         meta = {
             "rank": self.config.rank,
+            "topology": self.config.topology.as_dict(),
             "pid": os.getpid(),
             "experiment": self.config.experiment,
             "instrumenter": self.config.instrumenter,
@@ -190,6 +215,7 @@ class Measurement:
             sub.close(region_table)
         meta = {
             "rank": self.config.rank,
+            "topology": self.config.topology.as_dict(),
             "pid": os.getpid(),
             "experiment": self.config.experiment,
             "instrumenter": self.config.instrumenter,
@@ -303,6 +329,16 @@ def metric(name: str, value: float) -> None:
     m = active()
     if m is not None:
         m.metric(name, value)
+
+
+def current_topology() -> ProcessTopology:
+    """This process's topology: the active measurement's when one is live,
+    otherwise detected from the launcher environment.  Dist modules use this
+    to annotate events without reaching into globals."""
+    m = _active
+    if m is not None:
+        return m.config.topology
+    return ProcessTopology.from_env()
 
 
 def instrument(fn=None, *, name: Optional[str] = None, module: str = "user"):

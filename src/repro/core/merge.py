@@ -38,11 +38,13 @@ def merge_runs(run_dirs: List[str], out_path: str) -> Dict[str, Any]:
     wall time: wall = epoch_time_ns + (t - epoch_perf_ns).
     """
     events = []
-    summary: Dict[str, Any] = {"ranks": [], "total_events": 0}
+    summary: Dict[str, Any] = {"ranks": [], "total_events": 0, "world_size": 1}
     for run_dir in run_dirs:
         defs, streams = load_run(run_dir)
         meta = defs["meta"]
-        rank = meta.get("rank", 0)
+        topo = meta.get("topology") or {}
+        rank = topo.get("rank", meta.get("rank", 0))
+        summary["world_size"] = max(summary["world_size"], topo.get("world_size", rank + 1))
         epoch_time = meta.get("epoch_time_ns", 0)
         epoch_perf = meta.get("epoch_perf_ns", 0)
         regions = defs["regions"]
@@ -71,7 +73,7 @@ def merge_runs(run_dirs: List[str], out_path: str) -> Dict[str, Any]:
                 )
                 n_rank_events += 1
         summary["ranks"].append(
-            {"rank": rank, "run_dir": run_dir, "events": n_rank_events}
+            {"rank": rank, "run_dir": run_dir, "events": n_rank_events, "topology": topo}
         )
         summary["total_events"] += n_rank_events
     events.sort(key=lambda e: e["ts"])

@@ -34,6 +34,23 @@ def _module_from_filename(filename: str) -> str:
     return stem
 
 
+def _qualname_via_gc(code) -> str:
+    """Qualified name on interpreters without ``co_qualname`` (< 3.11).
+
+    Walks the code object's referrers to the owning function and reads its
+    ``__qualname__`` (so ``f.<locals>.g`` keys match across Python
+    versions).  Runs only on the once-per-code-object intern miss path, so
+    the gc walk is off the per-event fast path."""
+    import gc
+
+    for ref in gc.get_referrers(code):
+        if getattr(ref, "__code__", None) is code:
+            qualname = getattr(ref, "__qualname__", None)
+            if qualname:
+                return qualname
+    return code.co_name
+
+
 @dataclass(frozen=True)
 class Region:
     """One entry of the region-definition table."""
@@ -105,7 +122,7 @@ class RegionRegistry:
                 module = frame.f_globals.get("__name__", "?")
             else:
                 module = _module_from_filename(code.co_filename)
-            name = getattr(code, "co_qualname", None) or code.co_name
+            name = getattr(code, "co_qualname", None) or _qualname_via_gc(code)
             rid = self._intern(name, module, code.co_filename, code.co_firstlineno, KIND_PYTHON)
             self.by_code[code] = rid
             return rid

@@ -1,0 +1,137 @@
+"""Process topology — who am I in the parallel job?
+
+The paper's measurement system must "cope with highly parallel programs"
+across core, node, and inter-node levels; the Python-side equivalent of
+Score-P's location/location-group model is one :class:`ProcessTopology` per
+process: (rank, world size, local rank, mesh shape).  Everything that used
+to take a bare ``rank: int`` — measurement config, run-dir naming, trace
+merge, the dist modules' event annotations — threads this object instead,
+so no layer reaches into globals or re-parses launcher env vars.
+
+This module is deliberately jax-free: the monitoring core must import
+without a device runtime (paper §2: the bootstrap runs before the target
+application's imports).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Mapping, Optional, Tuple
+
+ENV_PREFIX = "REPRO_MONITOR_"
+
+#: Launcher variables consulted (first hit wins), mirroring Score-P's MPP
+#: detection order: our own bootstrap env, JAX distributed, Open MPI, PMI,
+#: then the generic torchrun-style names.
+_RANK_VARS = (ENV_PREFIX + "RANK", "JAX_PROCESS_INDEX", "OMPI_COMM_WORLD_RANK",
+              "PMI_RANK", "RANK")
+_WORLD_VARS = (ENV_PREFIX + "WORLD_SIZE", "JAX_NUM_PROCESSES", "OMPI_COMM_WORLD_SIZE",
+               "PMI_SIZE", "WORLD_SIZE")
+_LOCAL_VARS = (ENV_PREFIX + "LOCAL_RANK", "OMPI_COMM_WORLD_LOCAL_RANK", "LOCAL_RANK")
+_MESH_VAR = ENV_PREFIX + "MESH"
+
+
+def _first_int(environ: Mapping[str, str], names, default: int) -> int:
+    for name in names:
+        value = environ.get(name)
+        if value in (None, ""):
+            continue
+        try:
+            return int(value)
+        except ValueError:
+            continue
+    return default
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessTopology:
+    """Immutable description of this process's place in the job."""
+
+    rank: int = 0
+    world_size: int = 1
+    local_rank: int = 0
+    mesh_shape: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.rank < 0 or self.local_rank < 0 or self.world_size < 1:
+            raise ValueError(f"invalid topology {self}")
+
+    # -- identity ------------------------------------------------------------
+
+    @property
+    def is_primary(self) -> bool:
+        return self.rank == 0
+
+    @property
+    def n_devices_expected(self) -> int:
+        n = 1
+        for d in self.mesh_shape:
+            n *= d
+        return n
+
+    def tag(self) -> str:
+        """Run-dir / display tag: ``r3of8`` (``r0`` for single-process)."""
+        if self.world_size <= 1:
+            return f"r{self.rank}"
+        return f"r{self.rank}of{self.world_size}"
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "rank": self.rank,
+            "world_size": self.world_size,
+            "local_rank": self.local_rank,
+            "mesh_shape": list(self.mesh_shape),
+        }
+
+    # -- env round-trip (two-phase bootstrap, fork-based launchers) ----------
+
+    @classmethod
+    def from_env(cls, environ: Optional[Mapping[str, str]] = None) -> "ProcessTopology":
+        e = os.environ if environ is None else environ
+        rank = _first_int(e, _RANK_VARS, 0)
+        world = _first_int(e, _WORLD_VARS, 1)
+        local = _first_int(e, _LOCAL_VARS, rank)
+        mesh = parse_mesh_shape(e.get(_MESH_VAR, ""))
+        return cls(rank=rank, world_size=max(world, rank + 1), local_rank=local, mesh_shape=mesh)
+
+    def to_env(self) -> Dict[str, str]:
+        env = {
+            ENV_PREFIX + "RANK": str(self.rank),
+            ENV_PREFIX + "WORLD_SIZE": str(self.world_size),
+            ENV_PREFIX + "LOCAL_RANK": str(self.local_rank),
+        }
+        if self.mesh_shape:
+            env[_MESH_VAR] = format_mesh_shape(self.mesh_shape)
+        return env
+
+    # -- mesh binding (duck-typed: anything with .shape mapping works) -------
+
+    def with_mesh(self, mesh) -> "ProcessTopology":
+        """Topology annotated with the device-mesh shape this process drives."""
+        shape = getattr(mesh, "shape", mesh)
+        if hasattr(shape, "values"):
+            shape = tuple(shape.values())
+        return dataclasses.replace(self, mesh_shape=tuple(int(d) for d in shape))
+
+    def with_rank(self, rank: int) -> "ProcessTopology":
+        return dataclasses.replace(
+            self, rank=rank, world_size=max(self.world_size, rank + 1)
+        )
+
+
+def parse_mesh_shape(spec: str) -> Tuple[int, ...]:
+    """Parse ``"2x16x16"`` (or ``"2,16,16"``) into ``(2, 16, 16)``."""
+    spec = spec.strip()
+    if not spec:
+        return ()
+    parts = spec.replace(",", "x").split("x")
+    try:
+        shape = tuple(int(p) for p in parts if p)
+    except ValueError:
+        return ()
+    return shape if all(d > 0 for d in shape) else ()
+
+
+def format_mesh_shape(shape: Tuple[int, ...]) -> str:
+    return "x".join(str(d) for d in shape)

@@ -1,0 +1,102 @@
+"""Straggler watchdog — per-step duration monitoring with mitigation hooks.
+
+Every observed step feeds the metrics substrate (``train.step_s``); steps
+slower than ``threshold`` x the windowed median are flagged
+(``straggler.ratio``), and ``evict_after`` consecutive flags trigger one
+mitigation event — the hook the elastic-mesh restart path (and tests) hang
+off.  Flagged samples never enter the baseline window, so a stuck host
+cannot normalize itself.
+
+Events are annotated with this process's :class:`ProcessTopology`, not a
+bare rank: the merged multi-rank view needs (rank, world) to attribute a
+slow step to a host.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+import repro.core as rmon
+from repro.core.topology import ProcessTopology
+
+
+@dataclass(frozen=True)
+class StragglerConfig:
+    window: int = 64  # baseline samples kept
+    threshold: float = 2.0  # flag when dt > threshold * median(window)
+    evict_after: int = 5  # consecutive flags before a mitigation fires
+    min_samples: int = 8  # no flagging until the window has this many
+    metric: str = "train.step_s"  # per-step metric name fed to the substrate
+
+
+class StragglerWatchdog:
+    """Observe per-step wall times; flag and (synthetically) mitigate.
+
+    ``observe(step, dt)`` returns True when the step was flagged.  The
+    ``on_straggler`` callback receives one dict per mitigation (not per
+    flag): {step, ratio, duration_s, baseline_s, rank, world_size}.
+    """
+
+    def __init__(
+        self,
+        config: Optional[StragglerConfig] = None,
+        *,
+        on_straggler: Optional[Callable[[Dict], None]] = None,
+        topology: Optional[ProcessTopology] = None,
+    ):
+        self.config = config or StragglerConfig()
+        self.on_straggler = on_straggler
+        self.topology = topology or rmon.current_topology()
+        self._window = deque(maxlen=self.config.window)
+        self.observed = 0
+        self.flags = 0
+        self.mitigations = 0
+        self._streak = 0
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        cfg = self.config
+        self.observed += 1
+        rmon.metric(cfg.metric, duration_s)
+        baseline = (
+            float(np.median(self._window)) if len(self._window) >= cfg.min_samples else None
+        )
+        flagged = baseline is not None and baseline > 0 and duration_s > cfg.threshold * baseline
+        if not flagged:
+            self._streak = 0
+            self._window.append(duration_s)
+            return False
+
+        ratio = duration_s / baseline
+        self.flags += 1
+        self._streak += 1
+        rmon.metric("straggler.ratio", ratio)
+        if self._streak == cfg.evict_after:
+            self.mitigations += 1
+            rmon.metric("straggler.mitigations", float(self.mitigations))
+            event = {
+                "step": step,
+                "ratio": ratio,
+                "duration_s": duration_s,
+                "baseline_s": baseline,
+                "rank": self.topology.rank,
+                "world_size": self.topology.world_size,
+                "mitigation": "evict",
+            }
+            if self.on_straggler is not None:
+                self.on_straggler(event)
+        return True
+
+    def summary(self) -> Dict[str, float]:
+        window = list(self._window)
+        return {
+            "observed": self.observed,
+            "flags": self.flags,
+            "mitigations": self.mitigations,
+            "rank": self.topology.rank,
+            "baseline_p50_s": float(np.median(window)) if window else 0.0,
+            "baseline_mean_s": float(np.mean(window)) if window else 0.0,
+        }

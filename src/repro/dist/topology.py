@@ -1,0 +1,14 @@
+"""Topology re-export for the dist layer.
+
+:class:`ProcessTopology` lives in ``repro.core.topology`` (the monitoring
+core must stay jax-free); the dist layer is its main consumer, so it is
+re-exported here alongside the env helpers.
+"""
+
+from repro.core.topology import (  # noqa: F401
+    ProcessTopology,
+    format_mesh_shape,
+    parse_mesh_shape,
+)
+
+__all__ = ["ProcessTopology", "parse_mesh_shape", "format_mesh_shape"]

@@ -97,6 +97,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> Dict[str, 
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
+    record["topology"] = rmon.current_topology().with_mesh(mesh).as_dict()
     t0 = time.time()
     try:
         with rmon.region(f"lower:{arch}:{shape}:{mesh_name}", module="dryrun"):

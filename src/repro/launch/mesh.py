@@ -5,6 +5,8 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
+from repro import _compat  # noqa: F401  (jax API shims: axis_types, shard_map)
+
 import jax
 import numpy as np
 
@@ -47,3 +49,23 @@ def make_pipeline_mesh(n_stages: int, n_data: int):
 
 def describe(mesh) -> str:
     return f"mesh{tuple(mesh.shape.values())} axes={mesh.axis_names} devices={mesh.devices.size}"
+
+
+def elastic_setup(cfg, topology, use_mesh: bool):
+    """Common driver bootstrap: resolve the elastic mesh (when requested and
+    >1 device is visible), install activation sharding on the config, and
+    bind the mesh shape into the topology.
+
+    Returns ``(cfg, mesh, mesh_ctx, topology)`` where ``mesh`` is None on
+    the single-device path and ``mesh_ctx()`` yields the context the jitted
+    step must be *called* under — activation PartitionSpec constraints
+    resolve against the ambient mesh at trace time, not jit-creation time.
+    """
+    import contextlib
+
+    from repro.dist.train import with_act_sharding
+
+    if use_mesh and len(jax.devices()) > 1:
+        mesh = make_elastic_mesh()
+        return with_act_sharding(cfg, mesh), mesh, (lambda: mesh), topology.with_mesh(mesh)
+    return cfg, None, contextlib.nullcontext, topology

@@ -16,7 +16,8 @@ import numpy as np
 
 import repro.core as rmon
 from repro.configs import get_config, get_smoke_config
-from repro.models import decode_step, lm_init, prefill
+from repro.dist import serve as dserve
+from repro.models import lm_init
 
 
 def serve(
@@ -26,24 +27,35 @@ def serve(
     prompt_len: int = 32,
     gen: int = 32,
     seed: int = 0,
+    use_mesh: bool = False,
 ) -> Dict[str, Any]:
+    from repro.launch.mesh import elastic_setup
+
+    cfg, mesh, mesh_ctx, topology = elastic_setup(cfg, rmon.current_topology(), use_mesh)
+
     key = jax.random.PRNGKey(seed)
     with rmon.region("init", module="serve"):
         params = lm_init(key, cfg)
+        if mesh is not None:
+            from repro.dist import sharding as shd
+
+            params = jax.device_put(params, shd.params_shardings(mesh, params))
     max_len = prompt_len + gen + (cfg.frontend.n_tokens if cfg.frontend else 0)
     prompts = jax.random.randint(key, (batch, prompt_len), 2, cfg.vocab)
-    kw = {}
+    host_batch = {"tokens": prompts}
     if cfg.frontend is not None:
-        kw["patches"] = jax.random.normal(key, (batch, cfg.frontend.n_tokens, cfg.frontend.dim), jnp.bfloat16)
+        host_batch["patches"] = jax.random.normal(
+            key, (batch, cfg.frontend.n_tokens, cfg.frontend.dim), jnp.bfloat16)
     if cfg.encoder is not None:
-        kw["frames"] = jax.random.normal(key, (batch, cfg.encoder.source_len, cfg.d_model), jnp.bfloat16)
+        host_batch["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder.source_len, cfg.d_model), jnp.bfloat16)
 
-    prefill_fn = jax.jit(lambda p, t: prefill(cfg, p, t, max_len, **kw))
-    decode_fn = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    prefill_fn = jax.jit(dserve.make_prefill_step(cfg, max_len))
+    decode_fn = jax.jit(dserve.make_decode_step(cfg))
 
     t0 = time.perf_counter()
-    with rmon.region("prefill", module="serve"):
-        logits, cache = jax.block_until_ready(prefill_fn(params, prompts))
+    with rmon.region("prefill", module="serve"), mesh_ctx():
+        logits, cache = jax.block_until_ready(prefill_fn(params, host_batch))
     t_prefill = time.perf_counter() - t0
     rmon.metric("serve.prefill_ms", t_prefill * 1e3)
 
@@ -51,7 +63,7 @@ def serve(
     generated = [tok]
     t1 = time.perf_counter()
     for i in range(gen - 1):
-        with rmon.region("decode_step", module="serve"):
+        with rmon.region("decode_step", module="serve"), mesh_ctx():
             logits, cache = decode_fn(params, cache, tok)
             logits = jax.block_until_ready(logits)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -68,6 +80,7 @@ def serve(
         "decode_tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
         "finite": bool(np.all(np.isfinite(np.asarray(logits)))),
         "sample_tokens": np.asarray(out[0, :8]).tolist(),
+        "topology": topology.as_dict(),
     }
 
 
@@ -78,9 +91,11 @@ def main(argv=None) -> int:
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--mesh", action="store_true")
     ns = p.parse_args(argv)
     cfg = get_smoke_config(ns.arch) if ns.smoke else get_config(ns.arch)
-    result = serve(cfg, batch=ns.batch, prompt_len=ns.prompt_len, gen=ns.gen)
+    result = serve(cfg, batch=ns.batch, prompt_len=ns.prompt_len, gen=ns.gen,
+                   use_mesh=ns.mesh)
     print(result)
     return 0 if result["finite"] else 1
 

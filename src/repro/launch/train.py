@@ -31,7 +31,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.data import DataConfig, Prefetcher, SyntheticLM
 from repro.dist import sharding as shd
 from repro.dist.straggler import StragglerWatchdog
-from repro.dist.train import make_train_step, with_act_sharding
+from repro.dist.train import make_train_step
 from repro.models import lm_init
 from repro.models.lm import padded_vocab
 from repro.optim import adamw
@@ -65,12 +65,11 @@ def train(
     abort_at_step: Optional[int] = None,  # simulate a crash (no final save)
 ) -> Dict[str, Any]:
     opt_cfg = adamw.AdamWConfig(lr=lr, schedule=adamw.cosine_schedule(max(steps // 10, 1), steps))
-    mesh = None
-    if use_mesh and len(jax.devices()) > 1:
-        from repro.launch.mesh import make_elastic_mesh
+    from repro.launch.mesh import elastic_setup
 
-        mesh = make_elastic_mesh()
-        cfg = with_act_sharding(cfg, mesh)
+    cfg, mesh, mesh_ctx, topology = elastic_setup(cfg, rmon.current_topology(), use_mesh)
+    if topology.world_size > 1 or topology.mesh_shape:
+        print(f"topology: {topology.tag()} mesh={topology.mesh_shape or '(none)'}")
 
     with rmon.region("init", module="train"):
         params = lm_init(jax.random.PRNGKey(seed), cfg)
@@ -95,16 +94,16 @@ def train(
             params, opt_state = state["params"], state["opt"]
             print(f"resumed from checkpoint at step {start_step}")
 
-    step_fn = make_train_step(cfg, opt_cfg)
-    if mesh is not None:
-        with mesh:
-            step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-    else:
-        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
 
     data = SyntheticLM(build_data_config(cfg, global_batch, seq_len, seed))
     prefetch = Prefetcher(data.batch, start_step=start_step)
-    watchdog = StragglerWatchdog()
+    watchdog = StragglerWatchdog(
+        topology=topology,
+        on_straggler=lambda ev: print(
+            f"straggler: step {ev['step']} {ev['ratio']:.1f}x baseline on rank {ev['rank']}"
+        ),
+    )
 
     losses = []
     t_train0 = time.perf_counter()
@@ -117,7 +116,7 @@ def train(
             if "frames" in batch:
                 batch["frames"] = batch["frames"].astype(jnp.bfloat16)
             t0 = time.perf_counter()
-            with rmon.region("train_step", module="train"):
+            with rmon.region("train_step", module="train"), mesh_ctx():
                 params, opt_state, stats = step_fn(params, opt_state, batch)
                 stats = jax.block_until_ready(stats)
             dt = time.perf_counter() - t0
@@ -165,6 +164,7 @@ def train(
         "first_loss": losses[0] if losses else None,
         "wall_s": wall,
         "straggler": watchdog.summary(),
+        "topology": topology.as_dict(),
     }
     return result
 

@@ -75,6 +75,38 @@ def test_flush_reentrancy_guard():
     assert len(buf.events) == 1  # the event appended during flush survives
 
 
+def test_numpy_buffer_append_during_flush_grows_instead_of_crashing():
+    # Regression: appends issued while a flush is in progress (re-entrancy
+    # guard active) used to march the cursor past the preallocated capacity
+    # and the next append raised IndexError.  Now the columns grow.
+    buf = NumpyEventBuffer(thread_id=0, flush_threshold=4, on_flush=None)
+
+    def on_flush(tid, cols):
+        for i in range(6):  # more than a full buffer's worth, mid-flush
+            buf.append(EV_ENTER, 100 + i, i, 0)
+
+    buf.on_flush = on_flush
+    for i in range(4):  # 4th append triggers the flush -> re-entrant appends
+        buf.append(EV_ENTER, i, i, 0)
+    assert len(buf) == 6  # survived past flush_threshold without flushing
+    assert buf.capacity >= 6
+    assert buf.n_dropped == 0
+    buf.on_flush = lambda tid, cols: None
+    buf.flush()
+    assert buf.n_flushed == 10
+    assert len(buf) == 0
+
+
+def test_numpy_buffer_drops_at_growth_ceiling():
+    buf = NumpyEventBuffer(thread_id=0, flush_threshold=2, on_flush=None)
+    buf._flushing = True  # simulate a wedged flush: nothing ever drains
+    limit = 2 * NumpyEventBuffer.MAX_GROWTH
+    for i in range(limit + 5):
+        buf.append(EV_ENTER, i, i, 0)
+    assert len(buf) == limit
+    assert buf.n_dropped == 5  # bounded memory: excess events are dropped
+
+
 def test_columns_from_empty():
     cols = columns_from_events([])
     assert all(len(v) == 0 for v in cols.values())

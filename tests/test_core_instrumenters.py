@@ -98,6 +98,10 @@ def test_sampling_instrumenter_subsamples(tmp_path):
     assert t0["orphan_exits"] == 0 and t0["mismatched_exits"] == 0  # balanced
 
 
+@pytest.mark.skipif(
+    not hasattr(__import__("sys"), "monitoring"),
+    reason="sys.monitoring (PEP 669) needs Python 3.12+",
+)
 def test_monitoring_instrumenter_counts(tmp_path):
     prof = _run_workload("monitoring", tmp_path)
     flat = _flat(prof)

@@ -39,7 +39,16 @@ def test_case_sources_execute():
         assert glb["result"] == 100
 
 
-@pytest.mark.parametrize("instrumenter", ["none", "profile", "monitoring"])
+needs_sys_monitoring = pytest.mark.skipif(
+    not hasattr(__import__("sys"), "monitoring"),
+    reason="sys.monitoring (PEP 669) needs Python 3.12+",
+)
+
+
+@pytest.mark.parametrize(
+    "instrumenter",
+    ["none", "profile", pytest.param("monitoring", marks=needs_sys_monitoring)],
+)
 def test_inprocess_beta_positive_and_ordered(instrumenter):
     # Small Ns keep this fast; we only check basic sanity here — the real
     # numbers come from benchmarks/overhead_case*.py.

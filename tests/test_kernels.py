@@ -7,9 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ops, ref
+hypothesis = pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ops, ref  # noqa: E402
 
 
 def _rand(key, shape, dtype=jnp.float32, scale=1.0):

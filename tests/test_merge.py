@@ -1,0 +1,90 @@
+"""core/merge.py coverage: find_runs experiment filtering + merge_runs clock
+alignment across synthetic run dirs with skewed epochs (no live measurement —
+the run dirs are written by hand so the clock math is fully controlled)."""
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.buffer import EV_ENTER, EV_EXIT
+from repro.core.merge import find_runs, merge_runs
+
+MS = 1_000_000  # ns
+
+
+def _write_run(root, name, rank, epoch_time_ns, epoch_perf_ns, events, world_size=2):
+    """Materialize a minimal trace run dir (defs.json + one stream)."""
+    run_dir = os.path.join(str(root), name)
+    os.makedirs(run_dir)
+    cols = np.asarray(events, dtype=np.uint64)
+    np.savez_compressed(
+        os.path.join(run_dir, "stream_t0.npz"),
+        kind=cols[:, 0].astype(np.uint8),
+        region=cols[:, 1].astype(np.int32),
+        t=cols[:, 2],
+        aux=cols[:, 3].astype(np.uint32),
+    )
+    defs = {
+        "meta": {
+            "rank": rank,
+            "topology": {"rank": rank, "world_size": world_size,
+                         "local_rank": rank, "mesh_shape": []},
+            "epoch_time_ns": epoch_time_ns,
+            "epoch_perf_ns": epoch_perf_ns,
+        },
+        "streams": {"0": {"file": "stream_t0.npz", "events": len(events)}},
+        "regions": [{"name": f"rank{rank}_work", "module": "test"}],
+    }
+    with open(os.path.join(run_dir, "defs.json"), "w") as fh:
+        json.dump(defs, fh)
+    return run_dir
+
+
+def test_find_runs_filters_by_experiment(tmp_path):
+    a = _write_run(tmp_path, "expA-1-r0", 0, 0, 0, [(EV_ENTER, 0, 10, 0)])
+    _write_run(tmp_path, "expB-1-r0", 0, 0, 0, [(EV_ENTER, 0, 10, 0)])
+    os.makedirs(tmp_path / "expA-not-a-run")  # dir without defs.json: ignored
+    (tmp_path / "expA-file").write_text("plain file, also ignored")
+
+    assert find_runs(str(tmp_path)) == sorted(
+        [a, str(tmp_path / "expB-1-r0")]
+    )
+    assert find_runs(str(tmp_path), "expA") == [a]
+    assert find_runs(str(tmp_path), "expC") == []
+
+
+def test_merge_runs_aligns_skewed_epochs(tmp_path):
+    """Two ranks whose perf_counter epochs differ wildly but whose wall
+    clocks interleave: merge must order events by aligned wall time, i.e.
+    epoch_time_ns + (t - epoch_perf_ns)."""
+    # rank 0: perf epoch 500ns at wall 1_000ms; events at wall +0ms, +4ms
+    run0 = _write_run(
+        tmp_path, "skew-r0", 0,
+        epoch_time_ns=1_000 * MS, epoch_perf_ns=500,
+        events=[(EV_ENTER, 0, 500, 0), (EV_EXIT, 0, 500 + 4 * MS, 0)],
+    )
+    # rank 1: perf epoch 900_000ns at wall 1_002ms; events at wall +0ms, +6ms
+    run1 = _write_run(
+        tmp_path, "skew-r1", 1,
+        epoch_time_ns=1_002 * MS, epoch_perf_ns=900_000,
+        events=[(EV_ENTER, 0, 900_000, 0), (EV_EXIT, 0, 900_000 + 6 * MS, 0)],
+    )
+    out = str(tmp_path / "merged.json")
+    summary = merge_runs([run0, run1], out)
+
+    assert summary["total_events"] == 4
+    assert summary["world_size"] == 2
+    assert {r["rank"] for r in summary["ranks"]} == {0, 1}
+    assert all(r["topology"]["world_size"] == 2 for r in summary["ranks"])
+
+    with open(out) as fh:
+        events = json.load(fh)["traceEvents"]
+    # expected wall-clock order (chrome ts is in microseconds):
+    #   r0 enter @1000ms, r1 enter @1002ms, r0 exit @1004ms, r1 exit @1008ms
+    assert [(e["pid"], e["ph"]) for e in events] == [
+        (0, "B"), (1, "B"), (0, "E"), (1, "E"),
+    ]
+    ts = [e["ts"] for e in events]
+    assert ts == sorted(ts)
+    np.testing.assert_allclose(ts, [1_000_000.0, 1_002_000.0, 1_004_000.0, 1_008_000.0])

@@ -4,7 +4,10 @@ import json
 import os
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.buffer import EV_ENTER, EV_EXIT, columns_from_events
 from repro.core.overhead import fit_linear
