@@ -1,0 +1,238 @@
+"""Trace-export benchmark — naive per-event exporter vs the streaming engine.
+
+The historical Chrome export built one Python dict per event and handed the
+whole list to ``json.dump`` (kept below as ``_export_naive``, the reference
+implementation).  The streaming engine (``repro.core.export``) encodes events
+in numpy bulk operations, chunk by chunk.  This benchmark writes a synthetic
+multi-stream run directory (~2M span events by default), exports it through
+both paths, verifies the span content is equivalent, and reports events/s,
+output bytes, and the peak Python-allocation footprint of each exporter
+(tracemalloc; numpy buffers are traced too) — the naive path peaks O(total
+events), the engine O(chunk).
+
+    PYTHONPATH=src python benchmarks/trace_export.py            # full run, asserts >=10x
+    PYTHONPATH=src python benchmarks/trace_export.py --smoke    # small, correctness only
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import tracemalloc
+from typing import Optional
+
+import numpy as np
+
+from repro.core.buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
+from repro.core.export import export_run
+from repro.core.substrates.tracing import load_run
+
+
+def make_synthetic_run(
+    run_dir: str,
+    n_events: int = 2_000_000,
+    n_regions: int = 64,
+    n_streams: int = 4,
+    seed: int = 0,
+) -> str:
+    """Materialize a trace run dir with ``n_events`` balanced B/E events.
+
+    Streams are written uncompressed (np.savez) so both exporters pay the
+    same negligible load cost and the benchmark isolates export throughput.
+    """
+    os.makedirs(run_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    regions = [
+        {"name": f"pkg.mod_{i % 7}:func_{i}", "module": f"pkg.mod_{i % 7}"}
+        for i in range(n_regions)
+    ]
+    per_stream = n_events // n_streams
+    pairs = per_stream // 2
+    streams = {}
+    epoch_perf = 1_000_000
+    for s in range(n_streams):
+        tid = 1000 + s
+        rids = rng.integers(0, n_regions, pairs).astype(np.int32)
+        kind_enter = np.where(rng.random(pairs) < 0.25, EV_C_ENTER, EV_ENTER)
+        kind_exit = np.where(kind_enter == EV_C_ENTER, EV_C_EXIT, EV_EXIT)
+        kinds = np.empty(pairs * 2, dtype=np.uint8)
+        kinds[0::2] = kind_enter
+        kinds[1::2] = kind_exit
+        region = np.repeat(rids, 2).astype(np.int32)
+        t = (
+            epoch_perf + np.cumsum(rng.integers(40, 900, pairs * 2))
+        ).astype(np.uint64)
+        aux = np.zeros(pairs * 2, dtype=np.uint32)
+        path = os.path.join(run_dir, f"stream_t{tid}.npz")
+        np.savez(path, kind=kinds, region=region, t=t, aux=aux)
+        streams[str(tid)] = {"file": os.path.basename(path), "events": pairs * 2}
+    defs = {
+        "meta": {
+            "rank": 0,
+            "topology": {"rank": 0, "world_size": 1, "local_rank": 0, "mesh_shape": []},
+            "experiment": "bench",
+            "epoch_time_ns": 1_700_000_000_000_000_000,
+            "epoch_perf_ns": epoch_perf,
+        },
+        "streams": streams,
+        "regions": regions,
+    }
+    with open(os.path.join(run_dir, "defs.json"), "w") as fh:
+        json.dump(defs, fh)
+    series_t = (epoch_perf + np.arange(200) * 1_000_000).tolist()
+    with open(os.path.join(run_dir, "metrics.json"), "w") as fh:
+        json.dump(
+            {"series": {"bench.step_ms": [[int(t), float(i % 17)] for i, t in enumerate(series_t)]}},
+            fh,
+        )
+    return run_dir
+
+
+def _export_naive(run_dir: str, out_path: Optional[str] = None) -> str:
+    """Reference exporter: the historical per-event pure-Python path
+    (one dict per event, whole trace in memory, single json.dump)."""
+    defs, streams = load_run(run_dir)
+    regions = defs["regions"]
+    pid = defs["meta"].get("rank", 0)
+    events = []
+    for tid, cols in streams.items():
+        kinds, rids, ts = cols["kind"], cols["region"], cols["t"]
+        for i in range(len(kinds)):
+            k = int(kinds[i])
+            if k in (EV_ENTER, EV_C_ENTER):
+                ph = "B"
+            elif k in (EV_EXIT, EV_C_EXIT):
+                ph = "E"
+            else:
+                continue
+            r = regions[int(rids[i])]
+            events.append(
+                {
+                    "name": r["name"],
+                    "cat": r["module"],
+                    "ph": ph,
+                    "ts": int(ts[i]) / 1000.0,  # chrome expects microseconds
+                    "pid": pid,
+                    "tid": tid,
+                }
+            )
+    doc = {"traceEvents": events, "displayTimeUnit": "ms"}
+    out_path = out_path or os.path.join(run_dir, "trace_naive.json")
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh)
+    return out_path
+
+
+def _strict_load(path: str):
+    def _reject(token):
+        raise ValueError(f"non-strict JSON constant {token!r} in {path}")
+
+    with open(path) as fh:
+        return json.load(fh, parse_constant=_reject)
+
+
+def check_equivalence(engine_path: str, naive_path: str) -> int:
+    """Spans from both exporters must carry byte-equivalent event content
+    (canonical re-serialization; the engine additionally emits metadata and
+    counter events, which the naive path never had)."""
+    engine = _strict_load(engine_path)["traceEvents"]
+    naive = _strict_load(naive_path)["traceEvents"]
+    spans = [e for e in engine if e["ph"] in ("B", "E")]
+    if len(spans) != len(naive):
+        raise AssertionError(f"span count mismatch: {len(spans)} != {len(naive)}")
+    for a, b in zip(spans, naive):
+        ca = json.dumps(a, sort_keys=True)
+        cb = json.dumps(b, sort_keys=True)
+        if ca != cb:
+            raise AssertionError(f"event content mismatch:\n  engine {ca}\n  naive  {cb}")
+    if not any(e["ph"] == "M" for e in engine):
+        raise AssertionError("engine output missing metadata events")
+    if not any(e["ph"] == "C" for e in engine):
+        raise AssertionError("engine output missing counter events")
+    return len(spans)
+
+
+def _timed(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def _traced_peak(fn, *args) -> int:
+    tracemalloc.start()
+    try:
+        fn(*args)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    return peak
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--events", type=int, default=2_000_000)
+    p.add_argument("--smoke", action="store_true",
+                   help="small trace, correctness checks only (CI)")
+    p.add_argument("--no-mem", action="store_true", help="skip the tracemalloc pass")
+    p.add_argument("--run-dir", default=None)
+    p.add_argument("--out", default="benchmarks/artifacts/trace_export.json")
+    ns = p.parse_args(argv)
+
+    n_events = 40_000 if ns.smoke else ns.events
+    import tempfile
+
+    run_dir = ns.run_dir or tempfile.mkdtemp(prefix="repro-trace-export-")
+    print(f"generating synthetic run: {n_events} events -> {run_dir}")
+    make_synthetic_run(run_dir, n_events=n_events)
+
+    engine_path = os.path.join(run_dir, "trace.json")
+    naive_path = os.path.join(run_dir, "trace_naive.json")
+
+    t_engine = _timed(export_run, run_dir, engine_path)
+    t_naive = _timed(_export_naive, run_dir, naive_path)
+    n_spans = check_equivalence(engine_path, naive_path)
+
+    engine_eps = n_spans / t_engine
+    naive_eps = n_spans / t_naive
+    ratio = engine_eps / naive_eps
+    print(f"engine : {t_engine:8.3f}s  {engine_eps:12,.0f} events/s")
+    print(f"naive  : {t_naive:8.3f}s  {naive_eps:12,.0f} events/s")
+    print(f"speedup: {ratio:8.2f}x   ({n_spans} span events, content equivalent)")
+
+    doc = {
+        "n_span_events": n_spans,
+        "engine_s": t_engine,
+        "naive_s": t_naive,
+        "engine_events_per_s": engine_eps,
+        "naive_events_per_s": naive_eps,
+        "speedup": ratio,
+        "smoke": ns.smoke,
+    }
+    if not ns.no_mem:
+        peak_engine = _traced_peak(export_run, run_dir, engine_path)
+        peak_naive = _traced_peak(_export_naive, run_dir, naive_path)
+        doc["peak_bytes_engine"] = peak_engine
+        doc["peak_bytes_naive"] = peak_naive
+        print(f"peak python allocations: engine {peak_engine / 1e6:,.1f} MB "
+              f"vs naive {peak_naive / 1e6:,.1f} MB "
+              f"({peak_naive / max(peak_engine, 1):.1f}x)")
+
+    os.makedirs(os.path.dirname(ns.out), exist_ok=True)
+    with open(ns.out, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    print(f"wrote {ns.out}")
+
+    if not ns.smoke:
+        assert ratio >= 10.0, (
+            f"streaming engine speedup {ratio:.1f}x below the 10x floor"
+        )
+        assert doc.get("peak_bytes_engine", 0) <= doc.get("peak_bytes_naive", 1), (
+            "engine peak memory exceeds naive peak"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -71,13 +71,12 @@ def main() -> int:
     for proc in procs:
         assert proc.wait() == 0
 
+    from repro.core.analysis import render_merge_summary
     from repro.core.merge import find_runs, merge_runs
 
     runs = find_runs(root, "mp")
     summary = merge_runs(runs, os.path.join(root, "merged_trace.json"))
-    print(f"merged {summary['total_events']} events from ranks "
-          f"{sorted(r['rank'] for r in summary['ranks'])}")
-    print("merged trace:", summary["out"])
+    print(render_merge_summary(summary))
     print("open it in chrome://tracing — rank 1 runs ~2x longer per step "
           "(the skew is visible in the timeline, paper Fig. 3 style)")
     return 0

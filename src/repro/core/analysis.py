@@ -4,6 +4,7 @@ comparison is programmatic and drives the §Perf loop).
 
     PYTHONPATH=src python -m repro.core.analysis diff RUN_A RUN_B
     PYTHONPATH=src python -m repro.core.analysis top RUN_DIR
+    PYTHONPATH=src python -m repro.core.analysis merge-summary SUMMARY_JSON
 """
 
 from __future__ import annotations
@@ -48,7 +49,9 @@ def diff_profiles(run_a: str, run_b: str, min_ns: int = 0) -> List[Dict[str, Any
                 "excl_ns_a": ea,
                 "excl_ns_b": eb,
                 "delta_ns": eb - ea,
-                "ratio": (eb / ea) if ea else float("inf") if eb else 1.0,
+                # Regions new in B have no meaningful ratio; ``None`` keeps
+                # the row strictly JSON-serializable (float("inf") is not).
+                "ratio": (eb / ea) if ea else None if eb else 1.0,
                 "visits_a": va,
                 "visits_b": vb,
             }
@@ -60,11 +63,39 @@ def diff_profiles(run_a: str, run_b: str, min_ns: int = 0) -> List[Dict[str, Any
 def render_diff(rows: List[Dict[str, Any]], top: int = 25) -> str:
     out = [f"{'delta_ms':>10s} {'a_ms':>10s} {'b_ms':>10s} {'ratio':>7s}  region"]
     for r in rows[:top]:
-        ratio = f"{r['ratio']:.2f}" if r["ratio"] != float("inf") else "new"
+        ratio = "new" if r["ratio"] is None else f"{r['ratio']:.2f}"
         out.append(
             f"{r['delta_ns'] / 1e6:10.3f} {r['excl_ns_a'] / 1e6:10.3f} "
             f"{r['excl_ns_b'] / 1e6:10.3f} {ratio:>7s}  {r['region']}"
         )
+    return "\n".join(out)
+
+
+def render_merge_summary(summary: Dict[str, Any]) -> str:
+    """Human-readable view of a ``merge_runs`` summary, including the
+    streaming export engine's writer stats (events/bytes/chunks)."""
+    out = [f"{'rank':>5s} {'events':>10s}  run_dir"]
+    for r in summary.get("ranks", []):
+        out.append(f"{r['rank']:5d} {r['events']:10d}  {r['run_dir']}")
+    for d in summary.get("dropped_runs", []):
+        out.append(f"{d['rank']:5d} {'DROPPED':>10s}  {d['run_dir']} (stale duplicate)")
+    out.append(
+        f"total {summary.get('total_events', 0)} span events, "
+        f"world_size {summary.get('world_size', 1)}"
+    )
+    export = summary.get("export") or {}
+    if export:
+        mb = export.get("bytes", 0) / 1e6
+        out.append(
+            f"export: {export.get('events', 0)} events "
+            f"({export.get('meta_events', 0)} metadata, "
+            f"{export.get('counter_events', 0)} counters) in "
+            f"{export.get('chunks', 0)} chunks "
+            f"(max {export.get('max_chunk_events', 0)} events/chunk), "
+            f"{mb:.1f} MB, {export.get('events_per_s', 0.0):,.0f} events/s"
+        )
+    if summary.get("out"):
+        out.append(f"merged trace: {summary['out']}")
     return "\n".join(out)
 
 
@@ -80,9 +111,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     t = sub.add_parser("top", help="hotspot table for one run")
     t.add_argument("run_dir")
     t.add_argument("--top", type=int, default=20)
+    m = sub.add_parser("merge-summary", help="render a merge summary JSON")
+    m.add_argument("summary", help="merged_trace_summary.json written by repro.core.merge")
     ns = p.parse_args(argv)
     if ns.cmd == "diff":
         print(render_diff(diff_profiles(ns.run_a, ns.run_b), ns.top))
+    elif ns.cmd == "merge-summary":
+        with open(ns.summary) as fh:
+            print(render_merge_summary(json.load(fh)))
     else:
         for name, vals in hotspots(ns.run_dir, ns.top):
             print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")

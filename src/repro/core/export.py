@@ -1,0 +1,486 @@
+"""Streaming, numpy-vectorized Chrome trace export engine.
+
+Both trace consumers — the per-run ``to_chrome`` export in the tracing
+substrate and the multi-rank ``merge_runs`` — used to build one Python dict
+per event and hold the whole trace in memory before a single ``json.dump``.
+That per-event interpreted path is exactly what the paper's Score-P C
+bindings exist to avoid; this module is the Python-side equivalent: events
+move from the raw npz columns to JSON text through numpy bulk operations
+only, in chunks.  The raw columns themselves stay resident (~21 bytes per
+event, the npz working set), but every per-event expansion — dicts,
+formatted records, JSON text — is O(chunk) instead of O(total events).
+
+Encoding scheme
+---------------
+A Chrome span event is ``{"name":N,"cat":C,"ph":P,"pid":p,"tid":t,"ts":T}``.
+For a given stream, everything but the timestamp is one of ``2 * n_regions``
+fixed strings, so events are encoded as fixed-width byte records:
+
+    [ template(region, ph)  padded to W | ts digits | '.' | 3 frac | '}' ',' ]
+
+JSON permits whitespace between tokens, so templates are space-padded to a
+common width and timestamp digits are left-padded with spaces (never zeros:
+leading zeros are not valid JSON numbers).  The whole chunk is then a
+``(n, rowlen)`` uint8 matrix assembled by a handful of C-level numpy ops —
+a template-row gather plus vectorized divmod digit extraction — and written
+with one ``write``.  Timestamps are emitted as exact decimal microseconds
+(``ns // 1000 . ns % 1000``), which parses to the same float as the naive
+exporter's ``ns / 1000.0`` for any ns below 2**53.
+
+Multi-rank merge uses the same chunk encoder per stream and a k-way
+``heapq.merge`` over (wall_ns, record) items, so the merged trace is
+written in clock-aligned order while only O(chunk) formatted records per
+stream are alive at any time.
+
+The chunk size is controlled by ``REPRO_MONITOR_EXPORT_CHUNK`` (events per
+encoded chunk, default 262144).
+"""
+
+from __future__ import annotations
+
+import heapq
+import json
+import math
+import os
+import time
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
+from .topology import ProcessTopology
+
+ENV_CHUNK = "REPRO_MONITOR_EXPORT_CHUNK"
+DEFAULT_CHUNK = 1 << 18
+
+
+def export_chunk_size(chunk: Optional[int] = None) -> int:
+    """Resolve the export chunk size (argument > env knob > default)."""
+    if chunk is None:
+        try:
+            chunk = int(os.environ.get(ENV_CHUNK, DEFAULT_CHUNK))
+        except ValueError:
+            chunk = DEFAULT_CHUNK
+    return max(int(chunk), 1)
+
+
+# ----------------------------------------------------------------------------
+# Span templates
+# ----------------------------------------------------------------------------
+
+class SpanTemplates:
+    """Per-(stream) table of fixed-width event prefixes.
+
+    Row ``2 * rid + 0`` holds the "B" prefix for region ``rid``, row
+    ``2 * rid + 1`` the "E" prefix; all rows are space-padded to the width
+    of the longest prefix so a chunk gather is a contiguous row copy.
+    """
+
+    __slots__ = ("table", "width", "strings")
+
+    def __init__(self, region_table: List[Dict[str, Any]], pid: int, tid: int):
+        strings: List[str] = []
+        for r in region_table:
+            name = json.dumps(str(r.get("name", "?")))
+            cat = json.dumps(str(r.get("module", "")))
+            for ph in ("B", "E"):
+                strings.append(
+                    f'{{"name":{name},"cat":{cat},"ph":"{ph}",'
+                    f'"pid":{int(pid)},"tid":{int(tid)},"ts":'
+                )
+        self.strings = strings
+        self.width = max((len(s.encode("ascii")) for s in strings), default=0)
+        table = np.full((len(strings), self.width), 0x20, dtype=np.uint8)
+        for i, s in enumerate(strings):
+            b = s.encode("ascii")
+            table[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+        self.table = table
+
+
+def _ascii_digits(values: np.ndarray, width: int, pad_space: bool) -> np.ndarray:
+    """``(width, n)`` uint8 ASCII digits of non-negative ``values``.
+
+    With ``pad_space`` the leading zeros (all but the last digit) become
+    spaces, keeping the emitted JSON number free of leading zeros.
+    """
+    out = np.empty((width, len(values)), dtype=np.uint8)
+    rem = values
+    for i in range(width - 1, 0, -1):
+        rem, digit = np.divmod(rem, 10)
+        out[i] = digit.astype(np.uint8)
+    out[0] = rem.astype(np.uint8)
+    if pad_space and width > 1:
+        lead = np.logical_and.accumulate(out[:-1] == 0, axis=0)
+        out += 0x30
+        out[:-1][lead] = 0x20
+    else:
+        out += 0x30
+    return out
+
+
+def encode_spans(
+    kinds: np.ndarray,
+    rids: np.ndarray,
+    ts_ns: np.ndarray,
+    templates: SpanTemplates,
+    offset_ns: int = 0,
+):
+    """Encode one chunk of raw event columns into JSON byte records.
+
+    Returns ``(records, wall_ns)`` where ``records`` is a ``(m, rowlen)``
+    uint8 matrix (each row one event ending ``},``) and ``wall_ns`` the
+    int64 clock-aligned timestamps of the kept (B/E) events; ``(None,
+    None)`` when the chunk holds no span events.
+    """
+    kinds = np.asarray(kinds)
+    is_e = (kinds == EV_EXIT) | (kinds == EV_C_EXIT)
+    keep = is_e | (kinds == EV_ENTER) | (kinds == EV_C_ENTER)
+    if not keep.any():
+        return None, None
+    if not keep.all():
+        rids = np.asarray(rids)[keep]
+        ts_ns = np.asarray(ts_ns)[keep]
+        is_e = is_e[keep]
+    m = len(ts_ns)
+    wall = ts_ns.astype(np.int64) + int(offset_ns)
+    if int(wall.min()) < 0:
+        return _encode_spans_python(is_e, rids, wall, templates), wall
+    q, frac = np.divmod(wall, 1000)
+    digits = max(len(str(int(q.max()))), 1)
+    width = templates.width
+    rowlen = width + digits + 6  # digits + '.' + 3 frac digits + '}' + ','
+    rec = np.empty((m, rowlen), dtype=np.uint8)
+    idx = np.asarray(rids).astype(np.int64) * 2 + is_e
+    rec[:, :width] = templates.table[idx]
+    rec[:, width : width + digits] = _ascii_digits(q, digits, pad_space=True).T
+    rec[:, width + digits] = 0x2E  # '.'
+    rec[:, width + digits + 1 : width + digits + 4] = _ascii_digits(
+        frac, 3, pad_space=False
+    ).T
+    rec[:, -2] = 0x7D  # '}'
+    rec[:, -1] = 0x2C  # ','
+    return rec, wall
+
+
+def _encode_spans_python(is_e, rids, wall, templates: SpanTemplates):
+    """Fallback for negative clock-aligned timestamps (pathological epochs):
+    per-event formatting, same record content, returned as list of bytes."""
+    strings = templates.strings
+    out = []
+    for exit_, rid, w in zip(is_e.tolist(), np.asarray(rids).tolist(), wall.tolist()):
+        sign = "-" if w < 0 else ""
+        q, frac = divmod(abs(int(w)), 1000)
+        out.append(f"{strings[rid * 2 + exit_]}{sign}{q}.{frac:03d}}},".encode("ascii"))
+    return out
+
+
+def records_to_blobs(records) -> List[bytes]:
+    """Split a record matrix into one bytes object per event (heap merge)."""
+    if isinstance(records, list):
+        return records
+    rowlen = records.shape[1]
+    return records.view(f"S{rowlen}").ravel().tolist()
+
+
+# ----------------------------------------------------------------------------
+# Streaming writer
+# ----------------------------------------------------------------------------
+
+class ChromeTraceWriter:
+    """Incremental Chrome trace-event JSON writer.
+
+    Every event write (encoded record chunks, metadata, counters) appends a
+    trailing comma; ``close()`` seeks back over the final comma and writes
+    the document tail, so the file is strictly valid JSON with no full
+    event list ever held in memory.
+    """
+
+    def __init__(self, path: str, display_time_unit: str = "ms"):
+        self.path = path
+        self._fh = open(path, "wb", buffering=1 << 20)
+        self._fh.write(
+            b'{"displayTimeUnit":%s,"traceEvents":['
+            % json.dumps(display_time_unit).encode("ascii")
+        )
+        self.stats: Dict[str, Any] = {
+            "events": 0,
+            "span_events": 0,
+            "meta_events": 0,
+            "counter_events": 0,
+            "chunks": 0,
+            "max_chunk_events": 0,
+            "bytes": 0,
+        }
+
+    def write_event(self, event: Dict[str, Any]) -> None:
+        """Write one non-span event (metadata "M", counter "C", ...)."""
+        payload = json.dumps(event, separators=(",", ":"), allow_nan=False)
+        self._fh.write(payload.encode("utf-8"))
+        self._fh.write(b",")
+        self.stats["events"] += 1
+        ph = event.get("ph")
+        if ph == "M":
+            self.stats["meta_events"] += 1
+        elif ph == "C":
+            self.stats["counter_events"] += 1
+
+    def write_records(self, records, count: Optional[int] = None) -> None:
+        """Write an encoded span chunk: a ``(m, rowlen)`` uint8 matrix whose
+        rows end in ``,`` or a list of such per-event bytes records."""
+        if records is None:
+            return
+        if isinstance(records, list):
+            if not records:
+                return
+            n = len(records)
+            self._fh.write(b"".join(records))
+        else:
+            n = records.shape[0] if count is None else count
+            if not n:
+                return
+            self._fh.write(records)
+        self.stats["events"] += n
+        self.stats["span_events"] += n
+        self.stats["chunks"] += 1
+        self.stats["max_chunk_events"] = max(self.stats["max_chunk_events"], n)
+
+    def process_metadata(self, pid: int, name: str, sort_index: Optional[int] = None) -> None:
+        self.write_event(
+            {"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+             "args": {"name": name}}
+        )
+        if sort_index is not None:
+            self.write_event(
+                {"name": "process_sort_index", "ph": "M", "pid": pid, "tid": 0,
+                 "args": {"sort_index": int(sort_index)}}
+            )
+
+    def thread_metadata(self, pid: int, tid: int, name: str) -> None:
+        self.write_event(
+            {"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+             "args": {"name": name}}
+        )
+
+    def counter(self, pid: int, name: str, ts_us: float, value: float) -> None:
+        self.write_event(
+            {"name": name, "ph": "C", "pid": pid, "tid": 0, "ts": ts_us,
+             "args": {name: value}}
+        )
+
+    def close(self) -> Dict[str, Any]:
+        if self.stats["events"]:
+            self._fh.flush()
+            self._fh.seek(-1, os.SEEK_END)  # drop the trailing comma
+        self._fh.write(b"]}")
+        self._fh.flush()
+        self.stats["bytes"] = self._fh.tell()
+        self._fh.close()
+        return dict(self.stats)
+
+    def abort(self) -> None:
+        """Discard the output: close the handle and remove the partial file
+        (a truncated trace must not be left looking like a valid export)."""
+        try:
+            self._fh.close()
+        except OSError:
+            pass
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+
+# ----------------------------------------------------------------------------
+# Run-level helpers
+# ----------------------------------------------------------------------------
+
+def load_defs(run_dir: str) -> Dict[str, Any]:
+    with open(os.path.join(run_dir, "defs.json")) as fh:
+        return json.load(fh)
+
+
+def _load_stream(run_dir: str, info: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    with np.load(os.path.join(run_dir, info["file"])) as z:
+        return {k: z[k] for k in z.files}
+
+
+def _run_topology(meta: Dict[str, Any]) -> ProcessTopology:
+    topo = meta.get("topology")
+    if isinstance(topo, dict):
+        try:
+            return ProcessTopology.from_dict(topo)
+        except (TypeError, ValueError):
+            pass
+    rank = int(meta.get("rank", 0) or 0)
+    return ProcessTopology(rank=rank, world_size=rank + 1)
+
+
+def _metric_series(run_dir: str) -> Dict[str, List]:
+    """Load per-metric time series from metrics.json (empty if absent)."""
+    path = os.path.join(run_dir, "metrics.json")
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError):
+        return {}
+    series = doc.get("series")
+    return series if isinstance(series, dict) else {}
+
+
+def _write_counters(
+    writer: ChromeTraceWriter, run_dir: str, pid: int, offset_ns: int = 0
+) -> None:
+    """Emit Perfetto counter ("C") tracks from the run's metric series."""
+    for name, points in sorted(_metric_series(run_dir).items()):
+        for point in points:
+            try:
+                t_ns, value = point
+            except (TypeError, ValueError):
+                continue
+            if value is None or not isinstance(value, (int, float)):
+                continue
+            if not math.isfinite(value):
+                continue
+            writer.counter(pid, name, (int(t_ns) + offset_ns) / 1000.0, float(value))
+
+
+def _sorted_streams(defs: Dict[str, Any]) -> List[Tuple[int, Dict[str, Any]]]:
+    return sorted(
+        ((int(tid), info) for tid, info in defs.get("streams", {}).items()),
+        key=lambda kv: kv[0],
+    )
+
+
+# ----------------------------------------------------------------------------
+# Per-run export
+# ----------------------------------------------------------------------------
+
+def export_run(
+    run_dir: str, out_path: Optional[str] = None, chunk: Optional[int] = None
+) -> Dict[str, Any]:
+    """Export one run directory to Chrome trace JSON via the streaming engine.
+
+    Span timestamps stay in the run's raw perf_counter timebase (matching
+    the historical per-run export); metric series become counter tracks.
+    Returns the writer stats (events, bytes, chunks, ...) plus ``out``.
+    """
+    chunk = export_chunk_size(chunk)
+    defs = load_defs(run_dir)
+    meta = defs.get("meta", {})
+    regions = defs.get("regions", [])
+    pid = int(meta.get("rank", 0) or 0)
+    topology = _run_topology(meta)
+    out_path = out_path or os.path.join(run_dir, "trace.json")
+
+    writer = ChromeTraceWriter(out_path)
+    try:
+        writer.process_metadata(pid, topology.tag(), sort_index=topology.rank)
+        for tid, info in _sorted_streams(defs):
+            writer.thread_metadata(pid, tid, f"thread {tid}")
+            cols = _load_stream(run_dir, info)
+            n = len(cols["kind"])
+            templates = SpanTemplates(regions, pid, tid)
+            for lo in range(0, n, chunk):
+                hi = min(lo + chunk, n)
+                records, _ = encode_spans(
+                    cols["kind"][lo:hi], cols["region"][lo:hi], cols["t"][lo:hi],
+                    templates,
+                )
+                writer.write_records(records)
+        _write_counters(writer, run_dir, pid)
+    except BaseException:
+        writer.abort()
+        raise
+    stats = writer.close()
+    stats["out"] = out_path
+    return stats
+
+
+# ----------------------------------------------------------------------------
+# Multi-rank k-way merge
+# ----------------------------------------------------------------------------
+
+def _stream_items(
+    run_dir: str,
+    info: Dict[str, Any],
+    regions: List[Dict[str, Any]],
+    pid: int,
+    tid: int,
+    offset_ns: int,
+    chunk: int,
+    counter: List[int],
+) -> Iterator[Tuple[int, bytes]]:
+    """Yield (wall_ns, record_bytes) for one stream, chunk by chunk.
+
+    Stream columns are appended in thread time order, so each stream is a
+    sorted sequence and the k-way heap merge over streams yields a globally
+    clock-aligned event order with only O(chunk) formatted records alive
+    per stream.
+    """
+    cols = _load_stream(run_dir, info)
+    templates = SpanTemplates(regions, pid, tid)
+    n = len(cols["kind"])
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        records, wall = encode_spans(
+            cols["kind"][lo:hi], cols["region"][lo:hi], cols["t"][lo:hi],
+            templates, offset_ns=offset_ns,
+        )
+        if records is None:
+            continue
+        blobs = records_to_blobs(records)
+        counter[0] += len(blobs)
+        yield from zip(wall.tolist(), blobs)
+
+
+def merge_chrome_trace(
+    entries: List[Dict[str, Any]], out_path: str, chunk: Optional[int] = None
+) -> Dict[str, Any]:
+    """Merge prepared per-rank entries into one clock-aligned Chrome trace.
+
+    Each entry: ``{"run_dir", "defs", "pid", "offset_ns", "tag"}`` —
+    ``offset_ns`` maps the rank's perf_counter timestamps to wall time
+    (``epoch_time_ns - epoch_perf_ns``).  Returns writer stats plus
+    per-run span counts and throughput.
+    """
+    chunk = export_chunk_size(chunk)
+    t_start = time.perf_counter()
+    writer = ChromeTraceWriter(out_path)
+    try:
+        streams: List[Iterator[Tuple[int, bytes]]] = []
+        counts: Dict[str, List[int]] = {}
+        for entry in entries:
+            defs = entry["defs"]
+            pid = int(entry["pid"])
+            writer.process_metadata(pid, entry.get("tag", f"r{pid}"), sort_index=pid)
+            counter = counts.setdefault(entry["run_dir"], [0])
+            for tid, info in _sorted_streams(defs):
+                writer.thread_metadata(pid, tid, f"thread {tid}")
+                streams.append(
+                    _stream_items(
+                        entry["run_dir"], info, defs.get("regions", []), pid, tid,
+                        int(entry.get("offset_ns", 0)), chunk, counter,
+                    )
+                )
+            _write_counters(writer, entry["run_dir"], pid,
+                            offset_ns=int(entry.get("offset_ns", 0)))
+
+        batch: List[bytes] = []
+        for _, blob in heapq.merge(*streams, key=lambda item: item[0]):
+            batch.append(blob)
+            if len(batch) >= chunk:
+                writer.write_records(batch)
+                batch = []
+        writer.write_records(batch)
+    except BaseException:
+        writer.abort()
+        raise
+    stats = writer.close()
+    elapsed = time.perf_counter() - t_start
+    stats["out"] = out_path
+    stats["elapsed_s"] = elapsed
+    stats["events_per_s"] = stats["span_events"] / elapsed if elapsed > 0 else 0.0
+    stats["per_run_events"] = {run: c[0] for run, c in counts.items()}
+    return stats

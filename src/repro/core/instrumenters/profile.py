@@ -25,10 +25,17 @@ class ProfileInstrumenter(Instrumenter):
     def __init__(self) -> None:
         self._measurement = None
         self._installed = False
+        # Shared liveness cell, rebound per install (a generation marker):
+        # ``sys.setprofile(None)`` in uninstall only clears the hook on the
+        # *calling* thread, so live worker threads keep their closure.  Each
+        # callback checks this cell and self-removes once stale, instead of
+        # appending into already-drained buffers of a finalized measurement.
+        self._active: list = [False]
 
     # -- per-thread callback factory ---------------------------------------
 
     def _make_callback(self, measurement):
+        active = self._active
         buf = measurement.thread_buffer()
         append = buf.events.append
         flush = buf.flush
@@ -42,6 +49,9 @@ class ProfileInstrumenter(Instrumenter):
         clock = time.perf_counter_ns
 
         def callback(frame, event, arg):
+            if not active[0]:
+                sys.setprofile(None)  # stale generation: self-remove on this thread
+                return
             t = clock()
             if event == "call":
                 code = frame.f_code
@@ -91,6 +101,9 @@ class ProfileInstrumenter(Instrumenter):
     def _thread_entry(self, frame, event, arg):
         # First event observed in a freshly started thread: build that
         # thread's closure, install it, and forward the current event.
+        if not self._active[0]:
+            sys.setprofile(None)
+            return None
         callback = self._make_callback(self._measurement)
         sys.setprofile(callback)
         return callback(frame, event, arg)
@@ -99,6 +112,7 @@ class ProfileInstrumenter(Instrumenter):
 
     def install(self, measurement) -> None:
         self._measurement = measurement
+        self._active = [True]  # new generation for this install
         # New threads bootstrap their own closure on their first event.
         threading.setprofile(self._thread_entry)
         sys.setprofile(self._make_callback(measurement))
@@ -107,6 +121,7 @@ class ProfileInstrumenter(Instrumenter):
     def uninstall(self) -> None:
         if not self._installed:
             return
+        self._active[0] = False  # stale callbacks on other threads self-remove
         sys.setprofile(None)
         threading.setprofile(None)
         self._installed = False

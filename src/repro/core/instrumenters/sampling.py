@@ -36,8 +36,13 @@ class SamplingInstrumenter(Instrumenter):
         self.period = period
         self._measurement = None
         self._installed = False
+        # Liveness cell checked by every per-thread closure (see
+        # ProfileInstrumenter): uninstall only clears the hook on the calling
+        # thread, so stale worker-thread callbacks must self-remove.
+        self._active: list = [False]
 
     def _make_callback(self, measurement):
+        active = self._active
         buf = measurement.thread_buffer()
         append = buf.events.append
         flush = buf.flush
@@ -56,6 +61,9 @@ class SamplingInstrumenter(Instrumenter):
         pop = stack.pop
 
         def callback(frame, event, arg):
+            if not active[0]:
+                sys.setprofile(None)  # stale generation: self-remove
+                return
             if event == "call":
                 n = state["count"] + 1
                 state["count"] = n
@@ -85,12 +93,16 @@ class SamplingInstrumenter(Instrumenter):
         return callback
 
     def _thread_entry(self, frame, event, arg):
+        if not self._active[0]:
+            sys.setprofile(None)
+            return None
         callback = self._make_callback(self._measurement)
         sys.setprofile(callback)
         return callback(frame, event, arg)
 
     def install(self, measurement) -> None:
         self._measurement = measurement
+        self._active = [True]
         threading.setprofile(self._thread_entry)
         sys.setprofile(self._make_callback(measurement))
         self._installed = True
@@ -98,6 +110,7 @@ class SamplingInstrumenter(Instrumenter):
     def uninstall(self) -> None:
         if not self._installed:
             return
+        self._active[0] = False
         sys.setprofile(None)
         threading.setprofile(None)
         self._installed = False

@@ -25,8 +25,13 @@ class TraceInstrumenter(Instrumenter):
     def __init__(self) -> None:
         self._measurement = None
         self._installed = False
+        # Liveness cell checked by every per-thread closure (see
+        # ProfileInstrumenter): ``sys.settrace(None)`` in uninstall only
+        # clears the hook on the calling thread.
+        self._active: list = [False]
 
     def _make_callback(self, measurement):
+        active = self._active
         buf = measurement.thread_buffer()
         append = buf.events.append
         flush = buf.flush
@@ -38,6 +43,10 @@ class TraceInstrumenter(Instrumenter):
         clock = time.perf_counter_ns
 
         def callback(frame, event, arg):
+            if not active[0]:
+                sys.settrace(None)  # stale generation: self-remove
+                frame.f_trace = None
+                return None
             t = clock()
             code = frame.f_code
             rid = by_code.get(code)
@@ -61,12 +70,16 @@ class TraceInstrumenter(Instrumenter):
         return callback
 
     def _thread_entry(self, frame, event, arg):
+        if not self._active[0]:
+            sys.settrace(None)
+            return None
         callback = self._make_callback(self._measurement)
         sys.settrace(callback)
         return callback(frame, event, arg)
 
     def install(self, measurement) -> None:
         self._measurement = measurement
+        self._active = [True]
         threading.settrace(self._thread_entry)
         sys.settrace(self._make_callback(measurement))
         self._installed = True
@@ -74,6 +87,7 @@ class TraceInstrumenter(Instrumenter):
     def uninstall(self) -> None:
         if not self._installed:
             return
+        self._active[0] = False
         sys.settrace(None)
         threading.settrace(None)
         self._installed = False

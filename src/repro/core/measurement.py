@@ -23,6 +23,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from dataclasses import dataclass, replace
 from functools import wraps
 from typing import Any, Dict, List, Optional, Tuple
@@ -213,6 +214,21 @@ class Measurement:
         region_table = self.regions.snapshot()
         for sub in self._substrates:
             sub.close(region_table)
+        for sub in self._substrates:
+            # Chrome export runs after *all* substrates closed so the trace
+            # can embed metric series (metrics.json) as counter tracks.  An
+            # export failure must not abort finalize: the raw artifacts are
+            # already on disk and re-exportable offline via to_chrome().
+            export_chrome = getattr(sub, "export_chrome", None)
+            if export_chrome is not None:
+                try:
+                    export_chrome()
+                except Exception as exc:
+                    warnings.warn(
+                        f"chrome trace export failed for {self.run_dir}: {exc!r} "
+                        "(raw streams kept; re-run repro.core.export.export_run)",
+                        RuntimeWarning,
+                    )
         meta = {
             "rank": self.config.rank,
             "topology": self.config.topology.as_dict(),

@@ -5,6 +5,16 @@ into a single OTF2 archive.  Here every process writes its own run directory
 (``<experiment>-...-r<rank>/``); :func:`merge_runs` aligns their clocks via
 the (time_ns, perf_counter_ns) epoch pair recorded at measurement start and
 produces a single merged Chrome trace + summary.
+
+The heavy lifting lives in :mod:`repro.core.export`: per-rank streams are
+encoded chunk-by-chunk with numpy and merged through a k-way heap.  Only the
+compact raw npz columns stay resident; everything per-event and text-sized
+(dicts, formatted records, JSON output) is bounded by the export chunk size
+instead of the total event count.  Stale run directories from a previous
+launch of the same experiment
+(duplicate ranks) are detected and dropped — keeping only the newest by
+clock epoch — instead of colliding on pid and interleaving B/E streams
+into corrupt nesting.
 """
 
 from __future__ import annotations
@@ -12,92 +22,163 @@ from __future__ import annotations
 import glob
 import json
 import os
+import warnings
 from typing import Any, Dict, List, Optional
 
-from .buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
-from .substrates.tracing import load_run
+from .export import load_defs, merge_chrome_trace
+from .topology import ProcessTopology
 
 
 def find_runs(root: str, experiment: Optional[str] = None) -> List[str]:
-    """Locate run directories (those containing defs.json) under ``root``."""
+    """Locate run directories (those containing defs.json) under ``root``.
+
+    ``experiment`` matches on the ``<experiment>-`` run-dir boundary (or the
+    exact name), so sibling experiments sharing a prefix (``run`` vs
+    ``run2``) never bleed into each other's merge.
+    """
     runs = []
     for path in sorted(glob.glob(os.path.join(root, "*"))):
         if not os.path.isdir(path):
             continue
-        if experiment and not os.path.basename(path).startswith(experiment):
-            continue
+        if experiment is not None:
+            base = os.path.basename(path)
+            if base != experiment and not base.startswith(experiment + "-"):
+                continue
         if os.path.exists(os.path.join(path, "defs.json")):
             runs.append(path)
     return runs
 
 
-def merge_runs(run_dirs: List[str], out_path: str) -> Dict[str, Any]:
+def _rank_of(meta: Dict[str, Any]) -> int:
+    topo = meta.get("topology") or {}
+    return int(topo.get("rank", meta.get("rank", 0)) or 0)
+
+
+def _dedupe_ranks(entries: List[Dict[str, Any]]):
+    """Keep one run dir per rank (newest clock epoch wins); report the rest.
+
+    Duplicate ranks prove that two launches of the experiment overlap in the
+    merge root; when the surviving duplicates explicitly recorded the current
+    launch's world size, leftover higher ranks from a previous *larger*
+    launch (which collide with nothing) are stale too and are also dropped.
+    """
+    by_rank: Dict[int, Dict[str, Any]] = {}
+    dropped: List[Dict[str, Any]] = []
+    for entry in entries:
+        cur = by_rank.get(entry["pid"])
+        if cur is None:
+            by_rank[entry["pid"]] = entry
+        elif entry["epoch_time_ns"] >= cur["epoch_time_ns"]:
+            dropped.append(cur)
+            by_rank[entry["pid"]] = entry
+        else:
+            dropped.append(entry)
+    if dropped:
+        dup_ranks = {d["pid"] for d in dropped}
+        worlds = [
+            int(e["topology"].get("world_size", 0) or 0)
+            for e in by_rank.values()
+            if e["pid"] in dup_ranks and isinstance(e.get("topology"), dict)
+            and "world_size" in e["topology"]
+        ]
+        current_world = max(worlds, default=0)
+        if current_world >= 1:
+            for rank in [r for r in by_rank if r >= current_world]:
+                dropped.append(by_rank.pop(rank))
+        warnings.warn(
+            "merge_runs: duplicate rank run dirs (stale previous launch?); "
+            "keeping newest by clock epoch and dropping: "
+            + ", ".join(d["run_dir"] for d in dropped),
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return [by_rank[r] for r in sorted(by_rank)], dropped
+
+
+def merge_runs(
+    run_dirs: List[str], out_path: str, chunk: Optional[int] = None
+) -> Dict[str, Any]:
     """Merge per-rank trace runs into one Chrome trace with aligned clocks.
 
     Per-rank timestamps are perf_counter_ns readings; alignment maps them to
     wall time: wall = epoch_time_ns + (t - epoch_perf_ns).
     """
-    events = []
-    summary: Dict[str, Any] = {"ranks": [], "total_events": 0, "world_size": 1}
+    entries: List[Dict[str, Any]] = []
+    summary: Dict[str, Any] = {
+        "ranks": [], "dropped_runs": [], "total_events": 0, "world_size": 1,
+    }
     for run_dir in run_dirs:
-        defs, streams = load_run(run_dir)
-        meta = defs["meta"]
+        defs = load_defs(run_dir)
+        meta = defs.get("meta", {})
         topo = meta.get("topology") or {}
-        rank = topo.get("rank", meta.get("rank", 0))
-        summary["world_size"] = max(summary["world_size"], topo.get("world_size", rank + 1))
-        epoch_time = meta.get("epoch_time_ns", 0)
-        epoch_perf = meta.get("epoch_perf_ns", 0)
-        regions = defs["regions"]
-        n_rank_events = 0
-        for tid, cols in streams.items():
-            kinds, rids, ts = cols["kind"], cols["region"], cols["t"]
-            for i in range(len(kinds)):
-                k = int(kinds[i])
-                if k in (EV_ENTER, EV_C_ENTER):
-                    ph = "B"
-                elif k in (EV_EXIT, EV_C_EXIT):
-                    ph = "E"
-                else:
-                    continue
-                wall_ns = epoch_time + (int(ts[i]) - epoch_perf)
-                r = regions[int(rids[i])]
-                events.append(
-                    {
-                        "name": r["name"],
-                        "cat": r["module"],
-                        "ph": ph,
-                        "ts": wall_ns / 1000.0,
-                        "pid": rank,
-                        "tid": tid,
-                    }
-                )
-                n_rank_events += 1
-        summary["ranks"].append(
-            {"rank": rank, "run_dir": run_dir, "events": n_rank_events, "topology": topo}
+        rank = _rank_of(meta)
+        epoch_time = int(meta.get("epoch_time_ns", 0) or 0)
+        epoch_perf = int(meta.get("epoch_perf_ns", 0) or 0)
+        try:
+            tag = ProcessTopology.from_dict(topo).tag() if topo else f"r{rank}"
+        except (TypeError, ValueError):
+            tag = f"r{rank}"
+        entries.append(
+            {
+                "run_dir": run_dir,
+                "defs": defs,
+                "pid": rank,
+                "offset_ns": epoch_time - epoch_perf,
+                "epoch_time_ns": epoch_time,
+                "tag": tag,
+                "topology": topo,
+            }
         )
-        summary["total_events"] += n_rank_events
-    events.sort(key=lambda e: e["ts"])
-    with open(out_path, "w") as fh:
-        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, fh)
+    selected, dropped = _dedupe_ranks(entries)
+    for entry in selected:  # world size reflects the merged launch only
+        summary["world_size"] = max(
+            summary["world_size"],
+            int(entry["topology"].get("world_size", entry["pid"] + 1) or 1),
+        )
+    summary["dropped_runs"] = [
+        {"rank": d["pid"], "run_dir": d["run_dir"], "epoch_time_ns": d["epoch_time_ns"]}
+        for d in dropped
+    ]
+    stats = merge_chrome_trace(selected, out_path, chunk=chunk)
+    for entry in selected:
+        n = stats["per_run_events"].get(entry["run_dir"], 0)
+        summary["ranks"].append(
+            {
+                "rank": entry["pid"],
+                "run_dir": entry["run_dir"],
+                "events": n,
+                "topology": entry["topology"],
+            }
+        )
+        summary["total_events"] += n
     summary["out"] = out_path
+    summary["export"] = {k: v for k, v in stats.items() if k != "per_run_events"}
     return summary
 
 
 def main(argv: Optional[List[str]] = None) -> int:
     import argparse
 
+    from .analysis import render_merge_summary
+
     p = argparse.ArgumentParser(prog="python -m repro.core.merge")
     p.add_argument("root", help="directory containing per-rank run dirs")
     p.add_argument("--experiment", default=None)
     p.add_argument("--out", default=None)
+    p.add_argument("--chunk", type=int, default=None,
+                   help="export chunk size in events (REPRO_MONITOR_EXPORT_CHUNK)")
     ns = p.parse_args(argv)
     runs = find_runs(ns.root, ns.experiment)
     if not runs:
         print(f"no runs found under {ns.root}")
         return 1
     out = ns.out or os.path.join(ns.root, "merged_trace.json")
-    summary = merge_runs(runs, out)
-    print(json.dumps(summary, indent=1))
+    summary = merge_runs(runs, out, chunk=ns.chunk)
+    summary_path = os.path.splitext(out)[0] + "_summary.json"
+    with open(summary_path, "w") as fh:
+        json.dump(summary, fh, indent=1, allow_nan=False)
+    print(render_merge_summary(summary))
+    print(f"summary written to {summary_path}")
     return 0
 
 

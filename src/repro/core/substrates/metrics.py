@@ -4,17 +4,28 @@ Collects user metrics (``repro.core.metric(name, value)``) as time series and
 aggregates; the JAX integration layer feeds per-step wall times, HLO FLOPs /
 bytes from ``cost_analysis`` and collective-byte counters through this
 substrate.  Events themselves are summarized only by count (cheap).
+
+Non-finite metric values (a NaN loss is a fact of life in training) must not
+poison the artifacts: aggregates are computed over the finite samples (with a
+``nonfinite`` count alongside), series entries serialize non-finite values as
+``null``, and ``metrics.json`` is written with ``allow_nan=False`` so it is
+always strictly-parseable JSON (bare ``NaN``/``Infinity`` are not JSON).
 """
 
 from __future__ import annotations
 
 import json
+import math
 import os
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
 from .base import Substrate
+
+
+def _finite_or_none(value: float) -> Optional[float]:
+    return float(value) if math.isfinite(value) else None
 
 
 class MetricsSubstrate(Substrate):
@@ -39,24 +50,34 @@ class MetricsSubstrate(Substrate):
     def on_metric(self, name: str, value: float, t_ns: int) -> None:
         agg = self._agg.get(name)
         if agg is None:
-            agg = self._agg[name] = {"count": 0, "sum": 0.0, "min": float("inf"), "max": float("-inf")}
+            agg = self._agg[name] = {
+                "count": 0, "nonfinite": 0, "sum": 0.0,
+                "min": float("inf"), "max": float("-inf"),
+            }
         agg["count"] += 1
-        agg["sum"] += value
-        agg["min"] = min(agg["min"], value)
-        agg["max"] = max(agg["max"], value)
+        if math.isfinite(value):
+            agg["sum"] += value
+            agg["min"] = min(agg["min"], value)
+            agg["max"] = max(agg["max"], value)
+        else:
+            agg["nonfinite"] += 1
         if self.keep_series:
             self._series.setdefault(name, []).append((t_ns, value))
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         out = {}
         for name, agg in self._agg.items():
-            mean = agg["sum"] / max(agg["count"], 1)
-            entry = dict(agg, mean=mean)
+            finite = agg["count"] - agg["nonfinite"]
+            entry = dict(agg, mean=agg["sum"] / finite if finite else None)
+            if finite == 0:  # min/max stayed at their +-inf sentinels
+                entry["min"] = entry["max"] = None
             series = self._series.get(name)
             if series:
                 vals = np.asarray([v for _, v in series], dtype=np.float64)
-                entry["median"] = float(np.median(vals))
-                entry["p99"] = float(np.percentile(vals, 99))
+                vals = vals[np.isfinite(vals)]
+                if len(vals):
+                    entry["median"] = float(np.median(vals))
+                    entry["p99"] = float(np.percentile(vals, 99))
             out[name] = entry
         return out
 
@@ -68,7 +89,8 @@ class MetricsSubstrate(Substrate):
         }
         if self.keep_series:
             doc["series"] = {
-                name: [[int(t), float(v)] for t, v in vals] for name, vals in self._series.items()
+                name: [[int(t), _finite_or_none(v)] for t, v in vals]
+                for name, vals in self._series.items()
             }
         with open(os.path.join(self._run_dir, "metrics.json"), "w") as fh:
-            json.dump(doc, fh, indent=1)
+            json.dump(doc, fh, indent=1, allow_nan=False)

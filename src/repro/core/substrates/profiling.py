@@ -14,6 +14,7 @@ Artifacts:
 from __future__ import annotations
 
 import json
+import math
 import os
 from typing import Any, Dict, List
 
@@ -87,7 +88,10 @@ class ProfilingSubstrate(Substrate):
         self._meta = meta
 
     def on_metric(self, name: str, value: float, t_ns: int) -> None:
-        self._metrics[name] = self._metrics.get(name, 0.0) + value
+        # Skip non-finite samples: one NaN would poison the running sum and
+        # make profile.json unparseable (bare NaN is not valid JSON).
+        if math.isfinite(value):
+            self._metrics[name] = self._metrics.get(name, 0.0) + value
 
     def on_flush(self, thread_id: int, columns: Dict[str, np.ndarray]) -> None:
         state = self._threads.get(thread_id)
@@ -205,7 +209,7 @@ class ProfilingSubstrate(Substrate):
             },
         }
         with open(os.path.join(self._run_dir, "profile.json"), "w") as fh:
-            json.dump(doc, fh, indent=1)
+            json.dump(doc, fh, indent=1, allow_nan=False)
         with open(os.path.join(self._run_dir, "profile.txt"), "w") as fh:
             fh.write(render_text(doc))
 

@@ -9,18 +9,19 @@ one-archive-per-run with per-location event streams):
       trace.json           Chrome trace-event export (the "Vampir" view)
 
 Streams store raw columns; conversion to viewable form happens offline
-(`to_chrome`) — the measurement-time cost is a numpy concatenate per flush.
+(`to_chrome`, backed by the streaming vectorized engine in
+``repro.core.export``) — the measurement-time cost is a numpy concatenate
+per flush.
 """
 
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from ..buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
 from .base import Substrate
 
 
@@ -32,6 +33,7 @@ class TracingSubstrate(Substrate):
         self._run_dir = ""
         self._meta: Dict[str, Any] = {}
         self.chrome_export = chrome_export
+        self.export_stats: Optional[Dict[str, Any]] = None
 
     def open(self, run_dir: str, meta: Dict[str, Any]) -> None:
         self._run_dir = run_dir
@@ -57,8 +59,17 @@ class TracingSubstrate(Substrate):
         }
         with open(os.path.join(self._run_dir, "defs.json"), "w") as fh:
             json.dump(defs, fh, indent=1)
-        if self.chrome_export:
-            to_chrome(self._run_dir)
+
+    def export_chrome(self) -> Optional[Dict[str, Any]]:
+        """Run the streaming Chrome export.  Called by the measurement
+        manager *after* every substrate has closed, so the exporter can pick
+        up metric series from ``metrics.json`` as counter tracks."""
+        if not self.chrome_export or not self._run_dir:
+            return None
+        from ..export import export_run
+
+        self.export_stats = export_run(self._run_dir)
+        return self.export_stats
 
 
 # ----------------------------------------------------------------------------
@@ -76,35 +87,9 @@ def load_run(run_dir: str):
     return defs, streams
 
 
-def to_chrome(run_dir: str, out_path: str | None = None) -> str:
-    """Export a run directory to Chrome trace-event JSON ("B"/"E" phases)."""
-    defs, streams = load_run(run_dir)
-    regions = defs["regions"]
-    pid = defs["meta"].get("rank", 0)
-    events = []
-    for tid, cols in streams.items():
-        kinds, rids, ts = cols["kind"], cols["region"], cols["t"]
-        for i in range(len(kinds)):
-            k = int(kinds[i])
-            if k in (EV_ENTER, EV_C_ENTER):
-                ph = "B"
-            elif k in (EV_EXIT, EV_C_EXIT):
-                ph = "E"
-            else:
-                continue
-            r = regions[int(rids[i])]
-            events.append(
-                {
-                    "name": r["name"],
-                    "cat": r["module"],
-                    "ph": ph,
-                    "ts": int(ts[i]) / 1000.0,  # chrome expects microseconds
-                    "pid": pid,
-                    "tid": tid,
-                }
-            )
-    doc = {"traceEvents": events, "displayTimeUnit": "ms"}
-    out_path = out_path or os.path.join(run_dir, "trace.json")
-    with open(out_path, "w") as fh:
-        json.dump(doc, fh)
-    return out_path
+def to_chrome(run_dir: str, out_path: Optional[str] = None, chunk: Optional[int] = None) -> str:
+    """Export a run directory to Chrome trace-event JSON ("B"/"E" spans,
+    metadata and counter tracks) via the streaming vectorized engine."""
+    from ..export import export_run
+
+    return export_run(run_dir, out_path=out_path, chunk=chunk)["out"]

@@ -84,6 +84,17 @@ class ProcessTopology:
             "mesh_shape": list(self.mesh_shape),
         }
 
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "ProcessTopology":
+        """Inverse of :meth:`as_dict` (artifact round-trip: run ``meta.json``
+        / ``defs.json`` embed the dict form; the export engine reads it back)."""
+        rank = int(d.get("rank", 0) or 0)
+        world = int(d.get("world_size", 1) or 1)
+        local = int(d.get("local_rank", rank) or 0)
+        mesh = tuple(int(x) for x in (d.get("mesh_shape") or ()))
+        return cls(rank=rank, world_size=max(world, rank + 1),
+                   local_rank=local, mesh_shape=mesh)
+
     # -- env round-trip (two-phase bootstrap, fork-based launchers) ----------
 
     @classmethod

@@ -9,6 +9,9 @@
 
 import json
 import os
+import sys
+import threading
+import time
 
 import pytest
 
@@ -149,6 +152,51 @@ def test_user_region_nesting_under_profile(tmp_path):
     assert inner is not None, "inner region must nest under outer"
     assert find(inner, ":work") or find(inner, "work")
     assert outer["incl_ns"] >= inner["incl_ns"]
+
+
+@pytest.mark.parametrize("instrumenter", ["profile", "sampling"])
+def test_stale_worker_thread_callback_self_removes(tmp_path, instrumenter):
+    """Regression: uninstall only clears the hook on the calling thread
+    (``sys.setprofile(None)``); a worker thread that outlives the
+    measurement used to keep its closure and append into already-drained
+    buffers.  The generation flag makes stale callbacks self-remove."""
+    d = str(tmp_path / f"stale-{instrumenter}")
+    m = rmon.init(instrumenter=instrumenter, run_dir=d, sampling_period=1)
+    stop = threading.Event()
+    hooks = []
+
+    def worker():
+        def tick():
+            return 1
+
+        while not stop.is_set():
+            tick()
+            hooks.append(sys.getprofile())
+            time.sleep(0.001)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    try:
+        deadline = time.time() + 10
+        while time.time() < deadline and not any(h is not None for h in hooks):
+            time.sleep(0.005)
+        assert any(h is not None for h in hooks), "worker never got the hook"
+
+        rmon.finalize()
+
+        # the stale callback must self-remove on the worker's next event
+        while time.time() < deadline and (not hooks or hooks[-1] is not None):
+            time.sleep(0.005)
+        assert hooks and hooks[-1] is None, "stale callback survived finalize"
+
+        # and buffers must stop growing (no appends into drained buffers,
+        # no threshold flushes into closed substrates)
+        sizes = [len(b) for b in m._buffers]
+        time.sleep(0.05)
+        assert [len(b) for b in m._buffers] == sizes
+    finally:
+        stop.set()
+        th.join()
 
 
 def test_generator_balance_under_profile(tmp_path):

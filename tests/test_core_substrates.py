@@ -36,12 +36,15 @@ def test_tracing_roundtrip_and_chrome(tmp_path):
     with open(chrome_path) as fh:
         doc = json.load(fh)
     events = doc["traceEvents"]
-    assert events
-    names = {e["name"] for e in events}
+    spans = [e for e in events if e["ph"] in ("B", "E")]
+    assert spans
+    names = {e["name"] for e in spans}
     assert "phase" in names
+    # the streaming exporter names processes/threads via metadata events
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in events)
     # B/E balance per (pid, tid, name)
     bal = {}
-    for e in events:
+    for e in spans:
         key = (e["pid"], e["tid"], e["name"])
         bal[key] = bal.get(key, 0) + (1 if e["ph"] == "B" else -1)
     assert all(v == 0 for v in bal.values())

@@ -1,0 +1,383 @@
+"""Streaming vectorized Chrome-trace export engine tests.
+
+Round-trip assertions for the new exporter: strict JSON on
+trace.json/merged_trace.json, B/E balance per (pid, tid), metadata +
+counter events present, byte-equivalent span content vs the naive
+reference exporter, chunked encoding via REPRO_MONITOR_EXPORT_CHUNK,
+and duplicate-rank handling in the merge path.
+"""
+
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.core as rmon
+from repro.core.buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT, EV_LINE
+from repro.core.export import ENV_CHUNK, ChromeTraceWriter, export_run
+from repro.core.merge import find_runs, merge_runs
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_bench_module():
+    """Import benchmarks/trace_export.py (the naive reference exporter)."""
+    spec = importlib.util.spec_from_file_location(
+        "bench_trace_export", os.path.join(REPO_ROOT, "benchmarks", "trace_export.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def strict_load(path):
+    """json.load that rejects bare NaN/Infinity (strict JSON only)."""
+    def reject(token):
+        raise AssertionError(f"non-strict JSON constant {token!r} in {path}")
+
+    with open(path) as fh:
+        return json.load(fh, parse_constant=reject)
+
+
+def _write_run(root, name, rank, epoch_time_ns, epoch_perf_ns, events,
+               world_size=2, region_name=None, metrics_series=None):
+    """Materialize a minimal trace run dir (defs.json + one stream)."""
+    run_dir = os.path.join(str(root), name)
+    os.makedirs(run_dir)
+    cols = np.asarray(events, dtype=np.uint64)
+    np.savez_compressed(
+        os.path.join(run_dir, "stream_t0.npz"),
+        kind=cols[:, 0].astype(np.uint8),
+        region=cols[:, 1].astype(np.int32),
+        t=cols[:, 2],
+        aux=cols[:, 3].astype(np.uint32),
+    )
+    defs = {
+        "meta": {
+            "rank": rank,
+            "topology": {"rank": rank, "world_size": world_size,
+                         "local_rank": rank, "mesh_shape": []},
+            "epoch_time_ns": epoch_time_ns,
+            "epoch_perf_ns": epoch_perf_ns,
+        },
+        "streams": {"0": {"file": "stream_t0.npz", "events": len(events)}},
+        "regions": [{"name": region_name or f"rank{rank}_work", "module": "test"}],
+    }
+    with open(os.path.join(run_dir, "defs.json"), "w") as fh:
+        json.dump(defs, fh)
+    if metrics_series is not None:
+        with open(os.path.join(run_dir, "metrics.json"), "w") as fh:
+            json.dump({"series": metrics_series}, fh)
+    return run_dir
+
+
+def _spans(events):
+    return [e for e in events if e["ph"] in ("B", "E")]
+
+
+def _assert_balanced(events):
+    bal = {}
+    for e in _spans(events):
+        key = (e["pid"], e["tid"], e["name"])
+        bal[key] = bal.get(key, 0) + (1 if e["ph"] == "B" else -1)
+    assert all(v == 0 for v in bal.values()), bal
+
+
+# ----------------------------------------------------------------------------
+# Per-run export
+# ----------------------------------------------------------------------------
+
+def test_export_run_matches_naive_reference(tmp_path):
+    bench = _load_bench_module()
+    run_dir = str(tmp_path / "synth")
+    bench.make_synthetic_run(run_dir, n_events=4_000, n_regions=9, n_streams=2)
+    engine_path = export_run(run_dir)["out"]
+    naive_path = bench._export_naive(run_dir)
+    n = bench.check_equivalence(engine_path, naive_path)
+    assert n == 4_000
+    doc = strict_load(engine_path)
+    _assert_balanced(doc["traceEvents"])
+
+
+def test_export_real_run_roundtrip(tmp_path):
+    """End-to-end: measured run -> strict trace.json with metadata,
+    counters (from metrics.json series) and balanced spans."""
+    d = str(tmp_path / "run")
+    rmon.init(instrumenter="profile", run_dir=d, experiment="exp", rank=3)
+
+    def work():
+        return sum(range(50))
+
+    with rmon.region("phase"):
+        work()
+    rmon.metric("loss", 2.5)
+    rmon.metric("loss", 3.5)
+    out = rmon.finalize()
+
+    doc = strict_load(os.path.join(out, "trace.json"))
+    events = doc["traceEvents"]
+    _assert_balanced(events)
+    assert "phase" in {e["name"] for e in _spans(events)}
+    meta = [e for e in events if e["ph"] == "M"]
+    proc_names = [e for e in meta if e["name"] == "process_name"]
+    assert proc_names and proc_names[0]["args"]["name"] == "r3of4"
+    assert any(e["name"] == "thread_name" for e in meta)
+    counters = [e for e in events if e["ph"] == "C"]
+    assert {c["name"] for c in counters} == {"loss"}
+    assert sorted(c["args"]["loss"] for c in counters) == [2.5, 3.5]
+    # counters share the spans' (raw perf) timebase in the per-run export
+    span_ts = [e["ts"] for e in _spans(events)]
+    assert min(span_ts) <= counters[0]["ts"] <= max(span_ts) + 1e9
+
+
+def test_export_chunking_env_knob(tmp_path, monkeypatch):
+    bench = _load_bench_module()
+    run_dir = str(tmp_path / "synth")
+    bench.make_synthetic_run(run_dir, n_events=2_000, n_regions=5, n_streams=1)
+    big = export_run(run_dir, out_path=os.path.join(run_dir, "one.json"))
+    monkeypatch.setenv(ENV_CHUNK, "64")
+    small = export_run(run_dir, out_path=os.path.join(run_dir, "many.json"))
+    assert big["chunks"] == 1
+    assert small["chunks"] > 10
+    assert small["max_chunk_events"] <= 64
+    assert small["span_events"] == big["span_events"] == 2_000
+    with open(os.path.join(run_dir, "one.json"), "rb") as fh_a, \
+            open(os.path.join(run_dir, "many.json"), "rb") as fh_b:
+        assert fh_a.read() == fh_b.read()
+
+
+def test_export_skips_non_span_events_and_line_aux(tmp_path):
+    run = _write_run(
+        tmp_path, "lines-r0", 0, 0, 0,
+        events=[
+            (EV_ENTER, 0, 1_000, 0),
+            (EV_LINE, 0, 1_500, 42),
+            (EV_EXIT, 0, 2_000, 0),
+        ],
+    )
+    doc = strict_load(export_run(run)["out"])
+    spans = _spans(doc["traceEvents"])
+    assert [e["ph"] for e in spans] == ["B", "E"]
+    assert [e["ts"] for e in spans] == [1.0, 2.0]
+
+
+def test_writer_empty_trace_is_valid(tmp_path):
+    path = str(tmp_path / "empty.json")
+    stats = ChromeTraceWriter(path).close()
+    doc = strict_load(path)
+    assert doc["traceEvents"] == []
+    assert stats["events"] == 0
+
+
+def test_export_large_wall_offsets_exact_decimal(tmp_path):
+    """Merged traces carry ~1.7e18 ns wall timestamps; the engine emits
+    exact decimal microseconds (integer math, no float rounding)."""
+    epoch = 1_700_000_000_000_000_000
+    run = _write_run(
+        tmp_path, "wall-r0", 0, epoch, 1_000,
+        events=[(EV_ENTER, 0, 1_000, 0), (EV_EXIT, 0, 1_234_567, 0)],
+        world_size=1,
+    )
+    out = str(tmp_path / "merged.json")
+    merge_runs([run], out)
+    raw = open(out).read()
+    assert f"{epoch // 1000}.000" in raw
+    assert f"{(epoch + 1_233_567) // 1000}.567" in raw
+
+
+def test_merge_negative_wall_fallback(tmp_path):
+    """Pathological epoch (wall clock behind the perf epoch) exercises the
+    per-event fallback; timestamps must keep exact value and sign."""
+    run = _write_run(
+        tmp_path, "neg-r0", 0, epoch_time_ns=0, epoch_perf_ns=10_000,
+        events=[(EV_ENTER, 0, 1_500, 0), (EV_EXIT, 0, 20_000, 0)],
+        world_size=1,
+    )
+    out = str(tmp_path / "merged.json")
+    summary = merge_runs([run], out)
+    spans = _spans(strict_load(out)["traceEvents"])
+    assert [e["ts"] for e in spans] == [-8.5, 10.0]
+    assert summary["total_events"] == 2
+
+
+# ----------------------------------------------------------------------------
+# Merge path
+# ----------------------------------------------------------------------------
+
+def test_merge_metadata_counters_and_alignment(tmp_path):
+    ms = 1_000_000
+    run0 = _write_run(
+        tmp_path, "exp-a-r0", 0, 1_000 * ms, 500,
+        events=[(EV_ENTER, 0, 500, 0), (EV_EXIT, 0, 500 + 4 * ms, 0)],
+        metrics_series={"loss": [[500, 7.0], [600, None]]},
+    )
+    run1 = _write_run(
+        tmp_path, "exp-a-r1", 1, 1_002 * ms, 900,
+        events=[(EV_C_ENTER, 0, 900, 0), (EV_C_EXIT, 0, 900 + 6 * ms, 0)],
+    )
+    out = str(tmp_path / "merged.json")
+    summary = merge_runs([run0, run1], out)
+    doc = strict_load(out)
+    events = doc["traceEvents"]
+    spans = _spans(events)
+    ts = [e["ts"] for e in spans]
+    assert ts == sorted(ts)
+    np.testing.assert_allclose(
+        ts, [1_000_000.0, 1_002_000.0, 1_004_000.0, 1_008_000.0]
+    )
+    assert [(e["pid"], e["ph"]) for e in spans] == [
+        (0, "B"), (1, "B"), (0, "E"), (1, "E"),
+    ]
+    proc_names = {
+        e["pid"]: e["args"]["name"]
+        for e in events if e["ph"] == "M" and e["name"] == "process_name"
+    }
+    assert proc_names == {0: "r0of2", 1: "r1of2"}
+    sort_idx = {
+        e["pid"]: e["args"]["sort_index"]
+        for e in events if e["ph"] == "M" and e["name"] == "process_sort_index"
+    }
+    assert sort_idx == {0: 0, 1: 1}
+    counters = [e for e in events if e["ph"] == "C"]
+    assert len(counters) == 1  # the None sample is dropped
+    assert counters[0]["args"]["loss"] == 7.0
+    # counter ts is wall-aligned like the spans
+    assert counters[0]["ts"] == pytest.approx(1_000_000.0)
+    assert summary["total_events"] == 4
+    assert summary["export"]["span_events"] == 4
+    assert summary["export"]["counter_events"] == 1
+    assert summary["export"]["bytes"] > 0
+
+
+def test_merge_duplicate_ranks_keeps_newest(tmp_path):
+    stale = _write_run(
+        tmp_path, "exp-20240101-r0", 0, epoch_time_ns=1_000_000_000,
+        epoch_perf_ns=0, events=[(EV_ENTER, 0, 10, 0), (EV_EXIT, 0, 20, 0)],
+        region_name="stale_work",
+    )
+    fresh = _write_run(
+        tmp_path, "exp-20240102-r0", 0, epoch_time_ns=2_000_000_000,
+        epoch_perf_ns=0, events=[(EV_ENTER, 0, 10, 0), (EV_EXIT, 0, 20, 0)],
+        region_name="fresh_work",
+    )
+    out = str(tmp_path / "merged.json")
+    with pytest.warns(RuntimeWarning, match="duplicate rank"):
+        summary = merge_runs([stale, fresh], out)
+    assert [r["run_dir"] for r in summary["ranks"]] == [fresh]
+    assert [d["run_dir"] for d in summary["dropped_runs"]] == [stale]
+    assert summary["total_events"] == 2
+    names = {e["name"] for e in _spans(strict_load(out)["traceEvents"])}
+    assert names == {"fresh_work"}
+
+
+def test_merge_drops_stale_higher_ranks_from_previous_larger_launch(tmp_path):
+    """Relaunching an experiment with a smaller world must not merge the
+    dead launch's higher ranks: duplicates prove the overlap, and the
+    surviving duplicates' recorded world_size bounds the live ranks."""
+    old = [
+        _write_run(tmp_path, f"exp-1-r{r}", r, epoch_time_ns=1_000,
+                   epoch_perf_ns=0, events=[(EV_ENTER, 0, 10, 0), (EV_EXIT, 0, 20, 0)],
+                   world_size=4, region_name=f"old_r{r}")
+        for r in range(4)
+    ]
+    new = [
+        _write_run(tmp_path, f"exp-2-r{r}", r, epoch_time_ns=2_000,
+                   epoch_perf_ns=0, events=[(EV_ENTER, 0, 10, 0), (EV_EXIT, 0, 20, 0)],
+                   world_size=2, region_name=f"new_r{r}")
+        for r in range(2)
+    ]
+    out = str(tmp_path / "merged.json")
+    with pytest.warns(RuntimeWarning, match="duplicate rank"):
+        summary = merge_runs(old + new, out)
+    assert [r["run_dir"] for r in summary["ranks"]] == new
+    assert sorted(d["run_dir"] for d in summary["dropped_runs"]) == sorted(old)
+    assert summary["world_size"] == 2
+    names = {e["name"] for e in _spans(strict_load(out)["traceEvents"])}
+    assert names == {"new_r0", "new_r1"}
+
+
+def test_find_runs_experiment_boundary(tmp_path):
+    a = _write_run(tmp_path, "run-1-r0", 0, 0, 0, [(EV_ENTER, 0, 10, 0)])
+    _write_run(tmp_path, "run2-1-r0", 0, 0, 0, [(EV_ENTER, 0, 10, 0)])
+    exact = _write_run(tmp_path, "run", 1, 0, 0, [(EV_ENTER, 0, 10, 0)])
+    assert find_runs(str(tmp_path), "run") == [exact, a]
+    assert find_runs(str(tmp_path), "run2") == [str(tmp_path / "run2-1-r0")]
+
+
+def test_merge_summary_render_and_cli(tmp_path, capsys):
+    _write_run(tmp_path, "exp-a-r0", 0, 1_000, 0,
+               events=[(EV_ENTER, 0, 10, 0), (EV_EXIT, 0, 20, 0)])
+    from repro.core.merge import main as merge_main
+
+    assert merge_main([str(tmp_path), "--experiment", "exp"]) == 0
+    out = capsys.readouterr().out
+    assert "span events" in out and "events/s" in out
+    summary_path = str(tmp_path / "merged_trace_summary.json")
+    assert os.path.exists(summary_path)
+    strict_load(summary_path)
+    strict_load(str(tmp_path / "merged_trace.json"))
+
+    from repro.core.analysis import main as analysis_main
+
+    assert analysis_main(["merge-summary", summary_path]) == 0
+    assert "merged trace" in capsys.readouterr().out
+
+
+# ----------------------------------------------------------------------------
+# Non-finite metric artifacts (bugfix)
+# ----------------------------------------------------------------------------
+
+def test_non_finite_metrics_artifacts_strictly_parseable(tmp_path):
+    d = str(tmp_path / "nan-run")
+    rmon.init(instrumenter="profile", run_dir=d, experiment="nan")
+
+    def work():
+        return 1
+
+    with rmon.region("phase"):
+        work()
+    rmon.metric("x", float("nan"))
+    rmon.metric("x", float("inf"))
+    rmon.metric("x", 4.0)
+    rmon.metric("all_bad", float("-inf"))
+    out = rmon.finalize()
+
+    metrics = strict_load(os.path.join(out, "metrics.json"))
+    agg = metrics["metrics"]["x"]
+    assert agg["count"] == 3 and agg["nonfinite"] == 2
+    assert agg["min"] == agg["max"] == agg["mean"] == 4.0
+    all_bad = metrics["metrics"]["all_bad"]
+    assert all_bad["min"] is None and all_bad["max"] is None
+    assert all_bad["mean"] is None  # no finite samples -> no fabricated 0.0
+    assert metrics["series"]["x"] == [
+        [metrics["series"]["x"][0][0], None],
+        [metrics["series"]["x"][1][0], None],
+        [metrics["series"]["x"][2][0], 4.0],
+    ]
+    strict_load(os.path.join(out, "profile.json"))
+    # the trace counters drop non-finite samples instead of corrupting JSON
+    doc = strict_load(os.path.join(out, "trace.json"))
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert [c["args"]["x"] for c in counters if c["name"] == "x"] == [4.0]
+
+
+def test_diff_profiles_new_region_ratio_serializable(tmp_path):
+    from repro.core.analysis import diff_profiles, render_diff
+
+    def make(name, regions):
+        d = str(tmp_path / name)
+        rmon.init(instrumenter="none", run_dir=d, substrates=("profiling",))
+        for r in regions:
+            with rmon.region(r):
+                pass
+        return rmon.finalize()
+
+    a = make("a", ["shared"])
+    b = make("b", ["shared", "only_in_b"])
+    rows = diff_profiles(a, b)
+    by_region = {r["region"]: r for r in rows}
+    assert by_region["user:only_in_b"]["ratio"] is None
+    json.dumps(rows, allow_nan=False)  # must not raise
+    assert "new" in render_diff(rows)

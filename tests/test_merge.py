@@ -80,11 +80,12 @@ def test_merge_runs_aligns_skewed_epochs(tmp_path):
 
     with open(out) as fh:
         events = json.load(fh)["traceEvents"]
+    spans = [e for e in events if e["ph"] in ("B", "E")]
     # expected wall-clock order (chrome ts is in microseconds):
     #   r0 enter @1000ms, r1 enter @1002ms, r0 exit @1004ms, r1 exit @1008ms
-    assert [(e["pid"], e["ph"]) for e in events] == [
+    assert [(e["pid"], e["ph"]) for e in spans] == [
         (0, "B"), (1, "B"), (0, "E"), (1, "E"),
     ]
-    ts = [e["ts"] for e in events]
+    ts = [e["ts"] for e in spans]
     assert ts == sorted(ts)
     np.testing.assert_allclose(ts, [1_000_000.0, 1_002_000.0, 1_004_000.0, 1_008_000.0])
