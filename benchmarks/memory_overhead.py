@@ -1,0 +1,158 @@
+"""Memory-monitoring overhead — the paper's overhead study (§3), extended
+to the memory dimension.
+
+The paper fits instrumented runtime as ``t = α + β·N`` per instrumenter;
+this benchmark fits the same model for the *memory substrate* riding on the
+profile instrumenter, isolating what the heap collector adds at flush
+granularity on the event-throughput workload (paper case 2: a tight loop of
+Python function calls).  It also measures the raw cost of ``tracemalloc``
+itself on the same kernel — the floor any tracemalloc-based collector pays —
+and an end-to-end slowdown ratio with the substrate on vs off.
+
+    PYTHONPATH=src python benchmarks/memory_overhead.py           # full fit
+    PYTHONPATH=src python benchmarks/memory_overhead.py --smoke   # CI: small + correctness
+
+The ``--smoke`` mode also runs one measured workload with the substrate
+enabled and checks the memory.json artifact carries region attribution and
+an RSS timeline (the CI-level correctness contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+import tracemalloc
+from typing import Dict
+
+import numpy as np
+
+from repro.core.overhead import CASES, fit_linear, measure_inprocess_beta
+
+#: (label, substrates) rows of the β table.  "profile+none" is the event
+#: path alone; the profiling row is the existing flush-time consumer for
+#: scale; the memory rows add the heap collector.
+VARIANTS = [
+    ("profile+none", ()),
+    ("profile+profiling", ("profiling",)),
+    ("profile+memory", ("memory",)),
+    ("profile+profiling+memory", ("profiling", "memory")),
+]
+
+
+def bench_beta(ns, repeats: int, flush_threshold: int) -> Dict[str, float]:
+    out = {}
+    for label, substrates in VARIANTS:
+        _, beta = measure_inprocess_beta(
+            "case2", "profile", ns=ns, repeats=repeats,
+            substrates=substrates, flush_threshold=flush_threshold,
+        )
+        out[label] = beta * 1e6
+        print(f"beta[{label:26s}]  {beta * 1e6:8.3f} us/iter")
+    return out
+
+
+def bench_tracemalloc_floor(ns, repeats: int) -> Dict[str, float]:
+    """β of the bare case-2 kernel with tracemalloc off vs on — no
+    monitoring at all, just the allocator hook every collector pays for."""
+    code = compile(CASES["case2"], "<case2>", "exec")
+
+    def run(n: int) -> float:
+        argv_saved = sys.argv
+        sys.argv = ["case", str(n)]
+        try:
+            t0 = time.perf_counter()
+            exec(code, {"__name__": "__bench__"})
+            return time.perf_counter() - t0
+        finally:
+            sys.argv = argv_saved
+
+    out = {}
+    for label, tracing in [("tracemalloc_off", False), ("tracemalloc_on", True)]:
+        medians = []
+        for n in ns:
+            times = []
+            for _ in range(repeats):
+                if tracing:
+                    tracemalloc.start()
+                try:
+                    times.append(run(n))
+                finally:
+                    if tracing:
+                        tracemalloc.stop()
+            medians.append(float(np.median(times)))
+        _, beta = fit_linear(list(ns), medians)
+        out[label] = beta * 1e6
+        print(f"beta[{label:26s}]  {beta * 1e6:8.3f} us/iter")
+    return out
+
+
+def check_artifact(flush_threshold: int) -> Dict[str, object]:
+    """Correctness contract: a memory-substrate run attributes regions and
+    records an RSS timeline."""
+    import repro.core as rmon
+
+    run_dir = tempfile.mkdtemp(prefix="repro-mem-overhead-")
+    rmon.init(
+        instrumenter="profile", run_dir=run_dir, experiment="mem-overhead",
+        substrates=("profiling", "memory"), flush_threshold=flush_threshold,
+        memory_period=0.02,
+    )
+
+    def churn():
+        return [bytearray(1024) for _ in range(256)]
+
+    keep = []
+    with rmon.region("churn"):
+        for _ in range(64):
+            keep.append(churn())
+    rmon.finalize()
+    with open(os.path.join(run_dir, "memory.json")) as fh:
+        doc = json.load(fh)
+    regions = doc["heap"]["regions"]
+    assert regions, "memory.json carries no region attribution"
+    assert doc["series"].get("mem.rss_mb"), "memory.json carries no RSS timeline"
+    total_alloc = sum(r["alloc_bytes"] for r in regions.values())
+    assert total_alloc > 0, "no allocation bytes attributed"
+    return {"run_dir": run_dir, "regions": len(regions), "alloc_bytes": total_alloc}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="small iteration counts + artifact correctness (CI)")
+    p.add_argument("--repeats", type=int, default=None)
+    p.add_argument("--flush-events", type=int, default=8192)
+    p.add_argument("--out", default="benchmarks/artifacts/memory_overhead.json")
+    ns_args = p.parse_args(argv)
+
+    ns = [2_000, 20_000] if ns_args.smoke else [10_000, 50_000, 200_000]
+    repeats = ns_args.repeats or (2 if ns_args.smoke else 5)
+
+    doc: Dict[str, object] = {"ns": ns, "repeats": repeats, "smoke": ns_args.smoke}
+    doc["beta_us"] = bench_beta(ns, repeats, ns_args.flush_events)
+    doc["floor_beta_us"] = bench_tracemalloc_floor(ns, repeats)
+    artifact = check_artifact(ns_args.flush_events)
+    print(f"artifact check: {artifact['regions']} regions, "
+          f"{artifact['alloc_bytes'] / 1e6:.1f} MB attributed")
+    doc["artifact_check"] = artifact
+
+    base = doc["beta_us"]["profile+none"]
+    mem = doc["beta_us"]["profile+memory"]
+    doc["memory_slowdown"] = mem / base if base > 0 else None
+    if doc["memory_slowdown"]:
+        print(f"memory substrate slowdown on the event workload: "
+              f"{doc['memory_slowdown']:.2f}x over instrumented baseline")
+
+    os.makedirs(os.path.dirname(ns_args.out), exist_ok=True)
+    with open(ns_args.out, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    print(f"wrote {ns_args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

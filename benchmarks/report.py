@@ -58,6 +58,30 @@ def perf_table(path: str) -> str:
     return "\n".join(out)
 
 
+def memory_overhead_table(path: str) -> str:
+    """Fold benchmarks/memory_overhead.py numbers into the overhead story:
+    per-iteration β of the event workload with the memory substrate on/off,
+    plus the bare-tracemalloc floor."""
+    if not os.path.exists(path):
+        return "(no memory_overhead.json yet — run benchmarks/memory_overhead.py)"
+    with open(path) as fh:
+        doc = json.load(fh)
+    out = ["| variant | beta us/iter |", "|---|---|"]
+    for label, beta in doc.get("beta_us", {}).items():
+        out.append(f"| {label} | {beta:.3f} |")
+    for label, beta in doc.get("floor_beta_us", {}).items():
+        out.append(f"| {label} (no monitoring) | {beta:.3f} |")
+    slowdown = doc.get("memory_slowdown")
+    if slowdown:
+        out.append("")
+        out.append(
+            f"Memory substrate slowdown on the event workload: **{slowdown:.2f}x** "
+            f"over the instrumented baseline"
+            + (" (smoke numbers)" if doc.get("smoke") else "")
+        )
+    return "\n".join(out)
+
+
 def main() -> int:
     base = os.path.join(ART, "roofline_baseline.json")
     cur = os.path.join(ART, "roofline.json")
@@ -69,6 +93,8 @@ def main() -> int:
         print(roofline_table(cur))
     print("\n### Perf iterations\n")
     print(perf_table(os.path.join(ART, "perf_iterations.json")))
+    print("\n### Memory-monitoring overhead\n")
+    print(memory_overhead_table(os.path.join(ART, "memory_overhead.json")))
     return 0
 
 

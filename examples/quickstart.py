@@ -27,7 +27,8 @@ if __name__ == "__main__":
     # Self-instrument only when not already launched under repro.scorep.
     owns = rmon.active() is None
     if owns:
-        rmon.init(instrumenter="profile", out_dir="repro-traces", experiment="quickstart")
+        rmon.init(instrumenter="profile", out_dir="repro-traces", experiment="quickstart",
+                  substrates=("profiling", "tracing", "metrics", "memory"))
 
     foo()
 
@@ -38,4 +39,10 @@ if __name__ == "__main__":
             print("  ", name)
         with open(os.path.join(run_dir, "profile.txt")) as fh:
             print("\n" + fh.read())
-        print("open trace.json in chrome://tracing or https://ui.perfetto.dev")
+
+        from repro.core.analysis import load_memory_doc, render_memory
+
+        print("== memory hotspots ==")
+        print(render_memory(load_memory_doc(run_dir), top=10))
+        print("\nopen trace.json in chrome://tracing or https://ui.perfetto.dev"
+              " (RSS/heap/GC appear as counter tracks)")

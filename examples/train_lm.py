@@ -59,7 +59,7 @@ def main() -> int:
 
     owns = rmon.active() is None
     if owns:
-        rmon.init(instrumenter="none", substrates=("metrics", "profiling"),
+        rmon.init(instrumenter="none", substrates=("metrics", "profiling", "memory"),
                   out_dir="repro-traces", experiment=f"train-{ns.preset}")
 
     result = train(
@@ -72,7 +72,15 @@ def main() -> int:
     )
     print(result)
     if owns:
-        print("monitoring artifacts:", rmon.finalize())
+        run_dir = rmon.finalize()
+        print("monitoring artifacts:", run_dir)
+        from repro.core.analysis import MissingArtifact, load_memory_doc, render_memory
+
+        try:
+            print("== memory hotspots ==")
+            print(render_memory(load_memory_doc(run_dir), top=10))
+        except MissingArtifact as exc:
+            print(f"(no memory report: {exc})")
     # training must actually learn something on the synthetic distribution
     ok = result["final_loss"] is not None and result["final_loss"] < result["first_loss"]
     print("loss improved:", ok)

@@ -2,8 +2,10 @@
 workflow (Score-P profiles are compared across runs in Cube/Vampir; here the
 comparison is programmatic and drives the §Perf loop).
 
-    PYTHONPATH=src python -m repro.core.analysis diff RUN_A RUN_B
+    PYTHONPATH=src python -m repro.core.analysis diff RUN_A RUN_B [--min-ns N]
     PYTHONPATH=src python -m repro.core.analysis top RUN_DIR
+    PYTHONPATH=src python -m repro.core.analysis memory RUN_DIR
+    PYTHONPATH=src python -m repro.core.analysis memory-diff RUN_A RUN_B
     PYTHONPATH=src python -m repro.core.analysis merge-summary SUMMARY_JSON
 """
 
@@ -11,12 +13,32 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 from typing import Any, Dict, List, Optional, Tuple
 
 
-def load_profile(run_dir: str) -> Dict[str, Any]:
-    with open(os.path.join(run_dir, "profile.json")) as fh:
+class MissingArtifact(RuntimeError):
+    """A run dir lacks the artifact a subcommand needs (wrong substrate set,
+    not a run dir at all, ...).  The CLI turns this into a one-line error."""
+
+
+def _load_artifact(run_dir: str, artifact: str, substrate: str) -> Dict[str, Any]:
+    path = os.path.join(run_dir, artifact)
+    if not os.path.exists(path):
+        raise MissingArtifact(
+            f"no {artifact} in {run_dir or '.'} — was the {substrate!r} substrate "
+            f"enabled for this run? (REPRO_MONITOR_SUBSTRATES / rmon.init(substrates=...))"
+        )
+    with open(path) as fh:
         return json.load(fh)
+
+
+def load_profile(run_dir: str) -> Dict[str, Any]:
+    return _load_artifact(run_dir, "profile.json", "profiling")
+
+
+def load_memory_doc(run_dir: str) -> Dict[str, Any]:
+    return _load_artifact(run_dir, "memory.json", "memory")
 
 
 def flat_metrics(profile: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
@@ -71,6 +93,82 @@ def render_diff(rows: List[Dict[str, Any]], top: int = 25) -> str:
     return "\n".join(out)
 
 
+def memory_hotspots(run_dir: str, top: int = 20) -> List[Tuple[str, Dict[str, Any]]]:
+    """Top allocating regions of one run, by attributed alloc bytes."""
+    regions = load_memory_doc(run_dir).get("heap", {}).get("regions", {})
+    return sorted(regions.items(), key=lambda kv: -kv[1].get("alloc_bytes", 0))[:top]
+
+
+def render_memory(doc: Dict[str, Any], top: int = 20) -> str:
+    """Human-readable memory report: top-allocators table + system summary."""
+    heap = doc.get("heap", {})
+    rss = doc.get("rss", {})
+    gc = doc.get("gc", {})
+    out = [f"{'alloc_mb':>10s} {'net_mb':>10s} {'blocks':>10s} {'flushes':>8s}  region"]
+    rows = sorted(
+        heap.get("regions", {}).items(), key=lambda kv: -kv[1].get("alloc_bytes", 0)
+    )
+    for name, row in rows[:top]:
+        out.append(
+            f"{row['alloc_bytes'] / 1e6:10.2f} {row['net_bytes'] / 1e6:10.2f} "
+            f"{row['alloc_blocks']:10d} {row['flushes']:8d}  {name}"
+        )
+    if heap.get("dropped_regions"):
+        out.append(f"(+{heap['dropped_regions']} regions beyond the top-N cut)")
+    out.append(
+        f"heap: start {heap.get('start_bytes', 0) / 1e6:.1f} MB, "
+        f"end {heap.get('end_bytes', 0) / 1e6:.1f} MB, "
+        f"peak {heap.get('peak_bytes', 0) / 1e6:.1f} MB (tracemalloc)"
+    )
+    out.append(
+        f"rss:  peak {rss.get('peak_bytes', 0) / 1e6:.1f} MB, "
+        f"end {rss.get('end_bytes', 0) / 1e6:.1f} MB "
+        f"({rss.get('samples', 0)} samples via {rss.get('source', '?')})"
+    )
+    out.append(
+        f"gc:   {gc.get('collections', 0)} collections, "
+        f"{gc.get('pause_ns_total', 0) / 1e6:.2f} ms total pause, "
+        f"{gc.get('collected', 0)} objects collected"
+    )
+    return "\n".join(out)
+
+
+def diff_memory(run_a: str, run_b: str, min_bytes: int = 0) -> List[Dict[str, Any]]:
+    """Per-region attributed-allocation deltas between two runs (B - A)."""
+    a = load_memory_doc(run_a).get("heap", {}).get("regions", {})
+    b = load_memory_doc(run_b).get("heap", {}).get("regions", {})
+    rows = []
+    for name in sorted(set(a) | set(b)):
+        aa = a.get(name, {}).get("alloc_bytes", 0)
+        ab = b.get(name, {}).get("alloc_bytes", 0)
+        if max(aa, ab) < min_bytes:
+            continue
+        rows.append(
+            {
+                "region": name,
+                "alloc_bytes_a": aa,
+                "alloc_bytes_b": ab,
+                "delta_bytes": ab - aa,
+                "ratio": (ab / aa) if aa else None if ab else 1.0,
+                "net_bytes_a": a.get(name, {}).get("net_bytes", 0),
+                "net_bytes_b": b.get(name, {}).get("net_bytes", 0),
+            }
+        )
+    rows.sort(key=lambda r: -abs(r["delta_bytes"]))
+    return rows
+
+
+def render_memory_diff(rows: List[Dict[str, Any]], top: int = 25) -> str:
+    out = [f"{'delta_mb':>10s} {'a_mb':>10s} {'b_mb':>10s} {'ratio':>7s}  region"]
+    for r in rows[:top]:
+        ratio = "new" if r["ratio"] is None else f"{r['ratio']:.2f}"
+        out.append(
+            f"{r['delta_bytes'] / 1e6:10.2f} {r['alloc_bytes_a'] / 1e6:10.2f} "
+            f"{r['alloc_bytes_b'] / 1e6:10.2f} {ratio:>7s}  {r['region']}"
+        )
+    return "\n".join(out)
+
+
 def render_merge_summary(summary: Dict[str, Any]) -> str:
     """Human-readable view of a ``merge_runs`` summary, including the
     streaming export engine's writer stats (events/bytes/chunks)."""
@@ -94,6 +192,28 @@ def render_merge_summary(summary: Dict[str, Any]) -> str:
             f"(max {export.get('max_chunk_events', 0)} events/chunk), "
             f"{mb:.1f} MB, {export.get('events_per_s', 0.0):,.0f} events/s"
         )
+    memory = summary.get("memory") or {}
+    if memory:
+        peak = memory.get("peak_rss", {})
+        imb = peak.get("imbalance")
+        out.append(
+            f"memory: peak RSS max {peak.get('max_bytes', 0) / 1e6:.1f} MB "
+            f"(rank {peak.get('max_rank')}) / min {peak.get('min_bytes', 0) / 1e6:.1f} MB "
+            f"(rank {peak.get('min_rank')}), imbalance "
+            + (f"{imb:.2f}x" if imb else "n/a")
+            + f", gc pause {memory.get('gc_pause_ns_total', 0) / 1e6:.2f} ms total"
+        )
+        for r in memory.get("ranks", []):
+            tops = ", ".join(
+                f"{t['region']} ({t['alloc_bytes'] / 1e6:.1f} MB)"
+                for t in r.get("top_regions", [])[:3]
+            )
+            out.append(
+                f"  rank {r['rank']}: peak RSS {r['peak_rss_bytes'] / 1e6:.1f} MB, "
+                f"heap {r['peak_heap_bytes'] / 1e6:.1f} MB, "
+                f"gc {r['gc_pause_ns'] / 1e6:.2f} ms"
+                + (f"; top: {tops}" if tops else "")
+            )
     if summary.get("out"):
         out.append(f"merged trace: {summary['out']}")
     return "\n".join(out)
@@ -108,20 +228,40 @@ def main(argv: Optional[List[str]] = None) -> int:
     d.add_argument("run_a")
     d.add_argument("run_b")
     d.add_argument("--top", type=int, default=25)
+    d.add_argument("--min-ns", type=int, default=0,
+                   help="drop regions below this exclusive time in both runs")
     t = sub.add_parser("top", help="hotspot table for one run")
     t.add_argument("run_dir")
     t.add_argument("--top", type=int, default=20)
+    mem = sub.add_parser("memory", help="top-allocators table for one run")
+    mem.add_argument("run_dir")
+    mem.add_argument("--top", type=int, default=20)
+    md = sub.add_parser("memory-diff", help="per-region allocation delta (B - A)")
+    md.add_argument("run_a")
+    md.add_argument("run_b")
+    md.add_argument("--top", type=int, default=25)
+    md.add_argument("--min-bytes", type=int, default=0,
+                    help="drop regions below this alloc size in both runs")
     m = sub.add_parser("merge-summary", help="render a merge summary JSON")
     m.add_argument("summary", help="merged_trace_summary.json written by repro.core.merge")
     ns = p.parse_args(argv)
-    if ns.cmd == "diff":
-        print(render_diff(diff_profiles(ns.run_a, ns.run_b), ns.top))
-    elif ns.cmd == "merge-summary":
-        with open(ns.summary) as fh:
-            print(render_merge_summary(json.load(fh)))
-    else:
-        for name, vals in hotspots(ns.run_dir, ns.top):
-            print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")
+    try:
+        if ns.cmd == "diff":
+            print(render_diff(diff_profiles(ns.run_a, ns.run_b, min_ns=ns.min_ns), ns.top))
+        elif ns.cmd == "memory":
+            print(render_memory(load_memory_doc(ns.run_dir), ns.top))
+        elif ns.cmd == "memory-diff":
+            print(render_memory_diff(
+                diff_memory(ns.run_a, ns.run_b, min_bytes=ns.min_bytes), ns.top))
+        elif ns.cmd == "merge-summary":
+            with open(ns.summary) as fh:
+                print(render_merge_summary(json.load(fh)))
+        else:
+            for name, vals in hotspots(ns.run_dir, ns.top):
+                print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")
+    except MissingArtifact as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
     return 0
 
 

@@ -31,6 +31,7 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 from .measurement import ENV_PREFIX, MeasurementConfig, finalize, init
+from .memsys.substrate import DEFAULT_PERIOD_S, DEFAULT_TOPN
 from .topology import ProcessTopology
 
 _BOOTSTRAP_MARKER = ENV_PREFIX + "BOOTSTRAPPED"
@@ -54,6 +55,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--flush-events", type=int, default=1 << 16)
     p.add_argument("--sampling-period", type=int, default=97)
     p.add_argument("--buffer", default="list", choices=["list", "numpy"])
+    p.add_argument("--memory", action="store_true",
+                   help="enable the memory substrate (REPRO_MONITOR_MEMORY=1)")
+    p.add_argument("--memory-period", type=float, default=DEFAULT_PERIOD_S,
+                   help="memory poller period in seconds")
+    p.add_argument("--memory-topn", type=int, default=DEFAULT_TOPN,
+                   help="memory.json per-region table size")
     p.add_argument("--experiment", default="run")
     p.add_argument("--mpp", default=None, choices=[None, "jax"],
                    help="multi-process paradigm (jax: rank from JAX distributed env)")
@@ -76,15 +83,20 @@ def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
     further forks see a consistent view."""
     env = dict(environ)
     topology = ProcessTopology.from_env(environ)
+    substrates = tuple(s.strip() for s in ns.substrates.split(",") if s.strip())
+    if ns.memory and "memory" not in substrates:
+        substrates = substrates + ("memory",)
     config = MeasurementConfig(
         instrumenter=ns.instrumenter,
-        substrates=tuple(s.strip() for s in ns.substrates.split(",") if s.strip()),
+        substrates=substrates,
         out_dir=ns.out,
         run_dir=ns.run_dir,
         filter_spec=ns.filter_spec,
         flush_threshold=ns.flush_events,
         sampling_period=ns.sampling_period,
         buffer_strategy=ns.buffer,
+        memory_period=ns.memory_period,
+        memory_topn=ns.memory_topn,
         rank=topology.rank,
         topology=topology,
         experiment=ns.experiment,

@@ -315,9 +315,10 @@ def _run_topology(meta: Dict[str, Any]) -> ProcessTopology:
     return ProcessTopology(rank=rank, world_size=rank + 1)
 
 
-def _metric_series(run_dir: str) -> Dict[str, List]:
-    """Load per-metric time series from metrics.json (empty if absent)."""
-    path = os.path.join(run_dir, "metrics.json")
+def _series_from(run_dir: str, artifact: str) -> Dict[str, List]:
+    """Load a ``{"series": {name: [[t_ns, value], ...]}}`` table from one of
+    the run's JSON artifacts (empty if absent/unreadable)."""
+    path = os.path.join(run_dir, artifact)
     if not os.path.exists(path):
         return {}
     try:
@@ -329,11 +330,22 @@ def _metric_series(run_dir: str) -> Dict[str, List]:
     return series if isinstance(series, dict) else {}
 
 
+def _counter_series(run_dir: str) -> Dict[str, List]:
+    """All counter-track series of a run: user metrics (metrics.json) plus
+    the memory subsystem's RSS/heap/GC/fd timelines (memory.json).  Memory
+    series are ``mem.``-prefixed at the source, so the namespaces cannot
+    collide."""
+    series = dict(_series_from(run_dir, "metrics.json"))
+    series.update(_series_from(run_dir, "memory.json"))
+    return series
+
+
 def _write_counters(
     writer: ChromeTraceWriter, run_dir: str, pid: int, offset_ns: int = 0
 ) -> None:
-    """Emit Perfetto counter ("C") tracks from the run's metric series."""
-    for name, points in sorted(_metric_series(run_dir).items()):
+    """Emit Perfetto counter ("C") tracks from the run's metric + memory
+    series."""
+    for name, points in sorted(_counter_series(run_dir).items()):
         for point in points:
             try:
                 t_ns, value = point

@@ -31,6 +31,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from .buffer import BUFFER_STRATEGIES, EV_ENTER, EV_EXIT
 from .filtering import Filter
 from .instrumenters import make_instrumenter
+from .memsys.substrate import DEFAULT_PERIOD_S, DEFAULT_TOPN
 from .regions import RegionRegistry
 from .substrates import make_substrate
 from .topology import ENV_PREFIX, ProcessTopology  # noqa: F401  (re-exported)
@@ -46,6 +47,11 @@ class MeasurementConfig:
     flush_threshold: int = 1 << 16
     sampling_period: int = 97
     buffer_strategy: str = "list"
+    # Memory monitoring (repro.core.memsys): poller period / top-N region
+    # table size.  The substrate itself is off unless "memory" appears in
+    # ``substrates`` (or REPRO_MONITOR_MEMORY=1 adds it via from_env).
+    memory_period: float = DEFAULT_PERIOD_S
+    memory_topn: int = DEFAULT_TOPN
     # ``rank`` is kept as a convenience init arg; ``topology`` is the source
     # of truth (rank + world size + local rank + mesh shape) and the two are
     # synchronized in __post_init__.  ``rank=None`` (the default) means
@@ -74,19 +80,27 @@ class MeasurementConfig:
             return environ.get(ENV_PREFIX + name, default)
 
         topology = ProcessTopology.from_env(environ)
+        substrates = tuple(
+            s.strip()
+            for s in get("SUBSTRATES", "profiling,tracing,metrics").split(",")
+            if s.strip()
+        )
+        # REPRO_MONITOR_MEMORY=1 is the one-knob switch for the memory
+        # subsystem: it appends the substrate without the user re-listing
+        # the default substrate set.
+        if get("MEMORY", "0") not in ("0", "false", "") and "memory" not in substrates:
+            substrates = substrates + ("memory",)
         return cls(
             instrumenter=get("INSTRUMENTER", cls.instrumenter),
-            substrates=tuple(
-                s.strip()
-                for s in get("SUBSTRATES", "profiling,tracing,metrics").split(",")
-                if s.strip()
-            ),
+            substrates=substrates,
             out_dir=get("OUT", cls.out_dir),
             run_dir=environ.get(ENV_PREFIX + "RUN_DIR") or None,
             filter_spec=get("FILTER", cls.filter_spec),
             flush_threshold=int(get("FLUSH", cls.flush_threshold)),
             sampling_period=int(get("SAMPLING_PERIOD", cls.sampling_period)),
             buffer_strategy=get("BUFFER", cls.buffer_strategy),
+            memory_period=float(get("MEMORY_PERIOD", cls.memory_period)),
+            memory_topn=int(get("MEMORY_TOPN", cls.memory_topn)),
             rank=topology.rank,
             topology=topology,
             experiment=get("EXPERIMENT", cls.experiment),
@@ -103,6 +117,9 @@ class MeasurementConfig:
             ENV_PREFIX + "FLUSH": str(self.flush_threshold),
             ENV_PREFIX + "SAMPLING_PERIOD": str(self.sampling_period),
             ENV_PREFIX + "BUFFER": self.buffer_strategy,
+            ENV_PREFIX + "MEMORY": "1" if "memory" in self.substrates else "0",
+            ENV_PREFIX + "MEMORY_PERIOD": str(self.memory_period),
+            ENV_PREFIX + "MEMORY_TOPN": str(self.memory_topn),
             ENV_PREFIX + "EXPERIMENT": self.experiment,
             ENV_PREFIX + "CHROME": "1" if self.chrome_export else "0",
             ENV_PREFIX + "SERIES": "1" if self.keep_series else "0",
@@ -131,6 +148,10 @@ class Measurement:
                 self._substrates.append(make_substrate(name, chrome_export=config.chrome_export))
             elif name == "metrics":
                 self._substrates.append(make_substrate(name, keep_series=config.keep_series))
+            elif name == "memory":
+                self._substrates.append(
+                    make_substrate(name, period=config.memory_period, topn=config.memory_topn)
+                )
             else:
                 self._substrates.append(make_substrate(name))
         if config.instrumenter == "sampling":

@@ -1,0 +1,45 @@
+"""repro.core.memsys — memory monitoring subsystem.
+
+Memory is a first-class measurement signal next to time (the paper hosts
+arbitrary metric sources — plugins, rusage, PAPI — alongside region
+instrumentation; the HPC-monitoring literature treats memory behaviour as a
+production-critical signal).  This package provides:
+
+* :mod:`sysinfo` — cheap process-level probes: RSS (``/proc/self/statm``
+  with a ``resource.getrusage`` fallback), open file descriptors.
+* :mod:`poller` — a background sampling thread (RSS / traced heap / fd
+  timelines) and a GC-pause watcher built on ``gc.callbacks``.
+* :mod:`heap` — a tracemalloc-based heap collector that attributes
+  allocation deltas to the live region shadow stack at buffer-flush
+  granularity (sharing the replay machinery in :mod:`repro.core.replay`
+  with the profiling substrate).
+* :mod:`substrate` — the ``memory`` measurement substrate writing
+  ``memory.json`` (per-region allocation attribution, per-thread peaks,
+  RSS/GC/fd timelines) into the run directory.
+
+Enable with ``REPRO_MONITOR_MEMORY=1`` (period / table size via
+``REPRO_MONITOR_MEMORY_PERIOD`` / ``REPRO_MONITOR_MEMORY_TOPN``) or by
+adding ``"memory"`` to the substrate list.
+"""
+
+from .heap import HeapCollector  # noqa: F401
+from .poller import GcWatcher, SystemPoller  # noqa: F401
+from .substrate import (  # noqa: F401
+    DEFAULT_PERIOD_S,
+    DEFAULT_TOPN,
+    MemorySubstrate,
+    load_memory,
+)
+from .sysinfo import open_fd_count, rss_bytes  # noqa: F401
+
+__all__ = [
+    "DEFAULT_PERIOD_S",
+    "DEFAULT_TOPN",
+    "GcWatcher",
+    "HeapCollector",
+    "MemorySubstrate",
+    "SystemPoller",
+    "load_memory",
+    "open_fd_count",
+    "rss_bytes",
+]

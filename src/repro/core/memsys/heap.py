@@ -1,0 +1,202 @@
+"""Heap collector — tracemalloc deltas attributed to the region shadow stack.
+
+Score-P attributes metric values to the call path active when the metric is
+read; scalene showed the same idea pays off for Python heap traffic.  Our
+measurement substrates only see events at *flush* granularity (the per-event
+fast path stays a single buffer append), so the collector works at the same
+granularity: at every buffer flush it reads the process-wide traced heap
+(``tracemalloc.get_traced_memory``) and allocated-block count
+(``sys.getallocatedblocks``), computes the delta since the previous flush,
+and distributes it over the regions of the flushed batch proportionally to
+their *exclusive time* within the batch — derived by replaying the batch
+through the same shadow-stack machinery the profiling substrate uses
+(:mod:`repro.core.replay`), so both substrates agree on what "the live
+region" is for malformed streams.  Time not covered by a frame closed in
+the batch (regions still open at the flush boundary) is charged to the
+region at the top of the live stack.
+
+This is an attribution *approximation* (allocation rate is assumed uniform
+over the flush interval's wall time), the standard trade of sampling
+profilers: exact per-allocation attribution costs a tracemalloc snapshot
+diff per flush — orders of magnitude more than the entire measurement
+fast path.
+"""
+
+from __future__ import annotations
+
+import sys
+import tracemalloc
+from typing import Any, Dict, List
+
+from ..replay import ReplayState, replay, unwind
+
+#: Region id used for deltas observed with an empty shadow stack.
+TOPLEVEL = -1
+
+
+class _ThreadHeap:
+    __slots__ = ("replay", "peak_heap_bytes", "flushes")
+
+    def __init__(self):
+        self.replay = ReplayState()
+        self.peak_heap_bytes = 0
+        self.flushes = 0
+
+
+class HeapCollector:
+    """Per-region net/alloc byte and block accounting at flush granularity."""
+
+    def __init__(self, trace_python: bool = True):
+        self.trace_python = trace_python
+        self._started_tracing = False
+        self._threads: Dict[int, _ThreadHeap] = {}
+        # rid -> [alloc_bytes, freed_bytes, net_bytes, alloc_blocks, flushes];
+        # byte/block fields are floats (time-weighted shares), rounded at
+        # report time.
+        self._regions: Dict[int, List[float]] = {}
+        self._last_heap = 0
+        self._last_blocks = 0
+        self.start_bytes = 0
+        self.end_bytes = 0
+        self.peak_bytes = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def open(self) -> None:
+        if self.trace_python and not tracemalloc.is_tracing():
+            tracemalloc.start()
+            self._started_tracing = True
+        if tracemalloc.is_tracing():
+            self._last_heap, _ = tracemalloc.get_traced_memory()
+        self.start_bytes = self._last_heap
+        self._last_blocks = sys.getallocatedblocks()
+
+    def close(self) -> None:
+        if tracemalloc.is_tracing():
+            self.end_bytes, self.peak_bytes = tracemalloc.get_traced_memory()
+        if self._started_tracing:
+            tracemalloc.stop()
+            self._started_tracing = False
+        for state in self._threads.values():
+            unwind(state.replay)
+
+    # -- flush path ---------------------------------------------------------
+
+    def on_flush(self, thread_id: int, columns: Dict[str, Any]) -> None:
+        state = self._threads.get(thread_id)
+        if state is None:
+            state = self._threads[thread_id] = _ThreadHeap()
+        span_start = state.replay.last_t
+
+        # Replay the batch, accumulating per-region exclusive time *within
+        # this batch* as the attribution weights.  Frames that opened in an
+        # earlier batch are clipped to the batch span and only the child
+        # time they accumulated during this batch is subtracted (snapshot
+        # below) — otherwise a long-lived frame closing here would absorb
+        # the whole delta with its lifetime duration.
+        excl: Dict[int, int] = {}
+        replay_state = state.replay
+        child_base = [frame[2] for frame in replay_state.stack]
+
+        def on_close(rid: int, enter_t: int, exit_t: int, child_ns: int) -> None:
+            depth = len(replay_state.stack)  # the closed frame's position
+            if depth < len(child_base):
+                base = child_base[depth]
+                # Once an inherited frame closes, its depth can be reoccupied
+                # by frames pushed during this batch — those must start from
+                # a zero baseline, so drop the stale snapshot entries.
+                del child_base[depth:]
+            else:
+                base = 0
+            weight = (exit_t - max(enter_t, span_start)) - (child_ns - base)
+            if weight > 0:
+                excl[rid] = excl.get(rid, 0) + weight
+
+        replay(
+            state.replay, columns["kind"], columns["region"], columns["t"],
+            on_close=on_close,
+        )
+        state.flushes += 1
+
+        if not tracemalloc.is_tracing():
+            return
+        heap, _ = tracemalloc.get_traced_memory()
+        blocks = sys.getallocatedblocks()
+        d_heap = heap - self._last_heap
+        d_blocks = blocks - self._last_blocks
+        self._last_heap = heap
+        self._last_blocks = blocks
+        state.peak_heap_bytes = max(state.peak_heap_bytes, heap)
+
+        # Time inside frames still open at the flush boundary is not covered
+        # by any closed frame; charge it to the live stack top.
+        span = state.replay.last_t - span_start if span_start else 0
+        covered = sum(excl.values())
+        remainder = span - covered
+        if remainder > 0 or not excl:
+            live = state.replay.live_region()
+            excl[live] = excl.get(live, 0) + max(remainder, 0)
+        total = sum(excl.values())
+        if total <= 0:  # zero-width batch: all weight on the live region
+            excl = {state.replay.live_region(): 1}
+            total = 1
+        for rid, weight in excl.items():
+            share = weight / total
+            agg = self._regions.get(rid)
+            if agg is None:
+                agg = self._regions[rid] = [0.0, 0.0, 0.0, 0.0, 0]
+            part = d_heap * share
+            if part >= 0:
+                agg[0] += part
+            else:
+                agg[1] += -part
+            agg[2] += part
+            if d_blocks > 0:
+                agg[3] += d_blocks * share
+            agg[4] += 1
+
+    # -- reporting ----------------------------------------------------------
+
+    def region_table(
+        self, region_table: List[Dict[str, Any]], topn: int = 0
+    ) -> Dict[str, Any]:
+        """Named per-region attribution, top-N by alloc bytes.
+
+        Returns ``{"regions": {...}, "dropped_regions": n}`` where dropped
+        counts entries beyond the top-N cut (their bytes stay visible in the
+        heap totals, only the per-region rows are elided).
+        """
+
+        def name_of(rid: int) -> str:
+            if rid < 0:
+                return "<toplevel>"
+            r = region_table[rid]
+            return f"{r['module']}:{r['name']}"
+
+        rows = sorted(self._regions.items(), key=lambda kv: -kv[1][0])
+        dropped = 0
+        if topn and len(rows) > topn:
+            dropped = len(rows) - topn
+            rows = rows[:topn]
+        regions = {
+            name_of(rid): {
+                "alloc_bytes": int(agg[0]),
+                "freed_bytes": int(agg[1]),
+                "net_bytes": int(agg[2]),
+                "alloc_blocks": int(agg[3]),
+                "flushes": agg[4],
+            }
+            for rid, agg in rows
+        }
+        return {"regions": regions, "dropped_regions": dropped}
+
+    def thread_table(self) -> Dict[str, Dict[str, int]]:
+        return {
+            str(tid): {
+                "peak_heap_bytes": state.peak_heap_bytes,
+                "flushes": state.flushes,
+                "orphan_exits": state.replay.orphan_exits,
+                "mismatched_exits": state.replay.mismatched_exits,
+            }
+            for tid, state in sorted(self._threads.items())
+        }

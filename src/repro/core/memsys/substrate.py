@@ -1,0 +1,130 @@
+"""The ``memory`` measurement substrate — memory.json writer.
+
+Composes the heap collector (per-region allocation attribution), the
+system poller (RSS / heap / fd timelines), and the GC watcher into one
+substrate.  Artifact:
+
+    memory.json
+      heap      per-region alloc/net bytes + blocks, per-thread peaks
+      rss       peak/end + probe source
+      gc        collections, pause totals, per-generation breakdown
+      fds       peak/end open file descriptors
+      series    counter timelines on the perf_counter_ns timebase
+                (``mem.rss_mb``, ``mem.heap_mb``, ``mem.fds``,
+                ``mem.gc_pause_ms``) — the export engine renders these as
+                Perfetto counter tracks next to the metrics.json series.
+
+Disabled by default; enabled via ``REPRO_MONITOR_MEMORY=1`` or by listing
+``memory`` in the substrates.  When disabled no collector, poller, or GC
+callback is installed and tracemalloc stays off, so the event fast path
+and the flush path are untouched.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from ..substrates.base import Substrate
+from .heap import HeapCollector
+from .poller import GcWatcher, SystemPoller
+
+DEFAULT_PERIOD_S = 0.1
+DEFAULT_TOPN = 25
+
+ARTIFACT = "memory.json"
+
+
+class MemorySubstrate(Substrate):
+    name = "memory"
+
+    def __init__(
+        self,
+        period: float = DEFAULT_PERIOD_S,
+        topn: int = DEFAULT_TOPN,
+        trace_python: bool = True,
+    ):
+        self.period = float(period)
+        self.topn = int(topn)
+        self.heap = HeapCollector(trace_python=trace_python)
+        self.poller = SystemPoller(period_s=self.period)
+        self.gc = GcWatcher()
+        self._run_dir = ""
+        self._meta: Dict[str, Any] = {}
+
+    def open(self, run_dir: str, meta: Dict[str, Any]) -> None:
+        self._run_dir = run_dir
+        self._meta = meta
+        self.heap.open()
+        self.gc.install()
+        self.poller.sample()  # opening endpoint even for sub-period runs
+        self.poller.start()
+
+    def on_flush(self, thread_id: int, columns) -> None:
+        self.heap.on_flush(thread_id, columns)
+
+    def close(self, region_table: List[Dict[str, Any]]) -> None:
+        self.poller.stop()
+        self.gc.uninstall()
+        self.heap.close()
+        doc = self.document(region_table)
+        with open(os.path.join(self._run_dir, ARTIFACT), "w") as fh:
+            json.dump(doc, fh, indent=1, allow_nan=False)
+
+    # -- document assembly (separate so tests/tools can introspect) ---------
+
+    def document(self, region_table: List[Dict[str, Any]]) -> Dict[str, Any]:
+        heap_doc = self.heap.region_table(region_table, topn=self.topn)
+        heap_doc.update(
+            start_bytes=self.heap.start_bytes,
+            end_bytes=self.heap.end_bytes,
+            peak_bytes=self.heap.peak_bytes,
+            threads=self.heap.thread_table(),
+        )
+        rss_series = self.poller.rss
+        fd_series = self.poller.fds
+        series = {
+            "mem.rss_mb": [[t, v / 1e6] for t, v in rss_series],
+            "mem.heap_mb": [[t, v / 1e6] for t, v in self.poller.heap],
+            "mem.fds": [[t, float(v)] for t, v in fd_series],
+            "mem.gc_pause_ms": [[t, p / 1e6] for t, p in self.gc.pauses],
+        }
+        return {
+            "meta": self._meta,
+            "config": {"period_s": self.period, "topn": self.topn},
+            "heap": heap_doc,
+            "rss": {
+                "peak_bytes": self.poller.peak_rss,
+                "end_bytes": rss_series[-1][1] if rss_series else 0,
+                "samples": self.poller.n_samples,
+                "source": self.poller.rss_source,
+            },
+            "gc": {
+                "collections": self.gc.collections,
+                "pause_ns_total": self.gc.pause_ns_total,
+                "collected": self.gc.collected,
+                "uncollectable": self.gc.uncollectable,
+                "per_generation": {
+                    str(g): agg for g, agg in sorted(self.gc.per_generation.items())
+                },
+            },
+            "fds": {
+                "peak": self.poller.peak_fds,
+                "end": fd_series[-1][1] if fd_series else None,
+            },
+            "series": {k: v for k, v in series.items() if v},
+        }
+
+
+def load_memory(run_dir: str) -> Optional[Dict[str, Any]]:
+    """Read a run's memory.json (``None`` when the substrate was off or the
+    artifact is unreadable — callers treat memory data as best-effort)."""
+    path = os.path.join(run_dir, ARTIFACT)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None

@@ -1,0 +1,74 @@
+"""Process-level memory/system probes.
+
+Everything here must be cheap enough to call from the poller thread at a
+sub-second period and from per-step driver annotations: one small file read
+or one syscall, no allocation-heavy parsing.  Like the rest of the
+monitoring core this module is jax-free and degrades gracefully off-Linux:
+``/proc/self/statm`` first, ``resource.getrusage`` (peak RSS) as the
+documented fallback, ``None``/0 when neither source exists.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import Optional
+
+_STATM_PATH = "/proc/self/statm"
+_PAGE_SIZE = os.sysconf("SC_PAGE_SIZE") if hasattr(os, "sysconf") else 4096
+
+#: Which probe produced the last successful ``rss_bytes`` reading
+#: ("statm" | "getrusage" | "none"); recorded in memory.json so readers
+#: know whether the timeline is current RSS or the rusage high-water mark.
+_rss_source = "none"
+
+
+def _rss_from_statm() -> Optional[int]:
+    try:
+        with open(_STATM_PATH, "rb") as fh:
+            fields = fh.read().split()
+        return int(fields[1]) * _PAGE_SIZE
+    except (OSError, IndexError, ValueError):
+        return None
+
+
+def _rss_from_getrusage() -> Optional[int]:
+    try:
+        import resource
+    except ImportError:
+        return None
+    ru_maxrss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is kilobytes on Linux, bytes on macOS.
+    return ru_maxrss if sys.platform == "darwin" else ru_maxrss * 1024
+
+
+def rss_bytes() -> int:
+    """Resident set size in bytes (0 when no probe is available).
+
+    Prefers the live reading from ``/proc/self/statm``; falls back to the
+    ``getrusage`` peak-RSS high-water mark on platforms without procfs.
+    """
+    global _rss_source
+    rss = _rss_from_statm()
+    if rss is not None:
+        _rss_source = "statm"
+        return rss
+    rss = _rss_from_getrusage()
+    if rss is not None:
+        _rss_source = "getrusage"
+        return rss
+    _rss_source = "none"
+    return 0
+
+
+def rss_source() -> str:
+    """Probe that served the most recent :func:`rss_bytes` call."""
+    return _rss_source
+
+
+def open_fd_count() -> Optional[int]:
+    """Number of open file descriptors (``None`` when undeterminable)."""
+    try:
+        return len(os.listdir("/proc/self/fd"))
+    except OSError:
+        return None

@@ -26,7 +26,64 @@ import warnings
 from typing import Any, Dict, List, Optional
 
 from .export import load_defs, merge_chrome_trace
+from .memsys import load_memory
 from .topology import ProcessTopology
+
+
+def memory_summary(entries: List[Dict[str, Any]], top: int = 5) -> Optional[Dict[str, Any]]:
+    """Cross-rank memory section for the merge summary.
+
+    Reads each selected rank's ``memory.json`` (best-effort: ranks without
+    the memory substrate are simply absent) and reports per-rank peak
+    RSS/heap, GC pause totals, and top allocating regions, plus the
+    peak-RSS imbalance (max/min across ranks) — the load-balance signal the
+    HPC-monitoring literature calls out for production jobs.
+    """
+    ranks = []
+    for entry in entries:
+        doc = load_memory(entry["run_dir"])
+        if doc is None:
+            continue
+        heap = doc.get("heap", {})
+        regions = heap.get("regions", {})
+        top_regions = [
+            {"region": name, "alloc_bytes": int(row.get("alloc_bytes", 0))}
+            for name, row in sorted(
+                regions.items(), key=lambda kv: -kv[1].get("alloc_bytes", 0)
+            )[:top]
+        ]
+        ranks.append(
+            {
+                "rank": entry["pid"],
+                "run_dir": entry["run_dir"],
+                "peak_rss_bytes": int(doc.get("rss", {}).get("peak_bytes", 0)),
+                "rss_source": doc.get("rss", {}).get("source", "?"),
+                "peak_heap_bytes": int(heap.get("peak_bytes", 0)),
+                "gc_pause_ns": int(doc.get("gc", {}).get("pause_ns_total", 0)),
+                "gc_collections": int(doc.get("gc", {}).get("collections", 0)),
+                "top_regions": top_regions,
+            }
+        )
+    if not ranks:
+        return None
+    peaks = [r["peak_rss_bytes"] for r in ranks]
+    hi = max(ranks, key=lambda r: r["peak_rss_bytes"])
+    lo = min(ranks, key=lambda r: r["peak_rss_bytes"])
+    return {
+        "ranks": ranks,
+        "peak_rss": {
+            "max_bytes": hi["peak_rss_bytes"],
+            "max_rank": hi["rank"],
+            "min_bytes": lo["peak_rss_bytes"],
+            "min_rank": lo["rank"],
+            "imbalance": (
+                hi["peak_rss_bytes"] / lo["peak_rss_bytes"]
+                if lo["peak_rss_bytes"] > 0
+                else None
+            ),
+        },
+        "gc_pause_ns_total": sum(r["gc_pause_ns"] for r in ranks),
+    }
 
 
 def find_runs(root: str, experiment: Optional[str] = None) -> List[str]:
@@ -153,6 +210,9 @@ def merge_runs(
         summary["total_events"] += n
     summary["out"] = out_path
     summary["export"] = {k: v for k, v in stats.items() if k != "per_run_events"}
+    memory = memory_summary(selected)
+    if memory is not None:
+        summary["memory"] = memory
     return summary
 
 

@@ -170,12 +170,16 @@ def measure_inprocess_beta(
     repeats: int = 5,
     buffer_strategy: str = "list",
     sampling_period: int = 97,
+    substrates: Sequence[str] = (),
+    flush_threshold: int = 1 << 16,
 ) -> Tuple[float, float]:
     """In-process variant: isolates β from interpreter/JAX startup noise.
 
     Used by the event-throughput benchmark and the §Perf hillclimb loop where
     only the per-event cost is under study.  Compiles the case source once and
-    times exec() under an installed instrumenter.
+    times exec() under an installed instrumenter.  ``substrates`` defaults to
+    none (pure event-path cost); ``benchmarks/memory_overhead.py`` passes
+    ``("memory",)`` to measure the heap collector's flush-time share.
     """
     from .measurement import MeasurementConfig, Measurement
 
@@ -187,10 +191,11 @@ def measure_inprocess_beta(
         for _ in range(repeats):
             cfg = MeasurementConfig(
                 instrumenter=instrumenter,
-                substrates=(),
+                substrates=tuple(substrates),
                 run_dir=tempfile.mkdtemp(prefix="repro-beta-"),
                 buffer_strategy=buffer_strategy,
                 sampling_period=sampling_period,
+                flush_threshold=flush_threshold,
             )
             m = Measurement(cfg)
             glb = {"__name__": "__overhead__"}

@@ -1,0 +1,124 @@
+"""Shared shadow-stack replay over flushed event batches.
+
+Substrates that need call-context (the profiling substrate's call tree, the
+memory substrate's per-region heap attribution) replay flushed event columns
+through a per-thread shadow stack.  The stack discipline — push on enter,
+pop on exit, implicit close of an inner frame that lost its exit, orphan /
+mismatch bookkeeping — used to live inline in the profiling substrate; it is
+factored out here so every consumer interprets malformed streams (a C exit
+interleaved with a Python exit, an exit with no enter after a mid-run
+attach) identically.
+
+A frame is ``[region, enter_t, child_ns]``; ``child_ns`` accumulates the
+inclusive time of closed children so consumers can derive exclusive time.
+Consumers observe transitions through three optional callbacks:
+
+    on_enter(region, t)                        after the frame is pushed
+    on_close(region, enter_t, exit_t, child_ns) when a frame closes
+    on_other(kind, region, t, aux)             LINE / EXCEPTION / ... events
+
+Callbacks run once per event at flush granularity — never on the per-event
+instrumentation fast path.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from .buffer import EV_C_ENTER, EV_C_EXIT, EV_ENTER, EV_EXIT
+
+OnEnter = Optional[Callable[[int, int], None]]
+OnClose = Optional[Callable[[int, int, int, int], None]]
+OnOther = Optional[Callable[[int, int, int, int], None]]
+
+
+class ReplayState:
+    """Per-thread shadow stack + malformed-stream counters."""
+
+    __slots__ = ("stack", "last_t", "orphan_exits", "mismatched_exits")
+
+    def __init__(self):
+        self.stack: List[List[int]] = []  # frames: [region, enter_t, child_ns]
+        self.last_t = 0
+        self.orphan_exits = 0
+        self.mismatched_exits = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self.stack)
+
+    def live_region(self) -> int:
+        """Region open at the top of the stack (-1 at top level)."""
+        return self.stack[-1][0] if self.stack else -1
+
+    def live_stack(self) -> List[int]:
+        """The open region ids, outermost first."""
+        return [frame[0] for frame in self.stack]
+
+
+def replay(
+    state: ReplayState,
+    kinds,
+    regions,
+    ts,
+    auxs=None,
+    on_enter: OnEnter = None,
+    on_close: OnClose = None,
+    on_other: OnOther = None,
+) -> None:
+    """Replay one flushed batch of event columns through ``state``.
+
+    ``kinds`` / ``regions`` / ``ts`` / ``auxs`` may be numpy columns or
+    plain sequences; they are converted with ``tolist()`` once (element
+    access on numpy arrays is far slower than on lists).
+    """
+    kinds = kinds.tolist() if hasattr(kinds, "tolist") else kinds
+    regions = regions.tolist() if hasattr(regions, "tolist") else regions
+    ts = ts.tolist() if hasattr(ts, "tolist") else ts
+    if auxs is not None and hasattr(auxs, "tolist"):
+        auxs = auxs.tolist()
+    stack = state.stack
+    for i, kind in enumerate(kinds):
+        t = ts[i]
+        if kind == EV_ENTER or kind == EV_C_ENTER:
+            rid = regions[i]
+            if on_enter is not None:
+                on_enter(rid, t)
+            stack.append([rid, t, 0])
+        elif kind == EV_EXIT or kind == EV_C_EXIT:
+            rid = regions[i]
+            if not stack:
+                state.orphan_exits += 1
+                state.last_t = t
+                continue
+            if stack[-1][0] != rid:
+                # An exit that doesn't match the open region.  If the parent
+                # matches, the inner frame lost its exit — close it
+                # implicitly; otherwise count and pop anyway.
+                if len(stack) >= 2 and stack[-2][0] == rid:
+                    region, enter_t, child_ns = stack.pop()
+                    if on_close is not None:
+                        on_close(region, enter_t, t, child_ns)
+                    stack[-1][2] += t - enter_t
+                else:
+                    state.mismatched_exits += 1
+            region, enter_t, child_ns = stack.pop()
+            if on_close is not None:
+                on_close(region, enter_t, t, child_ns)
+            if stack:
+                stack[-1][2] += t - enter_t
+        elif on_other is not None:
+            on_other(kind, regions[i], t, auxs[i] if auxs is not None else 0)
+        state.last_t = t
+
+
+def unwind(state: ReplayState, on_close: OnClose = None) -> None:
+    """Close frames still open at finalize (the program is always inside
+    ``__main__`` etc. when measurement stops) using the last seen timestamp."""
+    t = state.last_t
+    while state.stack:
+        region, enter_t, child_ns = state.stack.pop()
+        if on_close is not None:
+            on_close(region, enter_t, t, child_ns)
+        if state.stack:
+            state.stack[-1][2] += t - enter_t

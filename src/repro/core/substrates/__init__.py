@@ -15,12 +15,23 @@ SUBSTRATES: Dict[str, Type[Substrate]] = {
     MetricsSubstrate.name: MetricsSubstrate,
 }
 
+#: Substrates registered on first use.  The memory substrate lives in the
+#: sibling ``repro.core.memsys`` package, which itself depends on
+#: ``substrates.base`` — lazy registration keeps the import graph acyclic.
+_LAZY = {"memory": "repro.core.memsys.substrate"}
+
 
 def make_substrate(name: str, **kwargs) -> Substrate:
-    try:
-        cls = SUBSTRATES[name]
-    except KeyError:
-        raise ValueError(f"unknown substrate {name!r}; available: {sorted(SUBSTRATES)}") from None
+    cls = SUBSTRATES.get(name)
+    if cls is None and name in _LAZY:
+        import importlib
+
+        module = importlib.import_module(_LAZY[name])
+        cls = getattr(module, "MemorySubstrate")
+        SUBSTRATES[cls.name] = cls
+    if cls is None:
+        available = sorted(set(SUBSTRATES) | set(_LAZY))
+        raise ValueError(f"unknown substrate {name!r}; available: {available}")
     return cls(**kwargs)
 
 

@@ -4,6 +4,8 @@ Builds a call tree with per-node metrics (visits, inclusive/exclusive ns)
 by replaying buffered event batches with a per-thread shadow stack.  Unlike
 Score-P (which updates the profile online per event), construction happens
 at *flush* granularity; the per-event cost stays a single buffer append.
+The stack discipline itself (including orphan/mismatched-exit handling)
+lives in :mod:`repro.core.replay`, shared with the memory substrate.
 
 Artifacts:
     profile.json   call tree + flat per-region table (the Cube data model:
@@ -20,14 +22,8 @@ from typing import Any, Dict, List
 
 import numpy as np
 
-from ..buffer import (
-    EV_C_ENTER,
-    EV_C_EXIT,
-    EV_ENTER,
-    EV_EXCEPTION,
-    EV_EXIT,
-    EV_LINE,
-)
+from ..buffer import EV_EXCEPTION, EV_LINE
+from ..replay import ReplayState, replay, unwind
 from .base import Substrate
 
 
@@ -51,27 +47,51 @@ class _Node:
 
 
 class _ThreadState:
-    __slots__ = (
-        "root",
-        "node",
-        "stack",
-        "last_t",
-        "orphan_exits",
-        "mismatched_exits",
-        "lines",
-        "exceptions",
-    )
+    __slots__ = ("root", "node", "replay", "lines", "exceptions")
 
     def __init__(self):
         self.root = _Node(-1, None)
         self.node = self.root
-        # stack holds (enter_t, child_ns_accumulator) parallel to node depth
-        self.stack: List[List[int]] = []
-        self.last_t = 0
-        self.orphan_exits = 0
-        self.mismatched_exits = 0
+        self.replay = ReplayState()
         self.lines: Dict[int, int] = {}
         self.exceptions = 0
+
+    # Compatibility accessors (tests and tools read these off the state).
+    @property
+    def stack(self) -> List[List[int]]:
+        return self.replay.stack
+
+    @property
+    def last_t(self) -> int:
+        return self.replay.last_t
+
+    @property
+    def orphan_exits(self) -> int:
+        return self.replay.orphan_exits
+
+    @property
+    def mismatched_exits(self) -> int:
+        return self.replay.mismatched_exits
+
+    # Replay callbacks: descend/ascend the call tree in lock-step with the
+    # shared shadow stack and accumulate the timing metrics.
+    def _on_enter(self, region: int, t: int) -> None:
+        self.node = self.node.child(region)
+
+    def _on_close(self, region: int, enter_t: int, exit_t: int, child_ns: int) -> None:
+        node = self.node
+        dur = exit_t - enter_t
+        node.visits += 1
+        node.incl_ns += dur
+        node.excl_ns += dur - child_ns
+        if node.parent is not None:
+            self.node = node.parent
+
+    def _on_other(self, kind: int, region: int, t: int, aux: int) -> None:
+        if kind == EV_LINE:
+            self.lines[region] = self.lines.get(region, 0) + 1
+        elif kind == EV_EXCEPTION:
+            self.exceptions += 1
 
 
 class ProfilingSubstrate(Substrate):
@@ -97,72 +117,18 @@ class ProfilingSubstrate(Substrate):
         state = self._threads.get(thread_id)
         if state is None:
             state = self._threads[thread_id] = _ThreadState()
-        kinds = columns["kind"].tolist()
-        regions = columns["region"].tolist()
-        ts = columns["t"].tolist()
-        auxs = columns["aux"].tolist()
-        node = state.node
-        stack = state.stack
-        for i, kind in enumerate(kinds):
-            t = ts[i]
-            if kind == EV_ENTER or kind == EV_C_ENTER:
-                node = node.child(regions[i])
-                stack.append([t, 0])
-            elif kind == EV_EXIT or kind == EV_C_EXIT:
-                if not stack:
-                    state.orphan_exits += 1
-                    continue
-                if node.region != regions[i]:
-                    # Defensive: an exit that doesn't match the open region.
-                    # If the parent matches, the inner frame lost its exit —
-                    # close it implicitly; otherwise count and pop anyway.
-                    if (
-                        node.parent is not None
-                        and node.parent.region == regions[i]
-                        and len(stack) >= 2
-                    ):
-                        enter_t, child_ns = stack.pop()
-                        dur = t - enter_t
-                        node.visits += 1
-                        node.incl_ns += dur
-                        node.excl_ns += dur - child_ns
-                        node = node.parent
-                        stack[-1][1] += dur
-                    else:
-                        state.mismatched_exits += 1
-                enter_t, child_ns = stack.pop()
-                dur = t - enter_t
-                node.visits += 1
-                node.incl_ns += dur
-                node.excl_ns += dur - child_ns
-                node = node.parent
-                if stack:
-                    stack[-1][1] += dur
-            elif kind == EV_LINE:
-                rid = regions[i]
-                state.lines[rid] = state.lines.get(rid, 0) + 1
-            elif kind == EV_EXCEPTION:
-                state.exceptions += 1
-            state.last_t = t
-        state.node = node
+        replay(
+            state.replay,
+            columns["kind"],
+            columns["region"],
+            columns["t"],
+            auxs=columns.get("aux"),
+            on_enter=state._on_enter,
+            on_close=state._on_close,
+            on_other=state._on_other,
+        )
 
     # -- finalize -----------------------------------------------------------
-
-    def _unwind(self, state: _ThreadState) -> None:
-        """Close regions still on the stack at finalize (paper: the program
-        is always inside ``__main__`` etc. when measurement stops)."""
-        node = state.node
-        t = state.last_t
-        while state.stack:
-            enter_t, child_ns = state.stack.pop()
-            dur = t - enter_t
-            node.visits += 1
-            node.incl_ns += dur
-            node.excl_ns += dur - child_ns
-            node = node.parent
-            if state.stack:
-                state.stack[-1][1] += dur
-        state.node = node
 
     def close(self, region_table: List[Dict[str, Any]]) -> None:
         def name_of(rid: int) -> str:
@@ -190,7 +156,7 @@ class ProfilingSubstrate(Substrate):
 
         threads_doc = {}
         for tid, state in sorted(self._threads.items()):
-            self._unwind(state)
+            unwind(state.replay, state._on_close)
             threads_doc[str(tid)] = {
                 "calltree": tree_dict(state.root),
                 "orphan_exits": state.orphan_exits,

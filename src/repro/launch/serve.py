@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as rmon
+from repro.core.memsys import rss_bytes
 from repro.configs import get_config, get_smoke_config
 from repro.dist import serve as dserve
 from repro.models import lm_init
@@ -58,6 +59,9 @@ def serve(
         logits, cache = jax.block_until_ready(prefill_fn(params, host_batch))
     t_prefill = time.perf_counter() - t0
     rmon.metric("serve.prefill_ms", t_prefill * 1e3)
+    # Slot memory watermark after prefill: the KV cache for all slots is
+    # materialized here, so this is the high-water mark per batch of slots.
+    rmon.metric("serve.prefill_rss_mb", rss_bytes() / 1e6)
 
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     generated = [tok]
@@ -70,6 +74,7 @@ def serve(
         generated.append(tok)
     t_decode = time.perf_counter() - t1
     rmon.metric("serve.decode_tok_s", batch * (gen - 1) / max(t_decode, 1e-9))
+    rmon.metric("serve.decode_rss_mb", rss_bytes() / 1e6)
 
     out = jnp.concatenate(generated, axis=1)
     return {

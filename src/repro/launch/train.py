@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as rmon
+from repro.core.memsys import rss_bytes
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config
 from repro.data import DataConfig, Prefetcher, SyntheticLM
@@ -125,6 +126,11 @@ def train(
             losses.append(loss)
             rmon.metric("train.loss", loss)
             rmon.metric("train.tokens", global_batch * seq_len)
+            # Per-step memory watermark: host RSS after the step completed
+            # (device buffers live in RSS on CPU backends; on accelerators
+            # this tracks the host-side share — staging, prefetch, optimizer
+            # mirrors).  Feeds the mem counter tracks in the trace view.
+            rmon.metric("train.rss_mb", rss_bytes() / 1e6)
             if (step_i + 1) % log_every == 0 or step_i == start_step:
                 tps = global_batch * seq_len / dt
                 print(

@@ -1,0 +1,440 @@
+"""Memory monitoring subsystem (repro.core.memsys) + shared replay tests."""
+
+import gc
+import json
+import os
+
+import pytest
+
+import repro.core as rmon
+from repro.core.analysis import (
+    MissingArtifact,
+    diff_memory,
+    load_memory_doc,
+    memory_hotspots,
+    render_memory,
+    render_memory_diff,
+    render_merge_summary,
+)
+from repro.core.buffer import (
+    EV_C_ENTER,
+    EV_C_EXIT,
+    EV_ENTER,
+    EV_EXIT,
+    columns_from_events,
+)
+from repro.core.measurement import MeasurementConfig
+from repro.core.memsys import (
+    GcWatcher,
+    HeapCollector,
+    SystemPoller,
+    open_fd_count,
+    rss_bytes,
+)
+from repro.core.merge import merge_runs
+from repro.core.replay import ReplayState, replay, unwind
+
+
+# -- sysinfo probes -----------------------------------------------------------
+
+def test_rss_and_fd_probes():
+    rss = rss_bytes()
+    assert rss > 1 << 20  # a live CPython process is at least a megabyte
+    fds = open_fd_count()
+    assert fds is None or fds > 0
+
+
+# -- shared replay ------------------------------------------------------------
+
+def test_replay_balanced_stream_tracks_live_region():
+    state = ReplayState()
+    replay(state, [EV_ENTER, EV_ENTER], [3, 5], [10, 20])
+    assert state.live_region() == 5
+    assert state.live_stack() == [3, 5]
+    replay(state, [EV_EXIT, EV_EXIT], [5, 3], [30, 40])
+    assert not state.stack
+    assert state.live_region() == -1
+    assert state.orphan_exits == 0 and state.mismatched_exits == 0
+
+
+def test_replay_close_callback_durations():
+    closed = []
+    state = ReplayState()
+    replay(
+        state,
+        [EV_ENTER, EV_ENTER, EV_EXIT, EV_EXIT],
+        [1, 2, 2, 1],
+        [0, 10, 30, 100],
+        on_close=lambda rid, et, xt, child: closed.append((rid, xt - et, child)),
+    )
+    # inner: 20ns with no children; outer: 100ns with 20ns of child time
+    assert closed == [(2, 20, 0), (1, 100, 20)]
+
+
+def test_replay_unwind_closes_open_frames():
+    state = ReplayState()
+    closed = []
+    replay(state, [EV_ENTER, EV_ENTER], [1, 2], [0, 10])
+    unwind(state, on_close=lambda rid, et, xt, child: closed.append((rid, xt - et)))
+    assert not state.stack
+    assert closed == [(2, 0), (1, 10)]  # closed at last seen timestamp (10)
+
+
+# -- profiling substrate bookkeeping (satellite: orphan / mismatched exits) ---
+
+def test_profiling_orphan_exit_bookkeeping():
+    from repro.core.substrates.profiling import ProfilingSubstrate
+
+    sub = ProfilingSubstrate()
+    sub.open("/tmp", {})
+    # exit with no enter at all, then a normal pair
+    sub.on_flush(0, columns_from_events([
+        (EV_EXIT, 7, 5, 0),
+        (EV_ENTER, 1, 10, 0),
+        (EV_EXIT, 1, 30, 0),
+    ]))
+    state = sub.threads[0]
+    assert state.orphan_exits == 1
+    assert state.mismatched_exits == 0
+    assert not state.stack
+    node = state.root.children[1]
+    assert node.visits == 1 and node.incl_ns == 20
+
+
+def test_profiling_interleaved_c_python_exit_closes_inner_frame():
+    from repro.core.substrates.profiling import ProfilingSubstrate
+
+    sub = ProfilingSubstrate()
+    sub.open("/tmp", {})
+    # Python enter -> C enter, then the Python EXIT arrives while the C
+    # frame is still open (its c_return was lost): the inner C frame must
+    # be closed implicitly, not counted as a mismatch.
+    sub.on_flush(0, columns_from_events([
+        (EV_ENTER, 1, 0, 0),
+        (EV_C_ENTER, 2, 10, 0),
+        (EV_EXIT, 1, 50, 0),
+    ]))
+    state = sub.threads[0]
+    assert state.orphan_exits == 0
+    assert state.mismatched_exits == 0
+    assert not state.stack
+    outer = state.root.children[1]
+    inner = outer.children[2]
+    assert inner.visits == 1 and inner.incl_ns == 40  # closed at the outer exit
+    assert outer.visits == 1 and outer.incl_ns == 50
+    assert outer.excl_ns == 10  # the implicit close still feeds child time
+
+
+def test_profiling_mismatched_exit_counted_and_stack_recovers():
+    from repro.core.substrates.profiling import ProfilingSubstrate
+
+    sub = ProfilingSubstrate()
+    sub.open("/tmp", {})
+    # Exit names a region that is neither the open frame nor its parent:
+    # counted as mismatched, and the open frame is popped anyway so the
+    # stack does not wedge.
+    sub.on_flush(0, columns_from_events([
+        (EV_ENTER, 1, 0, 0),
+        (EV_ENTER, 2, 10, 0),
+        (EV_C_EXIT, 9, 20, 0),
+        (EV_EXIT, 1, 40, 0),
+    ]))
+    state = sub.threads[0]
+    assert state.mismatched_exits == 1
+    assert state.orphan_exits == 0
+    assert not state.stack
+    assert state.root.children[1].visits == 1
+
+
+# -- heap collector -----------------------------------------------------------
+
+def test_heap_collector_attributes_to_batch_regions():
+    collector = HeapCollector()
+    collector.open()
+    try:
+        keep = bytearray(8 << 20)  # 8 MB allocated while region 0 is "live"
+        cols = columns_from_events([(EV_ENTER, 0, 0, 0), (EV_EXIT, 0, 1000, 0)])
+        collector.on_flush(0, cols)
+    finally:
+        collector.close()
+    table = collector.region_table([{"module": "m", "name": "alloc"}])
+    row = table["regions"]["m:alloc"]
+    assert row["alloc_bytes"] >= 8 << 20
+    assert row["alloc_blocks"] >= 1
+    assert keep  # keep the buffer alive through the flush
+    threads = collector.thread_table()
+    assert threads["0"]["flushes"] == 1
+    assert threads["0"]["peak_heap_bytes"] >= 8 << 20
+
+
+def test_heap_collector_clips_weights_to_batch_span():
+    from repro.core.buffer import EV_LINE
+
+    collector = HeapCollector()
+    collector.open()
+    try:
+        # Batch 1: `outer` (rid 0) opens and stays open; the LINE event
+        # advances the thread clock so the batch span ends at t=990.
+        collector.on_flush(0, columns_from_events([
+            (EV_ENTER, 0, 0, 0), (EV_LINE, 0, 990, 0),
+        ]))
+        keep = bytearray(8 << 20)  # the delta observed by batch 2's flush
+        # Batch 2: `outer` closes 10ns in, then `hot` (rid 1) runs for the
+        # remaining 8990ns.  outer's lifetime (1000ns) must NOT be its
+        # weight — only its 10ns inside this batch.
+        collector.on_flush(0, columns_from_events([
+            (EV_EXIT, 0, 1000, 0),
+            (EV_ENTER, 1, 1010, 0), (EV_EXIT, 1, 10000, 0),
+        ]))
+    finally:
+        collector.close()
+    table = collector.region_table(
+        [{"module": "m", "name": "outer"}, {"module": "m", "name": "hot"}]
+    )["regions"]
+    assert keep
+    assert table["m:hot"]["alloc_bytes"] >= int((8 << 20) * 0.9)
+    assert table["m:outer"]["alloc_bytes"] < table["m:hot"]["alloc_bytes"] // 100
+
+
+def test_heap_collector_drops_stale_child_baselines():
+    # An inherited frame closes early in the batch; a new frame then
+    # reoccupies its stack depth.  The new frame must start from a zero
+    # child-time baseline, not the inherited frame's snapshot.
+    collector = HeapCollector()
+    collector.open()
+    try:
+        # Batch 1: enter A(t=0), enter B(t=10), exit B(t=110) -> A carries
+        # child_ns=100 into the next batch.
+        collector.on_flush(0, columns_from_events([
+            (EV_ENTER, 0, 0, 0), (EV_ENTER, 1, 10, 0), (EV_EXIT, 1, 110, 0),
+        ]))
+        keep = bytearray(4 << 20)
+        # Batch 2: exit A(t=120) (10ns in-batch), then C runs 20ns at A's
+        # old depth.  C's weight must be 20, not 120 (= 20 - (0 - 100)).
+        collector.on_flush(0, columns_from_events([
+            (EV_EXIT, 0, 120, 0),
+            (EV_ENTER, 2, 130, 0), (EV_EXIT, 2, 150, 0),
+        ]))
+    finally:
+        collector.close()
+    table = collector.region_table(
+        [{"module": "m", "name": "A"}, {"module": "m", "name": "B"},
+         {"module": "m", "name": "C"}]
+    )["regions"]
+    assert keep
+    a = table.get("m:A", {}).get("alloc_bytes", 0)
+    c = table.get("m:C", {}).get("alloc_bytes", 0)
+    # weights in batch 2: A=10, C=20 -> C gets ~2/3 of the delta, not ~92%
+    assert 0 < c < (4 << 20)
+    assert abs(c - 2 * a) < (4 << 20) * 0.2
+
+
+def test_heap_collector_topn_cut():
+    collector = HeapCollector()
+    collector.open()
+    try:
+        for rid in range(4):
+            collector.on_flush(0, columns_from_events([
+                (EV_ENTER, rid, rid * 100, 0), (EV_EXIT, rid, rid * 100 + 50, 0),
+            ]))
+    finally:
+        collector.close()
+    regions = [{"module": "m", "name": f"r{i}"} for i in range(4)]
+    table = collector.region_table(regions, topn=2)
+    assert len(table["regions"]) == 2
+    assert table["dropped_regions"] >= 1
+
+
+# -- poller / gc watcher ------------------------------------------------------
+
+def test_system_poller_samples_and_decimates():
+    poller = SystemPoller(period_s=0.01, max_samples=16)
+    for _ in range(20):
+        poller.sample()
+    assert poller.peak_rss > 0
+    assert poller.n_samples == 20
+    assert len(poller.rss) < 20  # decimated at max_samples
+    assert poller.period_s > 0.01
+
+
+def test_gc_watcher_records_pauses():
+    watcher = GcWatcher()
+    watcher.install()
+    try:
+        junk = [[i] for i in range(1000)]
+        del junk
+        gc.collect()
+    finally:
+        watcher.uninstall()
+    assert watcher.collections >= 1
+    assert watcher.pause_ns_total >= 0
+    assert watcher.per_generation
+    assert watcher._callback not in gc.callbacks
+
+
+# -- memory substrate end to end ----------------------------------------------
+
+def _memory_run(tmp_path, name, n_alloc, world=1, rank=0):
+    d = str(tmp_path / name)
+    rmon.init(
+        instrumenter="profile",
+        run_dir=d,
+        experiment="mem",
+        substrates=("profiling", "tracing", "metrics", "memory"),
+        flush_threshold=256,
+        memory_period=0.01,
+        topology=rmon.ProcessTopology(rank=rank, world_size=world),
+    )
+    keep = []
+    with rmon.region("alloc_phase"):
+        for _ in range(n_alloc):
+            keep.append(bytearray(64 << 10))
+    rmon.metric("steps", 1.0)
+    rmon.finalize()
+    return d
+
+
+def test_memory_substrate_end_to_end(tmp_path):
+    out = _memory_run(tmp_path, "m1", 100)
+    doc = load_memory_doc(out)
+    # per-region attribution with real bytes
+    regions = doc["heap"]["regions"]
+    assert regions
+    assert sum(r["alloc_bytes"] for r in regions.values()) >= 100 * (64 << 10) // 2
+    # RSS timeline + peak
+    assert doc["rss"]["peak_bytes"] > 1 << 20
+    assert doc["series"]["mem.rss_mb"]
+    assert doc["rss"]["source"] in ("statm", "getrusage")
+    # per-thread peaks and replay bookkeeping
+    threads = doc["heap"]["threads"]
+    assert threads and all("peak_heap_bytes" in t for t in threads.values())
+    # gc section present (collections may be zero on a quiet run)
+    assert "collections" in doc["gc"]
+    # hotspot helpers
+    top = memory_hotspots(out, top=5)
+    assert top and top[0][1]["alloc_bytes"] > 0
+    text = render_memory(doc)
+    assert "alloc_mb" in text and "rss:" in text
+
+
+def test_memory_counter_tracks_in_chrome_export(tmp_path):
+    out = _memory_run(tmp_path, "m2", 50)
+    with open(os.path.join(out, "trace.json")) as fh:
+        doc = json.load(fh)
+    counters = {e["name"] for e in doc["traceEvents"] if e["ph"] == "C"}
+    assert "mem.rss_mb" in counters
+    assert "mem.heap_mb" in counters
+    assert "steps" in counters  # metrics.json series still exported
+
+
+def test_memory_env_roundtrip():
+    env = {
+        "REPRO_MONITOR_MEMORY": "1",
+        "REPRO_MONITOR_MEMORY_PERIOD": "0.5",
+        "REPRO_MONITOR_MEMORY_TOPN": "7",
+    }
+    cfg = MeasurementConfig.from_env(env)
+    assert "memory" in cfg.substrates
+    assert cfg.memory_period == 0.5
+    assert cfg.memory_topn == 7
+    # round trip: to_env -> from_env preserves the memory settings
+    cfg2 = MeasurementConfig.from_env(cfg.to_env())
+    assert "memory" in cfg2.substrates
+    assert cfg2.substrates.count("memory") == 1  # no duplicate append
+    assert cfg2.memory_period == 0.5 and cfg2.memory_topn == 7
+    # disabled by default
+    assert "memory" not in MeasurementConfig.from_env({}).substrates
+
+
+def test_memory_substrate_constructed_with_config_knobs(tmp_path):
+    m = rmon.init(
+        instrumenter="none",
+        run_dir=str(tmp_path / "knobs"),
+        substrates=("memory",),
+        memory_period=0.03,
+        memory_topn=3,
+    )
+    sub = m.substrate("memory")
+    assert sub.period == 0.03 and sub.topn == 3
+    rmon.finalize()
+
+
+def test_merge_reports_cross_rank_memory(tmp_path):
+    a = _memory_run(tmp_path, "rank0", 20, world=2, rank=0)
+    b = _memory_run(tmp_path, "rank1", 300, world=2, rank=1)
+    out = str(tmp_path / "merged.json")
+    summary = merge_runs([a, b], out)
+    mem = summary["memory"]
+    assert len(mem["ranks"]) == 2
+    peak = mem["peak_rss"]
+    assert peak["max_bytes"] >= peak["min_bytes"] > 0
+    assert peak["imbalance"] is None or peak["imbalance"] >= 1.0
+    assert mem["ranks"][0]["top_regions"]
+    text = render_merge_summary(summary)
+    assert "imbalance" in text and "peak RSS" in text
+
+
+def test_merge_without_memory_artifacts_has_no_section(tmp_path):
+    d = str(tmp_path / "plain")
+    rmon.init(instrumenter="none", run_dir=d, substrates=("tracing",))
+    with rmon.region("r"):
+        pass
+    rmon.finalize()
+    summary = merge_runs([d], str(tmp_path / "m.json"))
+    assert "memory" not in summary
+
+
+# -- analysis CLI -------------------------------------------------------------
+
+def test_analysis_memory_cli(tmp_path, capsys):
+    from repro.core.analysis import main
+
+    a = _memory_run(tmp_path, "cli-a", 20)
+    b = _memory_run(tmp_path, "cli-b", 200)
+    assert main(["memory", a, "--top", "5"]) == 0
+    out = capsys.readouterr().out
+    assert "region" in out and "rss:" in out
+    assert main(["memory-diff", a, b, "--top", "5"]) == 0
+    out = capsys.readouterr().out
+    assert "delta_mb" in out
+
+
+def test_analysis_memory_diff_rows(tmp_path):
+    a = _memory_run(tmp_path, "d-a", 20)
+    b = _memory_run(tmp_path, "d-b", 200)
+    rows = diff_memory(a, b)
+    assert rows
+    total_delta = sum(r["delta_bytes"] for r in rows)
+    assert total_delta > 0  # B allocates 10x more
+    assert render_memory_diff(rows)
+
+
+def test_analysis_top_missing_profile_actionable_error(tmp_path, capsys):
+    from repro.core.analysis import main
+
+    d = str(tmp_path / "tracing-only")
+    os.makedirs(d)
+    rc = main(["top", d])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "profile.json" in err and "profiling" in err
+    # memory subcommand gets the same actionable treatment
+    rc = main(["memory", d])
+    assert rc == 2
+    assert "memory.json" in capsys.readouterr().err
+
+
+def test_analysis_diff_min_ns_flag(tmp_path, capsys):
+    from repro.core.analysis import main
+
+    a = _memory_run(tmp_path, "mn-a", 5)
+    b = _memory_run(tmp_path, "mn-b", 5)
+    # an absurdly high floor filters every region out, leaving the header
+    assert main(["diff", a, b, "--min-ns", str(10**15)]) == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    assert len(out) == 1 and "region" in out[0]
+
+
+def test_load_memory_doc_missing_raises(tmp_path):
+    with pytest.raises(MissingArtifact):
+        load_memory_doc(str(tmp_path))
