@@ -82,6 +82,39 @@ def memory_overhead_table(path: str) -> str:
     return "\n".join(out)
 
 
+def governed_overhead_table(path: str) -> str:
+    """Fold benchmarks/governed_overhead.py numbers into the overhead story:
+    bare/ungoverned/governed β plus the steady-state dilation the budget
+    actually governs."""
+    if not os.path.exists(path):
+        return "(no governed_overhead.json yet — run benchmarks/governed_overhead.py)"
+    with open(path) as fh:
+        doc = json.load(fh)
+    out = ["| variant | beta us/iter | dilation |", "|---|---|---|"]
+    dil = doc.get("dilation", {})
+    for label, beta in doc.get("beta_us", {}).items():
+        d = dil.get(label)
+        out.append(f"| {label} | {beta:.3f} | {'' if d is None else f'{d:.2f}x'} |")
+    steady = doc.get("steady", {})
+    if steady:
+        out.append("")
+        out.append(
+            f"Steady-state governed dilation: **{steady.get('dilation', 0.0):+.3f}x** "
+            f"(budget {doc.get('budget', 0.0):.2f}, "
+            f"{'converged' if doc.get('converged') else 'NOT converged'})"
+            + (" (smoke numbers)" if doc.get("smoke") else "")
+        )
+    check = doc.get("filter_check", {})
+    if check:
+        out.append(
+            f"Suggested-filter re-run: {check.get('events_filtered', 0)} events vs "
+            f"{check.get('events_unfiltered', 0)} unfiltered "
+            f"({check.get('actions', 0)} governor action(s), final instrumenter "
+            f"{((check.get('final_instrumenter') or {}).get('name', '?'))})"
+        )
+    return "\n".join(out)
+
+
 def main() -> int:
     base = os.path.join(ART, "roofline_baseline.json")
     cur = os.path.join(ART, "roofline.json")
@@ -95,6 +128,8 @@ def main() -> int:
     print(perf_table(os.path.join(ART, "perf_iterations.json")))
     print("\n### Memory-monitoring overhead\n")
     print(memory_overhead_table(os.path.join(ART, "memory_overhead.json")))
+    print("\n### Governed overhead (runtime budget enforcement)\n")
+    print(governed_overhead_table(os.path.join(ART, "governed_overhead.json")))
     return 0
 
 

@@ -23,6 +23,7 @@ from .buffer import (  # noqa: F401
     NumpyEventBuffer,
 )
 from .filtering import Filter  # noqa: F401
+from .governor import Governor, load_governor  # noqa: F401
 from .instrumenters import INSTRUMENTERS, make_instrumenter  # noqa: F401
 from .measurement import (  # noqa: F401
     Measurement,
@@ -53,6 +54,8 @@ __all__ = [
     "metric",
     "instrument",
     "Filter",
+    "Governor",
+    "load_governor",
     "Region",
     "RegionRegistry",
     "INSTRUMENTERS",

@@ -7,6 +7,8 @@ comparison is programmatic and drives the §Perf loop).
     PYTHONPATH=src python -m repro.core.analysis memory RUN_DIR
     PYTHONPATH=src python -m repro.core.analysis memory-diff RUN_A RUN_B
     PYTHONPATH=src python -m repro.core.analysis merge-summary SUMMARY_JSON
+    PYTHONPATH=src python -m repro.core.analysis governor RUN_DIR
+    PYTHONPATH=src python -m repro.core.analysis suggest-filter RUN_DIR
 """
 
 from __future__ import annotations
@@ -169,6 +171,105 @@ def render_memory_diff(rows: List[Dict[str, Any]], top: int = 25) -> str:
     return "\n".join(out)
 
 
+def load_governor_doc(run_dir: str) -> Dict[str, Any]:
+    from .governor import load_governor
+
+    doc = load_governor(run_dir)
+    if doc is None:
+        raise MissingArtifact(
+            f"no readable governor.json in {run_dir or '.'} — was the overhead "
+            f"governor enabled for this run? (--budget / REPRO_MONITOR_BUDGET > 0)"
+        )
+    return doc
+
+
+def render_governor(doc: Dict[str, Any], top: int = 15) -> str:
+    """Human-readable governor report: calibration, actions, cost table."""
+    out: List[str] = []
+    cal = doc.get("calibration") or {}
+    final = doc.get("final_instrumenter") or {}
+    out.append(
+        f"budget {doc.get('budget', 0.0):.1%} dilation; calibrated "
+        f"{cal.get('instrumenter', '?')} at {cal.get('cost_full_ns', 0.0):.0f} ns/pair "
+        f"(filtered {cal.get('cost_filtered_ns', 0.0):.0f}, sampler base "
+        f"{cal.get('sampling_base_ns', 0.0):.0f}) in {cal.get('probe_s', 0.0) * 1e3:.0f} ms"
+    )
+    period = f" (period {final['period']})" if final.get("period") else ""
+    out.append(f"final instrumenter: {final.get('name', '?')}{period}")
+    actions = doc.get("actions", [])
+    out.append(f"actions: {len(actions)}")
+    for a in actions:
+        steps = "; ".join(
+            {
+                "exclude_regions": lambda s: f"excluded {len(s['regions'])} regions "
+                f"({', '.join(s['regions'][:3])}{'…' if len(s['regions']) > 3 else ''})",
+                "raise_period": lambda s: f"period {s['from']} -> {s['to']}",
+                "downgrade_instrumenter": lambda s: f"{s['from']} -> {s['to']}",
+            }.get(s["kind"], lambda s: s["kind"])(s)
+            for s in a.get("steps", [])
+        )
+        out.append(
+            f"  @{a['t_ns'] / 1e6:9.1f} ms  overhead {a['window_overhead']:.1%} "
+            f"-> projected {a['projected_overhead']:.1%}: {steps}"
+        )
+    out.append(f"{'est_cost_ms':>12s} {'leaf_ms':>10s} {'visits':>10s} {'x':>4s}  region")
+    for row in doc.get("regions", [])[:top]:
+        out.append(
+            f"{row['est_cost_ns'] / 1e6:12.3f} {row['leaf_excl_ns'] / 1e6:10.3f} "
+            f"{row['visits']:10d} {'EXCL' if row['excluded'] else '':>4s}  {row['region']}"
+        )
+    est = doc.get("estimate", {})
+    out.append(
+        f"estimated distortion: {est.get('overhead_fraction', 0.0):.2%} of useful time "
+        f"({est.get('recorded_cost_ns', 0) / 1e6:.1f} ms recorded + "
+        f"{est.get('residual_cost_ns', 0) / 1e6:.1f} ms filtered residual over "
+        f"{est.get('elapsed_ns', 0) / 1e6:.0f} ms) — "
+        + ("under budget" if est.get("under_budget") else "OVER budget")
+    )
+    if doc.get("suggested_filter"):
+        out.append(f"suggested filter: {doc['suggested_filter']}")
+    return "\n".join(out)
+
+
+def suggest_filter_from_profile(
+    profile: Dict[str, Any],
+    cost_ns: float = 1500.0,
+    max_mean_ns: float = 20_000.0,
+    min_visits: int = 100,
+) -> str:
+    """Score-P-style filter suggestion from a profile alone (no governor).
+
+    The scorep-score workflow, automated: regions that are high-frequency
+    (``visits >= min_visits``) and short (mean exclusive time at most
+    ``max_mean_ns``) are filter candidates, ranked by estimated
+    instrumentation cost ``visits * cost_ns``.  ``cost_ns`` defaults to a
+    conservative per-visit pair cost; a governed run's governor.json
+    carries the calibrated value instead.
+    """
+    from .governor import _fnmatch_escape
+
+    candidates = []
+    for name, vals in flat_metrics(profile).items():
+        module, _, func = name.partition(":")
+        if not func:
+            continue
+        # User-annotated regions are never suggested for exclusion.  The
+        # flat table carries the region kind (newer profiles); older
+        # profiles fall back on the default user-region module name.
+        if vals.get("kind", "user" if module == "user" else "python") == "user":
+            continue
+        visits = vals.get("visits", 0)
+        if visits < min_visits:
+            continue
+        if vals.get("excl_ns", 0) / visits > max_mean_ns:
+            continue
+        candidates.append((visits * cost_ns, f"{_fnmatch_escape(module)}.{_fnmatch_escape(func)}"))
+    candidates.sort(key=lambda c: -c[0])
+    from .filtering import Filter
+
+    return Filter(exclude=[pat for _, pat in candidates]).to_spec()
+
+
 def render_merge_summary(summary: Dict[str, Any]) -> str:
     """Human-readable view of a ``merge_runs`` summary, including the
     streaming export engine's writer stats (events/bytes/chunks)."""
@@ -214,6 +315,22 @@ def render_merge_summary(summary: Dict[str, Any]) -> str:
                 f"gc {r['gc_pause_ns'] / 1e6:.2f} ms"
                 + (f"; top: {tops}" if tops else "")
             )
+    governor = summary.get("governor") or {}
+    if governor:
+        out.append(
+            f"governor: {governor.get('actions_total', 0)} actions across "
+            f"{len(governor.get('ranks', []))} ranks, "
+            f"{governor.get('ranks_over_budget', 0)} rank(s) over budget"
+        )
+        for r in governor.get("ranks", []):
+            out.append(
+                f"  rank {r['rank']}: {r['actions']} actions "
+                f"({', '.join(r['action_kinds']) or 'none'}), final "
+                f"{r['final_instrumenter']}, est overhead "
+                f"{r['overhead_fraction']:.2%}"
+            )
+        if governor.get("suggested_filter"):
+            out.append(f"  suggested filter (union): {governor['suggested_filter']}")
     if summary.get("out"):
         out.append(f"merged trace: {summary['out']}")
     return "\n".join(out)
@@ -244,6 +361,21 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="drop regions below this alloc size in both runs")
     m = sub.add_parser("merge-summary", help="render a merge summary JSON")
     m.add_argument("summary", help="merged_trace_summary.json written by repro.core.merge")
+    g = sub.add_parser("governor", help="overhead-governor report for one run")
+    g.add_argument("run_dir")
+    g.add_argument("--top", type=int, default=15)
+    sf = sub.add_parser(
+        "suggest-filter",
+        help="print a filter spec for the next run (governor.json when "
+             "present, else a scorep-score-style heuristic over profile.json)",
+    )
+    sf.add_argument("run_dir")
+    sf.add_argument("--cost-ns", type=float, default=1500.0,
+                    help="assumed per-visit cost for the profile heuristic")
+    sf.add_argument("--max-mean-ns", type=float, default=20_000.0,
+                    help="regions with longer mean exclusive time are kept")
+    sf.add_argument("--min-visits", type=int, default=100,
+                    help="regions with fewer visits are kept")
     ns = p.parse_args(argv)
     try:
         if ns.cmd == "diff":
@@ -256,6 +388,21 @@ def main(argv: Optional[List[str]] = None) -> int:
         elif ns.cmd == "merge-summary":
             with open(ns.summary) as fh:
                 print(render_merge_summary(json.load(fh)))
+        elif ns.cmd == "governor":
+            print(render_governor(load_governor_doc(ns.run_dir), ns.top))
+        elif ns.cmd == "suggest-filter":
+            # Spec goes to stdout alone, so it can be command-substituted
+            # straight into --filter / REPRO_MONITOR_FILTER.
+            try:
+                spec = load_governor_doc(ns.run_dir).get("suggested_filter", "")
+            except MissingArtifact:
+                spec = suggest_filter_from_profile(
+                    load_profile(ns.run_dir),
+                    cost_ns=ns.cost_ns,
+                    max_mean_ns=ns.max_mean_ns,
+                    min_visits=ns.min_visits,
+                )
+            print(spec)
         else:
             for name, vals in hotspots(ns.run_dir, ns.top):
                 print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")

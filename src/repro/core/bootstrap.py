@@ -61,6 +61,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="memory poller period in seconds")
     p.add_argument("--memory-topn", type=int, default=DEFAULT_TOPN,
                    help="memory.json per-region table size")
+    p.add_argument("--budget", type=float, default=0.0,
+                   help="overhead budget as fractional dilation (0.05 = 5%%); "
+                        "> 0 enables the runtime governor "
+                        "(REPRO_MONITOR_BUDGET)")
     p.add_argument("--experiment", default="run")
     p.add_argument("--mpp", default=None, choices=[None, "jax"],
                    help="multi-process paradigm (jax: rank from JAX distributed env)")
@@ -97,6 +101,7 @@ def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
         buffer_strategy=ns.buffer,
         memory_period=ns.memory_period,
         memory_topn=ns.memory_topn,
+        budget=ns.budget,
         rank=topology.rank,
         topology=topology,
         experiment=ns.experiment,

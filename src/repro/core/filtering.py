@@ -10,12 +10,26 @@ per-event cost.
 Spec grammar (used by ``--filter`` on the CLI and ``REPRO_MONITOR_FILTER``):
 
     spec      := clause (';' clause)*
-    clause    := ('include' | 'exclude') ':' pattern (',' pattern)*
+    clause    := ('include' | 'exclude' | 'exclude!') ':' pattern (',' pattern)*
     pattern   := fnmatch glob matched against "module" or "module.function"
 
-Semantics (same as Score-P filter files): exclude rules are applied first;
-include rules re-admit matching regions.  With no include rules everything
-not excluded is recorded.
+Semantics (same as Score-P filter files), by rule combination:
+
+    no rules               everything is recorded
+    exclude only           everything not excluded is recorded
+    exclude + include      exclude applies first; include re-admits matching
+                           regions; everything not excluded is recorded
+    include only           allow-list: only matching regions are recorded
+
+Note the asymmetry: include rules act as a global allow-list *only when no
+exclude rules exist*.  In a mixed spec they merely re-admit from the
+excluded set — a region matching neither rule kind is still recorded.
+
+``exclude!`` rules are *absolute* excludes (the overhead governor's
+runtime exclusions, serialized): they win over include re-admission and
+do not participate in the allow-list/mixed determination above, so adding
+them to any spec only ever removes regions — an include-only spec stays
+an allow-list.
 """
 
 from __future__ import annotations
@@ -34,6 +48,12 @@ _SELF_MODULES = ("repro.core",)
 class Filter:
     include: List[str] = field(default_factory=list)
     exclude: List[str] = field(default_factory=list)
+    #: Excludes added at runtime (overhead governor).  Kept separate from the
+    #: spec's exclude rules for two reasons: they take precedence over include
+    #: re-admission (a region the governor dropped for cost must stay
+    #: dropped), and they must not flip an include-only spec out of its
+    #: allow-list semantics for regions seen later.
+    runtime_exclude: List[str] = field(default_factory=list)
 
     @classmethod
     def from_spec(cls, spec: str | None) -> "Filter":
@@ -53,16 +73,26 @@ class Filter:
                 flt.include.extend(patterns)
             elif verb == "exclude":
                 flt.exclude.extend(patterns)
+            elif verb == "exclude!":
+                flt.runtime_exclude.extend(patterns)
             else:
-                raise ValueError(f"bad filter verb {verb!r} (want include/exclude)")
+                raise ValueError(
+                    f"bad filter verb {verb!r} (want include/exclude/exclude!)"
+                )
         return flt
 
     def to_spec(self) -> str:
+        # Runtime excludes keep their own verb so the round-trip is exact:
+        # folding them into the exclude clause would both let include rules
+        # re-admit them and flip an include-only spec out of its allow-list
+        # semantics.
         parts = []
         if self.include:
             parts.append("include:" + ",".join(self.include))
         if self.exclude:
             parts.append("exclude:" + ",".join(self.exclude))
+        if self.runtime_exclude:
+            parts.append("exclude!:" + ",".join(self.runtime_exclude))
         return ";".join(parts)
 
     # -- verdicts (cold path: once per distinct region) --------------------
@@ -77,16 +107,41 @@ class Filter:
         if "repro/core/" in file or "repro\\core\\" in file:
             return False
         qualified = f"{module}.{name}"
+        if any(
+            fnmatchcase(module, pat) or fnmatchcase(qualified, pat)
+            for pat in self.runtime_exclude
+        ):
+            # Governor excludes are absolute: no include re-admission.
+            return False
         excluded = any(
             fnmatchcase(module, pat) or fnmatchcase(qualified, pat) for pat in self.exclude
         )
         if excluded:
+            # Include rules re-admit from the excluded set.
             return any(
                 fnmatchcase(module, pat) or fnmatchcase(qualified, pat) for pat in self.include
             )
-        if self.include:
-            # Include rules alone act as an allow-list.
+        if self.include and not self.exclude:
+            # Include rules *alone* act as an allow-list.  With exclude rules
+            # present they only re-admit (Score-P semantics: everything not
+            # excluded is recorded).
             return any(
                 fnmatchcase(module, pat) or fnmatchcase(qualified, pat) for pat in self.include
             )
         return True
+
+    # -- runtime tightening (used by the overhead governor) ----------------
+
+    def add_runtime_excludes(self, patterns: Sequence[str]) -> List[str]:
+        """Append runtime exclude patterns; returns the ones actually added.
+
+        Only ever *tightens* the filter, so verdicts cached on region handles
+        stay valid for still-recorded regions; callers must re-evaluate the
+        rest via ``RegionRegistry.refilter``.
+        """
+        added = []
+        for pat in patterns:
+            if pat and pat not in self.runtime_exclude:
+                self.runtime_exclude.append(pat)
+                added.append(pat)
+        return added

@@ -1,0 +1,838 @@
+"""Runtime overhead governor — closing the paper's open problem (§5).
+
+The paper measures instrumentation overhead as ``t = α + β·N`` and names
+"ways to control the runtime overhead" as future work; Score-P's manual
+workflow (run, inspect the profile, hand-write a filter file, re-run) is
+what this module automates *online*:
+
+1. **Calibrate** — before the instrumenter installs, a micro-probe times a
+   known call kernel bare vs. instrumented and derives the per-call-pair
+   cost of the configured event source, of the filtered-verdict fast path
+   (hook fires, region lookup returns ``FILTERED``, nothing appended), and
+   of the counting sampler's unsampled/sampled paths (the downgrade
+   target), so escalation decisions are model-driven rather than blind.
+2. **Account** — at every buffer flush the governor bins the batch per
+   region (numpy ``bincount``; no per-event Python) and estimates the
+   instrumentation cost of the window: represented call pairs × calibrated
+   pair cost, plus the residual hook cost of regions it has already
+   excluded (their events no longer reach the buffer, but the hook still
+   fires and pays the filtered fast path).
+3. **Enforce** — when the windowed overhead estimate exceeds the budget
+   (``REPRO_MONITOR_BUDGET``, e.g. ``0.05`` = 5% dilation), it escalates
+   along a ladder, projecting each rung's effect with the calibration
+   model and walking until the projection fits the budget:
+   a. exclude high-frequency / short-duration regions (runtime filter
+      tightening + cached-verdict invalidation via
+      ``RegionRegistry.refilter``),
+   b. raise the counting sampler's period (``Instrumenter.set_period``),
+   c. downgrade the instrumenter along ``Instrumenter.downgrade_to``
+      (trace → profile → sampling → none).
+4. **Report** — ``governor.json`` records the calibration, every action
+   taken, the per-region cost table, the estimated distortion, and a
+   Score-P-style suggested filter spec that round-trips through
+   ``Filter.from_spec`` for the next run (``--filter`` /
+   ``REPRO_MONITOR_FILTER``).
+
+Known approximations (documented, deliberate): exclusive time is estimated
+from *leaf* enter/exit pairs only (vectorizable; the high-frequency
+short-duration offenders the governor hunts are exactly leaf pairs);
+``settrace`` line events are amortized into the calibrated pair cost; and
+after an instrumenter swap, pre-existing worker threads lose their hook
+(their stale callbacks self-remove) — the swap installs on the flushing
+thread and on threads started afterwards.  User regions (explicit
+``rmon.region`` annotations) are never auto-excluded.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+from dataclasses import asdict, dataclass
+from typing import TYPE_CHECKING, Any, Dict, List, Optional
+
+import numpy as np
+
+from .buffer import EV_C_ENTER, EV_ENTER, ListEventBuffer
+from .filtering import Filter
+from .instrumenters import INSTRUMENTERS, make_instrumenter
+from .regions import KIND_USER, RegionRegistry
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .measurement import Measurement
+
+ARTIFACT = "governor.json"
+
+#: Period ceiling for the sampler rung; past this the ladder downgrades.
+DEFAULT_MAX_PERIOD = 1 << 13
+
+
+def _fnmatch_escape(name: str) -> str:
+    """Escape fnmatch metacharacters so a region name matches literally."""
+    return "".join(f"[{ch}]" if ch in "*?[" else ch for ch in name)
+
+
+# ----------------------------------------------------------------------------
+# Calibration — micro-probe of the installed instrumenter
+# ----------------------------------------------------------------------------
+
+
+def _probe_fn(x):
+    return x + 1
+
+
+def _probe_loop(n):
+    f = _probe_fn
+    x = 0
+    for _ in range(n):
+        x = f(x)
+    return x
+
+
+class _ProbeHost:
+    """Minimal Measurement surface an instrumenter binds against."""
+
+    def __init__(self, record: bool = True):
+        decide = None if record else (lambda module, name, file: False)
+        self.regions = RegionRegistry(decide=decide)
+        self._buf = ListEventBuffer(thread_id=0, flush_threshold=1 << 30)
+
+    def thread_buffer(self):
+        return self._buf
+
+
+@dataclass
+class Calibration:
+    """Per-call-pair instrumentation costs (ns), from the startup probe.
+
+    A *call pair* is one enter+exit hook invocation pair; costs are the
+    measured per-pair slowdown of the probe kernel vs. the bare loop.
+    """
+
+    instrumenter: str
+    sampling_period: int
+    cost_full_ns: float  # configured instrumenter, region recorded
+    cost_filtered_ns: float  # configured instrumenter, verdict FILTERED
+    sampling_base_ns: float  # counting sampler, unsampled path
+    sampling_sampled_ns: float  # counting sampler, period=1 (every call)
+    probe_calls: int
+    probe_s: float
+
+
+def _time_probe(n: int, repeats: int, instrumenter=None, record: bool = True) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        if instrumenter is not None:
+            host = _ProbeHost(record=record)
+            instrumenter.install(host)
+        try:
+            t0 = time.perf_counter()
+            _probe_loop(n)
+            best = min(best, time.perf_counter() - t0)
+        finally:
+            if instrumenter is not None:
+                instrumenter.uninstall()
+    return best
+
+
+#: Process-wide probe cache: the per-event cost of an event source is a
+#: property of the interpreter/machine, not of one measurement, and
+#: re-probing per run would both waste α and inject probe jitter into
+#: β fits over repeated measurements (benchmarks/governed_overhead.py).
+_CALIBRATION_CACHE: Dict[Any, Calibration] = {}
+
+
+def calibrate(
+    instrumenter_name: str,
+    sampling_period: int = 97,
+    calls: int = 2000,
+    repeats: int = 3,
+    use_cache: bool = True,
+) -> Calibration:
+    """Micro-probe the per-event cost of ``instrumenter_name``.
+
+    Uses throwaway instrumenter instances on a stub host (never the live
+    measurement), so calibration leaves no trace in the run's artifacts.
+    The sampler is probed twice — at a period far beyond the probe size
+    (pure unsampled fast path) and at period 1 (every call sampled) — which
+    decomposes its cost so period raises can be projected analytically.
+    """
+    key = (instrumenter_name, sampling_period, calls)
+    if use_cache and key in _CALIBRATION_CACHE:
+        return _CALIBRATION_CACHE[key]
+    t_start = time.perf_counter()
+    bare = _time_probe(calls, repeats)
+
+    def pair_cost(name: str, record: bool = True, period: Optional[int] = None) -> float:
+        if name == "none":
+            return 0.0
+        kwargs = {"period": period} if period is not None else {}
+        inst = make_instrumenter(name, **kwargs)
+        t = _time_probe(calls, repeats, instrumenter=inst, record=record)
+        return max(t - bare, 0.0) / calls * 1e9
+
+    if instrumenter_name == "sampling":
+        cost_full = pair_cost("sampling", period=sampling_period)
+        cost_filtered = pair_cost("sampling", record=False, period=sampling_period)
+    else:
+        cost_full = pair_cost(instrumenter_name)
+        cost_filtered = pair_cost(instrumenter_name, record=False)
+    sampling_base = (
+        0.0 if instrumenter_name == "none" else pair_cost("sampling", period=1 << 30)
+    )
+    sampling_sampled = (
+        0.0 if instrumenter_name == "none" else pair_cost("sampling", period=1)
+    )
+    result = _CALIBRATION_CACHE[key] = Calibration(
+        instrumenter=instrumenter_name,
+        sampling_period=sampling_period,
+        cost_full_ns=cost_full,
+        cost_filtered_ns=cost_filtered,
+        sampling_base_ns=sampling_base,
+        sampling_sampled_ns=max(sampling_sampled, sampling_base),
+        probe_calls=calls,
+        probe_s=time.perf_counter() - t_start,
+    )
+    return result
+
+
+# ----------------------------------------------------------------------------
+# Projection model — cost of a (instrumenter, period) state
+# ----------------------------------------------------------------------------
+
+
+@dataclass
+class _LadderState:
+    name: str
+    period: int
+
+
+class Governor:
+    """Online overhead controller for one :class:`Measurement`.
+
+    Hooked by the measurement at three points: :meth:`calibrate_startup`
+    (before instrumenter install), :meth:`on_flush` (under the flush lock,
+    after substrates), and :meth:`close` (at finalize, instrumenter already
+    uninstalled); plus its own watchdog tick between flushes.  All mutation
+    of shared measurement state (filter, registry, instrumenter) happens
+    under the measurement flush lock, in ``on_flush`` or ``_tick``.
+    """
+
+    def __init__(
+        self,
+        measurement: "Measurement",
+        budget: float,
+        *,
+        max_period: int = DEFAULT_MAX_PERIOD,
+        min_window_s: float = 0.005,
+        min_window_pairs: int = 32,
+        max_excludes_per_action: int = 8,
+        # Regions whose *fastest* observed leaf execution is longer than
+        # this are never auto-excluded (instrumentation distorts them
+        # little).  The minimum — not the mean — is the robust
+        # short-duration signal: a single GC pause or descheduling spike
+        # landing inside one leaf span inflates the mean past any cap,
+        # while the minimum converges on the true body time.
+        offender_max_leaf_ns: float = 50_000.0,
+        probe_calls: int = 2000,
+        projection_safety: float = 2.0,
+        watchdog_s: float = 0.01,
+    ):
+        if budget <= 0:
+            raise ValueError("governor budget must be > 0 (fractional dilation)")
+        self.measurement = measurement
+        self.budget = float(budget)
+        self.max_period = int(max_period)
+        self.min_window_ns = int(min_window_s * 1e9)
+        self.min_window_pairs = int(min_window_pairs)
+        self.max_excludes_per_action = int(max_excludes_per_action)
+        self.offender_max_leaf_ns = float(offender_max_leaf_ns)
+        self.probe_calls = int(probe_calls)
+        self.projection_safety = float(projection_safety)
+        self.watchdog_s = float(watchdog_s)
+        self._watchdog: Optional[threading.Thread] = None
+        self._watchdog_stop = threading.Event()
+        self._tick_events = 0
+        self._tick_filtered = 0
+        self._tick_inst: Any = None
+        self._tick_t = 0
+
+        self.calibration: Optional[Calibration] = None
+        self.actions: List[Dict[str, Any]] = []
+        self.frozen = False  # finalize in progress: account, never act
+
+        # Cumulative per-region accounting (index == region id).
+        self._visits = np.zeros(0, dtype=np.int64)  # recorded enters
+        self._visits_rep = np.zeros(0, dtype=np.float64)  # × cost multiplier
+        self._leaf_ns = np.zeros(0, dtype=np.float64)  # leaf-pair exclusive
+        self._leaf_min = np.zeros(0, dtype=np.float64)  # fastest leaf span
+        self._est_cost = np.zeros(0, dtype=np.float64)
+        self._excluded_rids: set = set()
+        # Residual model: represented pair rate of excluded regions, frozen
+        # at exclusion time (their events stop reaching the buffer).
+        self._excluded_rate = 0.0  # pairs/s
+
+        self._t_open = 0
+        self._window_start = 0
+        self._window_cost = 0.0
+        self._window_pairs = 0.0
+        self._cum_pairs = 0.0
+        # Observed buffered-events-per-pair ratio (2.0 for enter/exit-only
+        # streams; line-dominated settrace streams run far higher) — the
+        # watchdog needs it to turn raw buffer growth into a pair rate.
+        self._ev_total = 0.0
+        self._ev_enters = 0.0
+        # State history for batch costing: perf_counter_ns at which each
+        # (instrumenter, period) state became active, with its multiplier
+        # and pair cost.  A buffer that fills under one state can flush
+        # after an escalation (another thread's flush triggered it), so
+        # batches are costed by *event timestamp*, not by the current state.
+        self._state_t: List[int] = []
+        self._state_mult: List[float] = []
+        self._state_cost: List[float] = []
+        # Initial entry so a batch flushed before open() (global
+        # sys.monitoring hooks + a busy worker can fire in the window
+        # between instrumenter install and governor open) indexes a valid
+        # state; costs are 0 until calibration, and open() pushes the
+        # calibrated state on top.
+        self._push_state(0)
+        self._total_cost = 0.0
+        self._total_residual = 0.0
+        self._residual_mark = 0  # last time residual was folded into totals
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def calibrate_startup(self) -> Calibration:
+        cfg = self.measurement.config
+        self.calibration = calibrate(
+            cfg.instrumenter, cfg.sampling_period, calls=self.probe_calls
+        )
+        return self.calibration
+
+    def open(self) -> None:
+        self._t_open = time.perf_counter_ns()
+        self._window_start = self._t_open
+        self._residual_mark = self._t_open
+        self._tick_t = self._t_open
+        self._push_state(0)  # events may predate open by an install race
+        if self.watchdog_s > 0:
+            self._watchdog_stop.clear()
+            self._watchdog = threading.Thread(
+                target=self._watchdog_loop, name="repro-governor", daemon=True
+            )
+            self._watchdog.start()
+
+    def stop_watchdog(self) -> None:
+        self._watchdog_stop.set()
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=1.0)
+            self._watchdog = None
+
+    # -- cost model ---------------------------------------------------------
+
+    def _pair_cost(self, state: _LadderState) -> float:
+        cal = self.calibration
+        if cal is None or state.name == "none":
+            return 0.0
+        if state.name == "sampling":
+            return cal.sampling_base_ns + (
+                cal.sampling_sampled_ns - cal.sampling_base_ns
+            ) / max(state.period, 1)
+        return cal.cost_full_ns
+
+    def _filtered_pair_cost(self, state: _LadderState) -> float:
+        cal = self.calibration
+        if cal is None or state.name == "none":
+            return 0.0
+        if state.name == "sampling":
+            return cal.sampling_base_ns
+        return cal.cost_filtered_ns
+
+    def _current_state(self) -> _LadderState:
+        inst = self.measurement.instrumenter
+        return _LadderState(inst.name, int(getattr(inst, "period", 0) or 0))
+
+    def _push_state(self, t_ns: int) -> None:
+        """Record that the current (instrumenter, period) took effect at
+        ``t_ns`` — called at open and after every applied escalation."""
+        state = self._current_state()
+        self._state_t.append(t_ns)
+        self._state_mult.append(
+            max(self.measurement.instrumenter.cost_multiplier(), 1.0)
+        )
+        self._state_cost.append(self._pair_cost(state))
+
+    @staticmethod
+    def _overhead_fraction(cost_ns: float, elapsed_ns: float) -> float:
+        """Estimated dilation: instrumentation time over useful time."""
+        useful = max(elapsed_ns - cost_ns, elapsed_ns * 0.01, 1.0)
+        return cost_ns / useful
+
+    def _projected(self, state: _LadderState, kept_rate: float, excl_rate: float) -> float:
+        cost_per_s = kept_rate * self._pair_cost(state) + excl_rate * self._filtered_pair_cost(
+            state
+        )
+        return self._overhead_fraction(cost_per_s, 1e9)
+
+    # -- accounting (called under the measurement flush lock) ---------------
+
+    def _ensure(self, n: int) -> None:
+        if n > self._visits.size:
+            grow = max(n, 2 * self._visits.size, 64)
+            for attr in ("_visits", "_visits_rep", "_leaf_ns", "_leaf_min", "_est_cost"):
+                arr = getattr(self, attr)
+                fill = np.inf if attr == "_leaf_min" else 0
+                new = np.full(grow, fill, dtype=arr.dtype)
+                new[: arr.size] = arr
+                setattr(self, attr, new)
+
+    def on_flush(self, thread_id: int, columns: Dict[str, np.ndarray]) -> None:
+        kind = columns["kind"]
+        if kind.size:
+            reg = columns["region"]
+            t = columns["t"]
+            enter_mask = (kind == EV_ENTER) | (kind == EV_C_ENTER)
+            enters = reg[enter_mask]
+            # Cost each enter by the state active at its *timestamp* (a
+            # batch can flush after an escalation changed the state it was
+            # recorded under — another thread's flush pulls the trigger).
+            seg = np.searchsorted(
+                np.asarray(self._state_t, dtype=np.uint64), t[enter_mask], side="right"
+            ) - 1
+            np.clip(seg, 0, len(self._state_t) - 1, out=seg)
+            mults = np.asarray(self._state_mult)[seg]
+            pair_costs = mults * np.asarray(self._state_cost)[seg]
+            if enters.size:
+                self._ensure(int(enters.max()) + 1)
+                size = self._visits.size
+                counts = np.bincount(enters, minlength=size)
+                self._visits[: counts.size] += counts
+                rep = np.bincount(enters, weights=mults, minlength=size)
+                self._visits_rep[: rep.size] += rep
+                cost = np.bincount(enters, weights=pair_costs, minlength=size)
+                self._est_cost[: cost.size] += cost
+            # Leaf pairs: enter immediately followed by the matching exit —
+            # their duration is pure exclusive time, vectorizable without a
+            # shadow-stack replay.
+            if kind.size > 1:
+                leaf = (
+                    enter_mask[:-1]
+                    & (kind[1:] == kind[:-1] + 1)  # EV_EXIT/EV_C_EXIT = enter+1
+                    & (reg[1:] == reg[:-1])
+                )
+                if leaf.any():
+                    dur = (t[1:][leaf] - t[:-1][leaf]).astype(np.float64)
+                    leaf_regs = reg[:-1][leaf]
+                    leaf_sum = np.bincount(
+                        leaf_regs, weights=dur, minlength=self._visits.size
+                    )
+                    self._leaf_ns[: leaf_sum.size] += leaf_sum
+                    np.minimum.at(self._leaf_min, leaf_regs, dur)
+            self._window_pairs += float(mults.sum())
+            self._window_cost += float(pair_costs.sum())
+            self._ev_total += float(kind.size)
+            self._ev_enters += float(enters.size)
+
+        now = time.perf_counter_ns()
+        elapsed = now - self._window_start
+        if elapsed < self.min_window_ns or self._window_pairs < self.min_window_pairs:
+            return
+        residual = self._excluded_rate * self._filtered_pair_cost(
+            self._current_state()
+        ) * (elapsed / 1e9)
+        overhead = self._overhead_fraction(self._window_cost + residual, elapsed)
+        acted = False
+        if overhead > self.budget and not self.frozen:
+            window_s = elapsed / 1e9
+            total_s = max((now - self._t_open) / 1e9, window_s)
+            cum_rate = (self._cum_pairs + self._window_pairs) / total_s
+            kept_rate = max(self._window_pairs / window_s, cum_rate)
+            acted = self._escalate(overhead, kept_rate, now)
+        if acted or overhead <= self.budget:
+            self._close_window(now)
+
+    # -- watchdog (stall safety net) ----------------------------------------
+
+    def _watchdog_loop(self) -> None:
+        # The watchdog is measurement infrastructure: clear any per-thread
+        # hooks the instrumenter's thread-entry installed (Score-P's runtime
+        # never records itself).  Left hooked, the watchdog's own
+        # threading.* calls would fill a buffer and could drive the *first*
+        # escalation off the governor's self-inflicted cost — excluding
+        # threading regions and downgrading before the application's first
+        # flush ever arrives.  (Under ``sys.monitoring`` hooks are global,
+        # not per-thread; the tick's few calls per period are noise there.)
+        sys.setprofile(None)
+        sys.settrace(None)
+        while not self._watchdog_stop.wait(self.watchdog_s):
+            if self.frozen:
+                return
+            try:
+                self._tick()
+            except Exception:  # pragma: no cover - never kill the app
+                return
+
+    def _tick(self) -> None:
+        """Between-flush evaluation from live buffer growth.
+
+        The control loop is flush-driven, but an escalation can collapse the
+        event rate so far that the next flush never comes (everything
+        excluded, or the sampler's period raised) while residual hook cost
+        still exceeds the budget — the model that justified stopping there
+        was built from one noisy window.  The watchdog reads ``len()`` of
+        the live buffers (no flushing, no per-event cost) to measure the
+        *actual* post-action event rate and re-escalates if it proves the
+        projection wrong.  It only ever runs after the first flush-driven
+        action, so region accounting stays flush-granular; and a swap it
+        performs installs the new hook only on threads started afterwards
+        (pre-existing threads' stale callbacks self-remove — losing coverage
+        there errs on the cheap side, which is the governor's mandate).
+        """
+        if not self.actions:
+            return
+        measurement = self.measurement
+        with measurement._flush_lock:
+            if self.frozen:
+                return
+            now = time.perf_counter_ns()
+            dt_ns = now - self._tick_t
+            if dt_ns < self.min_window_ns:
+                return
+            inst = measurement.instrumenter
+            with measurement._buffers_lock:
+                buffers = list(measurement._buffers)
+            total = sum(len(b) for b in buffers) + sum(
+                getattr(b, "n_flushed", 0) for b in buffers
+            )
+            nfiltered = inst.filtered_calls()
+            if inst is not self._tick_inst:
+                # Swapped instrumenter: its filtered counter restarted at 0.
+                self._tick_inst = inst
+                self._tick_filtered = 0
+            delta = max(total - self._tick_events, 0)
+            delta_f = max(nfiltered - self._tick_filtered, 0)
+            self._tick_events = total
+            self._tick_filtered = nfiltered
+            self._tick_t = now
+            state = self._current_state()
+            mult = max(inst.cost_multiplier(), 1.0)
+            dt_s = dt_ns / 1e9
+            # Buffered events per call pair, as observed in real flushes:
+            # dividing by a flat 2 would overestimate the pair rate of a
+            # line-dominated settrace stream by the lines-per-call factor.
+            ev_per_pair = (
+                self._ev_total / self._ev_enters if self._ev_enters else 2.0
+            )
+            recorded_rate = (delta / max(ev_per_pair, 2.0)) * mult / dt_s
+            filtered_rate = delta_f * mult / dt_s
+            cost_rate = recorded_rate * self._pair_cost(state) + (
+                filtered_rate * self._filtered_pair_cost(state)
+            )
+            overhead = self._overhead_fraction(cost_rate, 1e9)
+            if overhead > self.budget:
+                # The measured filtered rate supersedes the frozen
+                # exclusion-time estimate for this decision.
+                self._excluded_rate = max(self._excluded_rate, filtered_rate)
+                if self._escalate(overhead, recorded_rate, now):
+                    self._close_window(now)
+                    # An escalation that swapped the instrumenter ran
+                    # install() on *this* thread — re-assert the watchdog's
+                    # never-instrumented invariant, or its own tick calls
+                    # would feed back into the very rates it measures.
+                    sys.setprofile(None)
+                    sys.settrace(None)
+
+    def _close_window(self, now: int) -> None:
+        self._total_cost += self._window_cost
+        self._cum_pairs += self._window_pairs
+        self._fold_residual(now)
+        self._window_cost = 0.0
+        self._window_pairs = 0.0
+        self._window_start = now
+
+    def _fold_residual(self, now: int) -> None:
+        dt = max(now - self._residual_mark, 0)
+        self._total_residual += self._excluded_rate * self._filtered_pair_cost(
+            self._current_state()
+        ) * (dt / 1e9)
+        self._residual_mark = now
+
+    # -- escalation ---------------------------------------------------------
+
+    def _offenders(self, exclude_ids: set) -> List[int]:
+        """Candidate regions, most expensive first: high-frequency,
+        short-duration, not user-annotated, not already excluded.
+
+        Short-duration means the fastest observed leaf span is under the
+        cap; regions never seen as a leaf are skipped — once their callees
+        are excluded they become leaves in later batches and turn eligible
+        (the ladder's downgrade rungs cover the meantime)."""
+        n = self._visits.size
+        regions = self.measurement.regions
+        order = np.argsort(-self._est_cost[:n])
+        out = []
+        for rid in order:
+            rid = int(rid)
+            if self._visits[rid] <= 0 or rid in exclude_ids:
+                continue
+            if not self._leaf_min[rid] <= self.offender_max_leaf_ns:
+                continue
+            try:
+                region = regions.get(rid)
+            except KeyError:
+                continue
+            if region.kind == KIND_USER:
+                continue
+            out.append(rid)
+        return out
+
+    def _escalate(self, overhead: float, kept_rate_raw: float, now: int) -> bool:
+        """Walk the ladder until the projected overhead fits the budget.
+
+        ``kept_rate_raw`` is the caller's wall-clock estimate of recorded
+        call pairs per second.  Rates must be per second of *useful* time,
+        not wall time: once a rung removes instrumentation cost the
+        application speeds up and the hook rate rises by the same factor, so
+        projecting with the wall rate would under-estimate every cheaper
+        rung and strand the ladder short of the budget (with too few events
+        left to flush, there may be no later evaluation to correct it).
+        Both the dilation correction and the calibrated cost are themselves
+        estimates (and a window may straddle call-free phases that depress
+        the apparent rate), so ladder-stop decisions additionally apply
+        ``projection_safety``: erring toward one rung too many keeps the
+        budget a guarantee rather than a coin flip — and the watchdog's
+        measured rates catch any remaining under-shoot afterwards.
+        """
+        measurement = self.measurement
+        state = self._current_state()
+        if state.name == "none" and not self._excluded_rate:
+            return False
+        total_s = max((now - self._t_open) / 1e9, 1e-9)
+        dilation = (1.0 + overhead) * self.projection_safety
+        kept_rate = kept_rate_raw * dilation
+        excl_rate = self._excluded_rate
+        applied: List[Dict[str, Any]] = []
+
+        # Rung a — exclude offenders (projection moves their rate to the
+        # filtered fast path).
+        new_excluded: List[int] = []
+        for rid in self._offenders(self._excluded_rids):
+            if self._projected(state, kept_rate, excl_rate) <= self.budget:
+                break
+            if len(new_excluded) >= self.max_excludes_per_action:
+                break
+            rate = float(self._visits_rep[rid]) / total_s * dilation
+            rate = min(rate, kept_rate)
+            kept_rate -= rate
+            excl_rate += rate
+            new_excluded.append(rid)
+        if new_excluded:
+            regions = measurement.regions
+            patterns = []
+            names = []
+            for rid in new_excluded:
+                region = regions.get(rid)
+                patterns.append(
+                    f"{_fnmatch_escape(region.module)}.{_fnmatch_escape(region.name)}"
+                )
+                names.append(f"{region.module}:{region.name}")
+            measurement.filter.add_runtime_excludes(patterns)
+            invalidated = regions.refilter()
+            self._excluded_rids.update(new_excluded)
+            self._fold_residual(now)
+            self._excluded_rate = excl_rate
+            applied.append(
+                {
+                    "kind": "exclude_regions",
+                    "regions": names,
+                    "patterns": patterns,
+                    "invalidated_handles": len(invalidated),
+                }
+            )
+
+        # Rungs b/c — raise the sampling period, then downgrade, projecting
+        # each step; a downgrade to the sampler re-enters the period rung.
+        target = _LadderState(state.name, state.period)
+        for _ in range(32):
+            if self._projected(target, kept_rate, excl_rate) <= self.budget:
+                break
+            if target.name == "sampling" and 0 < target.period < self.max_period:
+                target.period = min(target.period * 2, self.max_period)
+                continue
+            down = INSTRUMENTERS[target.name].downgrade_to if target.name else None
+            if down is None:
+                break
+            target = _LadderState(
+                down,
+                measurement.config.sampling_period if down == "sampling" else 0,
+            )
+        if not new_excluded and target == state:
+            # The projection model claims the current state fits, yet the
+            # *measured* overhead is over budget — the model's rate estimate
+            # is wrong (noisy window, call-free phase).  Trust the
+            # measurement and force one rung of progress; the next window
+            # (or the watchdog) re-evaluates from there.
+            if state.name == "sampling" and 0 < state.period < self.max_period:
+                target = _LadderState(state.name, min(state.period * 2, self.max_period))
+            else:
+                down = INSTRUMENTERS[state.name].downgrade_to
+                if down is not None:
+                    target = _LadderState(
+                        down,
+                        measurement.config.sampling_period if down == "sampling" else 0,
+                    )
+        if target.name != state.name:
+            measurement.swap_instrumenter(
+                target.name,
+                **({"period": target.period} if target.name == "sampling" else {}),
+            )
+            applied.append(
+                {
+                    "kind": "downgrade_instrumenter",
+                    "from": state.name,
+                    "to": target.name,
+                    "period": target.period or None,
+                }
+            )
+        elif target.period != state.period and target.period:
+            if measurement.instrumenter.set_period(target.period):
+                applied.append(
+                    {
+                        "kind": "raise_period",
+                        "from": state.period,
+                        "to": target.period,
+                    }
+                )
+
+        if not applied:
+            return False
+        self._push_state(now)  # batches recorded before `now` keep old costs
+        projected = self._projected(target, kept_rate, excl_rate)
+        self.actions.append(
+            {
+                "t_ns": now - self._t_open,
+                "window_overhead": round(overhead, 6),
+                "projected_overhead": round(projected, 6),
+                "budget": self.budget,
+                "steps": applied,
+            }
+        )
+        return True
+
+    # -- report -------------------------------------------------------------
+
+    def document(self) -> Dict[str, Any]:
+        now = time.perf_counter_ns()
+        self._close_window(now)
+        elapsed = max(now - self._t_open, 1)
+        est_cost = self._total_cost + self._total_residual
+        regions = self.measurement.regions
+        n = self._visits.size
+        rows = []
+        for rid in np.argsort(-self._est_cost[:n]):
+            rid = int(rid)
+            if self._visits[rid] <= 0:
+                continue
+            try:
+                region = regions.get(rid)
+            except KeyError:
+                continue
+            rows.append(
+                {
+                    "region": f"{region.module}:{region.name}",
+                    "kind": region.kind,
+                    "visits": int(self._visits[rid]),
+                    "visits_represented": float(self._visits_rep[rid]),
+                    "leaf_excl_ns": float(self._leaf_ns[rid]),
+                    "leaf_min_ns": (
+                        float(self._leaf_min[rid])
+                        if np.isfinite(self._leaf_min[rid])
+                        else None
+                    ),
+                    "est_cost_ns": float(self._est_cost[rid]),
+                    "excluded": rid in self._excluded_rids,
+                }
+            )
+            if len(rows) >= 50:
+                break
+        state = self._current_state()
+        return {
+            "budget": self.budget,
+            "calibration": asdict(self.calibration) if self.calibration else None,
+            "final_instrumenter": {"name": state.name, "period": state.period or None},
+            "actions": self.actions,
+            "regions": rows,
+            "estimate": {
+                "elapsed_ns": int(elapsed),
+                "recorded_cost_ns": round(self._total_cost, 1),
+                "residual_cost_ns": round(self._total_residual, 1),
+                "overhead_fraction": round(
+                    float(self._overhead_fraction(est_cost, elapsed)), 6
+                ),
+                "under_budget": bool(
+                    self._overhead_fraction(est_cost, elapsed) <= self.budget
+                ),
+            },
+            "suggested_filter": self.suggest_filter(),
+        }
+
+    def suggest_filter(self) -> str:
+        """Filter spec for the next run: the base filter's own rules, plus —
+        as absolute ``exclude!`` rules — everything excluded at runtime and
+        any remaining offender whose estimated cost alone eats >=10% of the
+        budget.  Round-trips through ``Filter.from_spec`` with the base
+        semantics intact (an include-only allow-list stays one), so a single
+        ``--filter`` replaces both."""
+        flt = self.measurement.filter
+        patterns = list(dict.fromkeys(flt.runtime_exclude))
+        elapsed = max(time.perf_counter_ns() - self._t_open, 1)
+        threshold = 0.1 * self.budget * elapsed
+        regions = self.measurement.regions
+        extra = []
+        for rid in np.argsort(-self._est_cost[: self._visits.size]):
+            rid = int(rid)
+            if rid in self._excluded_rids or self._visits[rid] <= 0:
+                continue
+            if self._est_cost[rid] < threshold:
+                break
+            if not self._leaf_min[rid] <= self.offender_max_leaf_ns:
+                continue
+            try:
+                region = regions.get(rid)
+            except KeyError:
+                continue
+            if region.kind == KIND_USER:
+                continue
+            extra.append(
+                f"{_fnmatch_escape(region.module)}.{_fnmatch_escape(region.name)}"
+            )
+        for pat in extra:
+            if pat not in patterns:
+                patterns.append(pat)
+        return Filter(
+            include=list(flt.include),
+            exclude=list(flt.exclude),
+            runtime_exclude=patterns,
+        ).to_spec()
+
+    def close(self, run_dir: str) -> Dict[str, Any]:
+        self.frozen = True
+        self.stop_watchdog()
+        doc = self.document()
+        with open(os.path.join(run_dir, ARTIFACT), "w") as fh:
+            json.dump(doc, fh, indent=1, allow_nan=False)
+        return doc
+
+
+def load_governor(run_dir: str) -> Optional[Dict[str, Any]]:
+    """Read a run's governor.json (``None`` when no governor ran)."""
+    path = os.path.join(run_dir, ARTIFACT)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None

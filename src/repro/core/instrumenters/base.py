@@ -24,6 +24,9 @@ class Instrumenter(ABC):
     name: str = "?"
     #: event kinds this instrumenter can observe (paper Table 1)
     events_supported: Tuple[str, ...] = ()
+    #: next rung of the overhead governor's downgrade ladder (``None`` =
+    #: nothing cheaper exists).  Set per subclass.
+    downgrade_to: "str | None" = None
 
     @abstractmethod
     def install(self, measurement: "Measurement") -> None:
@@ -32,3 +35,35 @@ class Instrumenter(ABC):
     @abstractmethod
     def uninstall(self) -> None:
         """Deregister; no events flow after this returns."""
+
+    # -- governor hooks (runtime overhead control) --------------------------
+
+    def set_period(self, period: int) -> bool:
+        """Mutate the sampling period of a live instrumenter.
+
+        Returns ``False`` when the instrumenter has no period to mutate
+        (every event source except the counting sampler); the governor then
+        skips the period rung of its escalation ladder.
+        """
+        return False
+
+    def cost_multiplier(self) -> float:
+        """Hook invocations per *appended* event (governor cost accounting).
+
+        1.0 for exhaustive instrumenters; the counting sampler overrides
+        this with its period (each appended event stands for ``period``
+        unsampled hook invocations that still paid the fast-path cost).
+        """
+        return 1.0
+
+    def filtered_calls(self) -> int:
+        """Call events whose region verdict was ``FILTERED`` since install.
+
+        Filtered hooks never reach a buffer, so their residual cost is
+        invisible to flush-based accounting; instrumenters count them on the
+        verdict-miss path (one integer increment there, zero cost on the
+        recorded path) so the governor's watchdog can observe the post-
+        exclusion hook rate.  Sampler counts are in *sampled* calls — scale
+        by :meth:`cost_multiplier` like any appended event.
+        """
+        return 0

@@ -30,11 +30,17 @@ _TOOL_NAME = "repro-monitor"
 class MonitoringInstrumenter(Instrumenter):
     name = "monitoring"
     events_supported = ("call", "return")
+    # Governor downgrade rung: exhaustive PEP 669 events -> counting sampler.
+    downgrade_to = "sampling"
 
     def __init__(self) -> None:
         self._measurement = None
         self._installed = False
         self._tool_id = None
+        self._nfiltered: list = [0]
+
+    def filtered_calls(self) -> int:
+        return self._nfiltered[0]
 
     def _make_callbacks(self, measurement):
         regions = measurement.regions
@@ -58,6 +64,8 @@ class MonitoringInstrumenter(Instrumenter):
                 buf.flush()
                 appends[ident] = buf.events.append
 
+        nfiltered = self._nfiltered
+
         def on_start(code, instruction_offset):
             t = clock()
             rid = by_code.get(code)
@@ -70,6 +78,10 @@ class MonitoringInstrumenter(Instrumenter):
                     append = _bind(ident)
                 append((EV_ENTER, rid, t, 0))
                 _maybe_flush(ident)
+            else:
+                # Verdict-miss count for the governor's residual-cost
+                # observation.
+                nfiltered[0] += 1
 
         def on_return(code, instruction_offset, retval):
             t = clock()

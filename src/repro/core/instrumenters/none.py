@@ -15,6 +15,7 @@ from .base import Instrumenter
 class NoneInstrumenter(Instrumenter):
     name = "none"
     events_supported = ()
+    downgrade_to = None  # governor ladder floor: nothing cheaper exists
 
     def install(self, measurement) -> None:  # noqa: ARG002 - interface
         pass

@@ -21,6 +21,8 @@ from .base import Instrumenter
 class ProfileInstrumenter(Instrumenter):
     name = "profile"
     events_supported = ("call", "return", "c_call", "c_return", "c_exception")
+    # Governor downgrade rung: exhaustive setprofile -> counting sampler.
+    downgrade_to = "sampling"
 
     def __init__(self) -> None:
         self._measurement = None
@@ -31,6 +33,10 @@ class ProfileInstrumenter(Instrumenter):
         # callback checks this cell and self-removes once stale, instead of
         # appending into already-drained buffers of a finalized measurement.
         self._active: list = [False]
+        self._nfiltered: list = [0]
+
+    def filtered_calls(self) -> int:
+        return self._nfiltered[0]
 
     # -- per-thread callback factory ---------------------------------------
 
@@ -47,6 +53,7 @@ class ProfileInstrumenter(Instrumenter):
         register_code = regions.register_code
         register_cfunction = regions.register_cfunction
         clock = time.perf_counter_ns
+        nfiltered = self._nfiltered
 
         def callback(frame, event, arg):
             if not active[0]:
@@ -60,6 +67,11 @@ class ProfileInstrumenter(Instrumenter):
                     rid = register_code(code, frame)
                 if rid >= 0:
                     append((EV_ENTER, rid, t, 0))
+                else:
+                    # Verdict-miss path: count so the governor can observe
+                    # residual hook cost (recorded events are observable
+                    # through the buffers; filtered ones only here).
+                    nfiltered[0] += 1
             elif event == "return":
                 code = frame.f_code
                 rid = by_code.get(code)

@@ -21,6 +21,8 @@ from .base import Instrumenter
 class TraceInstrumenter(Instrumenter):
     name = "trace"
     events_supported = ("call", "return", "line", "exception")
+    # Governor downgrade rung: per-line settrace -> per-call setprofile.
+    downgrade_to = "profile"
 
     def __init__(self) -> None:
         self._measurement = None
@@ -29,6 +31,10 @@ class TraceInstrumenter(Instrumenter):
         # ProfileInstrumenter): ``sys.settrace(None)`` in uninstall only
         # clears the hook on the calling thread.
         self._active: list = [False]
+        self._nfiltered: list = [0]
+
+    def filtered_calls(self) -> int:
+        return self._nfiltered[0]
 
     def _make_callback(self, measurement):
         active = self._active
@@ -41,6 +47,7 @@ class TraceInstrumenter(Instrumenter):
         by_code = regions.by_code
         register_code = regions.register_code
         clock = time.perf_counter_ns
+        nfiltered = self._nfiltered
 
         def callback(frame, event, arg):
             if not active[0]:
@@ -52,15 +59,21 @@ class TraceInstrumenter(Instrumenter):
             rid = by_code.get(code)
             if rid is None:
                 rid = register_code(code, frame)
-            if rid >= 0:
-                if event == "line":
-                    append((EV_LINE, rid, t, frame.f_lineno))
-                elif event == "call":
-                    append((EV_ENTER, rid, t, 0))
-                elif event == "return":
-                    append((EV_EXIT, rid, t, 0))
-                elif event == "exception":
-                    append((EV_EXCEPTION, rid, t, frame.f_lineno))
+            if rid < 0:
+                if event == "call":
+                    # Verdict-miss count for the governor's residual-cost
+                    # observation (returning None still suppresses the
+                    # frame's line events, so one count per call suffices).
+                    nfiltered[0] += 1
+                return None
+            if event == "line":
+                append((EV_LINE, rid, t, frame.f_lineno))
+            elif event == "call":
+                append((EV_ENTER, rid, t, 0))
+            elif event == "return":
+                append((EV_EXIT, rid, t, 0))
+            elif event == "exception":
+                append((EV_EXCEPTION, rid, t, frame.f_lineno))
             if len(events) >= threshold:
                 flush()
             # Returning the callback enables local (line) tracing for the

@@ -69,10 +69,16 @@ def instrument_step(fn: Callable, name: str, *, block: bool = True) -> Callable:
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
 
-# e.g. "%all-reduce.2 = f32[4,128]{1,0} all-reduce(%dot), ... replica_groups=[4,2]<=[8]"
+# Matches the op *application* (name followed by its operand paren), sync or
+# async: "all-reduce(...)", "all-reduce-start(...)", "all-gather-done(...)".
+# Anchoring on "(" keeps lhs instruction names ("%all-reduce-start.1 = ...")
+# and operand references ("...(%all-reduce-start.2)") from matching.
 _HLO_OP_RE = re.compile(
-    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
 )
+# One "dtype[dims]" shape; async-start results are tuples of these.
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
@@ -98,6 +104,12 @@ def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
     factor for the op and its replica-group size g —
     all-reduce 2(g-1)/g, all-gather/reduce-scatter (g-1)/g, all-to-all
     (g-1)/g, collective-permute 1.  Conventions documented in DESIGN.md §7.
+
+    Async forms are handled: ``*-start`` ops count (their result tuple's
+    largest element is the transferred buffer — for all-gather-start the
+    tuple is (input, output) and the gathered output is the byte count that
+    matches the sync form), while the paired ``*-done`` ops are skipped so
+    an async-ified collective is counted exactly once.
     """
     out: Dict[str, Dict[str, float]] = {
         op: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0} for op in _COLLECTIVES
@@ -106,8 +118,22 @@ def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
         match = _HLO_OP_RE.search(line)
         if not match:
             continue
-        dtype, dims, op = match.groups()
-        nbytes = _shape_bytes(dtype, dims)
+        op, suffix = match.group(1), match.group(2)
+        if suffix == "-done":
+            continue  # completion half of a counted *-start
+        eq = line.find("=")
+        if eq < 0 or eq > match.start():
+            continue  # operand reference, not an instruction result
+        shapes = _SHAPE_RE.findall(line[eq + 1 : match.start()])
+        if not shapes:
+            continue
+        sizes = [_shape_bytes(dtype, dims) for dtype, dims in shapes]
+        # Async-start result tuples: the element matching the sync form's
+        # result is the largest (all-gather's gathered output; all-reduce /
+        # collective-permute buffers dwarf the u32[] context scalars) —
+        # except reduce-scatter, whose scattered result is the *smallest*
+        # real shape, so max() would overcount by the group-size factor.
+        nbytes = min(sizes) if op == "reduce-scatter" else max(sizes)
         g = _group_size(line)
         if op == "all-reduce":
             factor = 2.0 * (g - 1) / g if g > 1 else 0.0

@@ -52,6 +52,12 @@ class MeasurementConfig:
     # ``substrates`` (or REPRO_MONITOR_MEMORY=1 adds it via from_env).
     memory_period: float = DEFAULT_PERIOD_S
     memory_topn: int = DEFAULT_TOPN
+    # Overhead budget as fractional dilation (0.05 = 5%); > 0 enables the
+    # runtime governor (repro.core.governor), which calibrates per-event
+    # cost at startup and escalates (exclude regions -> raise sampling
+    # period -> downgrade instrumenter) to keep estimated overhead under
+    # budget.  0 disables it.
+    budget: float = 0.0
     # ``rank`` is kept as a convenience init arg; ``topology`` is the source
     # of truth (rank + world size + local rank + mesh shape) and the two are
     # synchronized in __post_init__.  ``rank=None`` (the default) means
@@ -101,6 +107,7 @@ class MeasurementConfig:
             buffer_strategy=get("BUFFER", cls.buffer_strategy),
             memory_period=float(get("MEMORY_PERIOD", cls.memory_period)),
             memory_topn=int(get("MEMORY_TOPN", cls.memory_topn)),
+            budget=float(get("BUDGET", cls.budget)),
             rank=topology.rank,
             topology=topology,
             experiment=get("EXPERIMENT", cls.experiment),
@@ -120,6 +127,7 @@ class MeasurementConfig:
             ENV_PREFIX + "MEMORY": "1" if "memory" in self.substrates else "0",
             ENV_PREFIX + "MEMORY_PERIOD": str(self.memory_period),
             ENV_PREFIX + "MEMORY_TOPN": str(self.memory_topn),
+            ENV_PREFIX + "BUDGET": str(self.budget),
             ENV_PREFIX + "EXPERIMENT": self.experiment,
             ENV_PREFIX + "CHROME": "1" if self.chrome_export else "0",
             ENV_PREFIX + "SERIES": "1" if self.keep_series else "0",
@@ -158,6 +166,12 @@ class Measurement:
             self.instrumenter = make_instrumenter("sampling", period=config.sampling_period)
         else:
             self.instrumenter = make_instrumenter(config.instrumenter)
+        if config.budget > 0:
+            from .governor import Governor  # late import: governor imports core modules
+
+            self.governor: Optional[Governor] = Governor(self, config.budget)
+        else:
+            self.governor = None
         self._buffer_cls = BUFFER_STRATEGIES[config.buffer_strategy]
         self.run_dir = config.run_dir or os.path.join(
             config.out_dir,
@@ -195,6 +209,12 @@ class Measurement:
         with self._flush_lock:
             for sub in self._substrates:
                 sub.on_flush(thread_id, columns)
+            if self.governor is not None:
+                # After the substrates: the governor may mutate the filter,
+                # the sampling period, or the instrumenter itself, and the
+                # batch at hand should be interpreted under the settings it
+                # was recorded with.
+                self.governor.on_flush(thread_id, columns)
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -217,16 +237,36 @@ class Measurement:
         for sub in self._substrates:
             sub.open(self.run_dir, meta)
         self.started = True
+        if self.governor is not None:
+            # Calibrate before the instrumenter installs: the probe runs
+            # throwaway instrumenter instances on a stub host and must not
+            # race the real hook.
+            self.governor.calibrate_startup()
         self.instrumenter.install(self)
+        if self.governor is not None:
+            self.governor.open()
 
     def stop(self) -> None:
         """Uninstall the instrumenter but keep the run open (re-startable)."""
         if self.started:
+            if self.governor is not None:
+                # Freeze BEFORE uninstalling: a watchdog tick racing this
+                # could otherwise escalate and re-install hooks the user is
+                # in the middle of removing.
+                self.governor.frozen = True
+                self.governor.stop_watchdog()
             self.instrumenter.uninstall()
 
     def finalize(self) -> Optional[str]:
         if not self.started or self.finalized:
             return None
+        if self.governor is not None:
+            # Freeze BEFORE uninstalling (a racing watchdog tick could
+            # swap in fresh hooks on a finalizing measurement) and before
+            # draining (the drain flushes partial buffers, which must be
+            # accounted without escalating a shutdown).
+            self.governor.frozen = True
+            self.governor.stop_watchdog()
         self.instrumenter.uninstall()
         with self._buffers_lock:
             buffers = list(self._buffers)
@@ -235,6 +275,14 @@ class Measurement:
         region_table = self.regions.snapshot()
         for sub in self._substrates:
             sub.close(region_table)
+        if self.governor is not None:
+            try:
+                self.governor.close(self.run_dir)
+            except Exception as exc:
+                warnings.warn(
+                    f"governor report failed for {self.run_dir}: {exc!r}",
+                    RuntimeWarning,
+                )
         for sub in self._substrates:
             # Chrome export runs after *all* substrates closed so the trace
             # can embed metric series (metrics.json) as counter tracks.  An
@@ -267,6 +315,23 @@ class Measurement:
             json.dump(meta, fh, indent=1)
         self.finalized = True
         return self.run_dir
+
+    def swap_instrumenter(self, name: str, **kwargs) -> None:
+        """Replace the live instrumenter (governor downgrade path).
+
+        Uninstalls the current hook and installs the new one on the calling
+        thread (plus threads started afterwards).  Threads that already had
+        the old hook lose instrumentation — their stale callbacks self-remove
+        via the generation flag; re-hooking a foreign thread's profile slot
+        is not possible from here.
+        """
+        self.instrumenter.uninstall()
+        if name == "sampling" and "period" not in kwargs:
+            kwargs["period"] = self.config.sampling_period
+        self.instrumenter = make_instrumenter(name, **kwargs)
+        self.config.instrumenter = name
+        if self.started and not self.finalized:
+            self.instrumenter.install(self)
 
     # -- user instrumentation API ---------------------------------------------
 

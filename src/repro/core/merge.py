@@ -26,6 +26,8 @@ import warnings
 from typing import Any, Dict, List, Optional
 
 from .export import load_defs, merge_chrome_trace
+from .filtering import Filter
+from .governor import load_governor
 from .memsys import load_memory
 from .topology import ProcessTopology
 
@@ -83,6 +85,62 @@ def memory_summary(entries: List[Dict[str, Any]], top: int = 5) -> Optional[Dict
             ),
         },
         "gc_pause_ns_total": sum(r["gc_pause_ns"] for r in ranks),
+    }
+
+
+def governor_summary(entries: List[Dict[str, Any]]) -> Optional[Dict[str, Any]]:
+    """Cross-rank governor section for the merge summary.
+
+    Reads each selected rank's ``governor.json`` (best-effort: ungoverned
+    ranks are simply absent) and reports per-rank action counts, the final
+    instrumenter each rank converged to, and the estimated distortion —
+    plus the *union* of the per-rank suggested filter specs, which is the
+    spec to feed the next multi-process launch (a region hot on any rank
+    should be filtered on all of them).
+    """
+    ranks = []
+    union = Filter()
+    for entry in entries:
+        doc = load_governor(entry["run_dir"])
+        if doc is None:
+            continue
+        actions = doc.get("actions", [])
+        kinds = sorted({s["kind"] for a in actions for s in a.get("steps", [])})
+        final = doc.get("final_instrumenter") or {}
+        est = doc.get("estimate", {})
+        ranks.append(
+            {
+                "rank": entry["pid"],
+                "run_dir": entry["run_dir"],
+                "budget": doc.get("budget"),
+                "actions": len(actions),
+                "action_kinds": kinds,
+                "final_instrumenter": final.get("name", "?")
+                + (f"/p{final['period']}" if final.get("period") else ""),
+                "overhead_fraction": float(est.get("overhead_fraction", 0.0)),
+                "under_budget": bool(est.get("under_budget", True)),
+                "suggested_filter": doc.get("suggested_filter", ""),
+            }
+        )
+        rank_filter = Filter.from_spec(doc.get("suggested_filter", ""))
+        # Union per clause kind: base include/exclude rules are the shared
+        # launch config (identical across ranks in practice); the absolute
+        # runtime excludes are where ranks genuinely differ.
+        for ours, theirs in (
+            (union.include, rank_filter.include),
+            (union.exclude, rank_filter.exclude),
+            (union.runtime_exclude, rank_filter.runtime_exclude),
+        ):
+            for pat in theirs:
+                if pat not in ours:
+                    ours.append(pat)
+    if not ranks:
+        return None
+    return {
+        "ranks": ranks,
+        "actions_total": sum(r["actions"] for r in ranks),
+        "ranks_over_budget": sum(1 for r in ranks if not r["under_budget"]),
+        "suggested_filter": union.to_spec(),
     }
 
 
@@ -213,6 +271,9 @@ def merge_runs(
     memory = memory_summary(selected)
     if memory is not None:
         summary["memory"] = memory
+    governor = governor_summary(selected)
+    if governor is not None:
+        summary["governor"] = governor
     return summary
 
 

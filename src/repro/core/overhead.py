@@ -172,6 +172,7 @@ def measure_inprocess_beta(
     sampling_period: int = 97,
     substrates: Sequence[str] = (),
     flush_threshold: int = 1 << 16,
+    budget: float = 0.0,
 ) -> Tuple[float, float]:
     """In-process variant: isolates β from interpreter/JAX startup noise.
 
@@ -180,6 +181,9 @@ def measure_inprocess_beta(
     times exec() under an installed instrumenter.  ``substrates`` defaults to
     none (pure event-path cost); ``benchmarks/memory_overhead.py`` passes
     ``("memory",)`` to measure the heap collector's flush-time share.
+    ``budget > 0`` enables the overhead governor: its calibration probe and
+    escalation transient are per-run constants, so they land in α and the
+    fitted β reflects the governed steady state.
     """
     from .measurement import MeasurementConfig, Measurement
 
@@ -196,6 +200,7 @@ def measure_inprocess_beta(
                 buffer_strategy=buffer_strategy,
                 sampling_period=sampling_period,
                 flush_threshold=flush_threshold,
+                budget=budget,
             )
             m = Measurement(cfg)
             glb = {"__name__": "__overhead__"}

@@ -150,6 +150,39 @@ class RegionRegistry:
             self._user[key] = rid
             return rid
 
+    # -- verdict invalidation (runtime filter tightening) ------------------
+
+    def refilter(self) -> List[int]:
+        """Re-evaluate cached filter verdicts against the current ``decide``.
+
+        Instrumenters bind ``by_code`` / ``by_cfunc`` as closure locals, so
+        tightening the filter after registration would otherwise never take
+        effect: verdicts are cached in those dicts.  This mutates them *in
+        place* (same dict objects the closures hold), flipping newly-excluded
+        handles to ``FILTERED``.  One-directional by construction: handles
+        that were filtered at registration never produced a Region entry, so
+        there is nothing to re-admit — the governor only ever tightens.
+
+        Returns the region ids that were invalidated.
+        """
+        changed: List[int] = []
+        with self._lock:
+            for table in (self.by_code, self.by_cfunc, self._user):
+                # Iterate a snapshot: refilter runs in user context with the
+                # hook still active, so C calls inside ``decide`` fire
+                # c_call events whose handling re-enters registration on
+                # this thread (the RLock lets it through) and inserts into
+                # these very dicts.  Entries registered mid-pass already got
+                # their verdict from the tightened ``decide``.
+                for key, rid in list(table.items()):
+                    if rid == FILTERED:
+                        continue
+                    r = self._regions[rid]
+                    if not self._decide(r.module, r.name, r.file):
+                        table[key] = FILTERED
+                        changed.append(rid)
+        return changed
+
     # -- introspection ----------------------------------------------------
 
     def __len__(self) -> int:

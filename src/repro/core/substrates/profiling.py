@@ -137,11 +137,22 @@ class ProfilingSubstrate(Substrate):
             r = region_table[rid]
             return f"{r['module']}:{r['name']}"
 
-        flat: Dict[int, Dict[str, int]] = {}
+        flat: Dict[int, Dict[str, Any]] = {}
 
         def tree_dict(node: _Node) -> Dict[str, Any]:
             if node.region >= 0:
-                agg = flat.setdefault(node.region, {"visits": 0, "incl_ns": 0, "excl_ns": 0})
+                agg = flat.setdefault(
+                    node.region,
+                    # kind rides along so offline tools (analysis
+                    # suggest-filter) can honor the "user regions are never
+                    # auto-excluded" invariant without defs.json.
+                    {
+                        "visits": 0,
+                        "incl_ns": 0,
+                        "excl_ns": 0,
+                        "kind": region_table[node.region]["kind"],
+                    },
+                )
                 agg["visits"] += node.visits
                 agg["incl_ns"] += node.incl_ns
                 agg["excl_ns"] += node.excl_ns

@@ -35,6 +35,67 @@ def test_filter_semantics():
     assert not f3.decide("other", "fn", "x.py")
 
 
+def test_filter_semantics_all_rule_combinations():
+    """Score-P filter-file semantics per rule combination (regression for
+    the drift where include rules acted as a global allow-list even with
+    exclude rules present)."""
+    # 1. no rules: everything recorded
+    assert Filter.from_spec("").decide("anything", "fn", "x.py")
+    # 2. exclude only: everything not excluded recorded
+    f = Filter.from_spec("exclude:hot.*")
+    assert not f.decide("hot.loop", "fn", "x.py")
+    assert f.decide("cold", "fn", "x.py")
+    # 3. include only: allow-list
+    f = Filter.from_spec("include:mypkg.*")
+    assert f.decide("mypkg.sub", "fn", "x.py")
+    assert not f.decide("unrelated", "fn", "x.py")
+    # 4. mixed: exclude first, include re-admits, everything else RECORDED
+    f = Filter.from_spec("exclude:numpy.*;include:numpy.fft")
+    assert not f.decide("numpy.linalg", "solve", "x.py")  # excluded
+    assert f.decide("numpy.fft", "fft", "x.py")  # re-admitted
+    assert f.decide("unrelated", "fn", "x.py")  # neither rule -> recorded
+
+
+def test_filter_runtime_excludes():
+    # Runtime excludes tighten and win over include re-admission...
+    f = Filter.from_spec("exclude:numpy.*;include:numpy.fft")
+    assert f.decide("numpy.fft", "fft", "x.py")
+    assert f.add_runtime_excludes(["numpy.fft"]) == ["numpy.fft"]
+    assert not f.decide("numpy.fft", "fft", "x.py")
+    # ...deduplicate...
+    assert f.add_runtime_excludes(["numpy.fft"]) == []
+    # ...and must not flip an include-only spec out of allow-list mode.
+    f2 = Filter.from_spec("include:mypkg.*")
+    f2.add_runtime_excludes(["mypkg.hot"])
+    assert not f2.decide("mypkg.hot", "fn", "x.py")
+    assert not f2.decide("unrelated", "fn", "x.py")  # still an allow-list
+    # Runtime excludes serialize under their own verb ("exclude!"), so the
+    # round-trip preserves the exact semantics — allow-list included.
+    f3 = Filter.from_spec(f2.to_spec())
+    assert "mypkg.hot" in f3.runtime_exclude
+    assert not f3.decide("mypkg.hot", "fn", "x.py")
+    assert f3.decide("mypkg.keep", "fn", "x.py")
+    assert not f3.decide("unrelated", "fn", "x.py")  # allow-list survived
+
+
+def test_registry_refilter_invalidates_cached_verdicts():
+    flt = Filter()
+    reg = RegionRegistry(decide=flt.decide)
+    code = compile("def f(): pass", "/app/hotmod.py", "exec")
+    rid = reg.register_code(code, None)
+    assert rid >= 0 and reg.by_code[code] == rid
+    user = reg.register_user("phase", module="app")
+    flt.add_runtime_excludes(["hotmod.*"])
+    changed = reg.refilter()
+    assert changed == [rid]
+    assert reg.by_code[code] == FILTERED  # in-place: closures see it
+    assert reg.register_code(code, None) == FILTERED  # re-register stays out
+    assert reg.register_user("phase", module="app") == user  # untouched
+    # region table stays dense (definitions are never removed)
+    snap = reg.snapshot()
+    assert [r["id"] for r in snap] == list(range(len(snap)))
+
+
 def test_filter_never_records_self():
     f = Filter.from_spec("")
     assert not f.decide("repro.core.measurement", "region", "m.py")

@@ -1,0 +1,270 @@
+"""Overhead-governor tests: calibration, escalation ladder, verdict
+invalidation, live period mutation, instrumenter swap, artifact contract,
+and the cross-rank merge section."""
+
+import json
+import os
+
+import pytest
+
+import repro.core as rmon
+from repro.core.analysis import (
+    render_governor,
+    render_merge_summary,
+    suggest_filter_from_profile,
+)
+from repro.core.filtering import Filter
+from repro.core.governor import Calibration, calibrate, load_governor
+from repro.core.measurement import Measurement, MeasurementConfig
+from repro.core.merge import governor_summary
+
+
+def _hot(n):
+    def inner(x):
+        return x + 1
+
+    x = 0
+    for _ in range(n):
+        x = inner(x)
+    return x
+
+
+def _governed_run(tmp_path, name, budget=0.02, n=120_000, filter_spec=""):
+    d = str(tmp_path / name)
+    cfg = MeasurementConfig(
+        instrumenter="profile",
+        substrates=("profiling",),
+        run_dir=d,
+        flush_threshold=2048,
+        budget=budget,
+        filter_spec=filter_spec,
+    )
+    m = Measurement(cfg)
+    m.start()
+    try:
+        _hot(n)
+    finally:
+        m.finalize()
+    return m
+
+
+# -- calibration -------------------------------------------------------------
+
+
+def test_calibration_shape_and_cache():
+    cal = calibrate("profile", calls=500, repeats=2, use_cache=False)
+    assert isinstance(cal, Calibration)
+    assert cal.cost_full_ns >= 0 and cal.cost_filtered_ns >= 0
+    assert cal.sampling_sampled_ns >= cal.sampling_base_ns >= 0
+    assert cal.probe_s > 0
+    # second call with the same key hits the process-wide cache
+    again = calibrate("profile", calls=500, repeats=2)
+    assert again is calibrate("profile", calls=500, repeats=2)
+
+
+def test_calibration_none_is_free():
+    cal = calibrate("none", calls=100, repeats=1, use_cache=False)
+    assert cal.cost_full_ns == 0.0 and cal.sampling_base_ns == 0.0
+
+
+# -- instrumenter hooks ------------------------------------------------------
+
+
+def test_downgrade_ladder_declared():
+    from repro.core.instrumenters import INSTRUMENTERS
+
+    assert INSTRUMENTERS["trace"].downgrade_to == "profile"
+    assert INSTRUMENTERS["profile"].downgrade_to == "sampling"
+    assert INSTRUMENTERS["monitoring"].downgrade_to == "sampling"
+    assert INSTRUMENTERS["sampling"].downgrade_to == "none"
+    assert INSTRUMENTERS["none"].downgrade_to is None
+
+
+def test_sampling_set_period_live(tmp_path):
+    """set_period must reach already-built per-thread callbacks (the period
+    lives in a shared cell read on countdown reset)."""
+    d = str(tmp_path / "period")
+    m = rmon.init(
+        instrumenter="sampling", sampling_period=2, run_dir=d,
+        substrates=("profiling",),
+    )
+    _hot(2000)
+    assert m.instrumenter.set_period(10**6) is True
+    assert m.instrumenter.cost_multiplier() == float(10**6)
+    before = sum(len(b) for b in m._buffers) + sum(b.n_flushed for b in m._buffers)
+    _hot(2000)
+    after = sum(len(b) for b in m._buffers) + sum(b.n_flushed for b in m._buffers)
+    rmon.finalize()
+    # at period 2 the first loop sampled ~1000 calls; at period 1e6 the
+    # second loop may sample at most a couple
+    assert before > 500
+    assert after - before < 10
+
+
+def test_non_sampling_instrumenters_reject_set_period():
+    from repro.core.instrumenters import make_instrumenter
+
+    for name in ("profile", "trace", "none"):
+        assert make_instrumenter(name).set_period(10) is False
+
+
+def test_swap_instrumenter_mid_run(tmp_path):
+    d = str(tmp_path / "swap")
+    cfg = MeasurementConfig(
+        instrumenter="profile", substrates=("profiling",), run_dir=d,
+    )
+    m = Measurement(cfg)
+    m.start()
+    try:
+        _hot(100)
+        m.swap_instrumenter("sampling", period=5)
+        assert m.instrumenter.name == "sampling"
+        assert m.config.instrumenter == "sampling"
+        _hot(100)
+    finally:
+        m.finalize()
+    with open(os.path.join(d, "meta.json")) as fh:
+        assert json.load(fh)["instrumenter"] == "sampling"
+
+
+# -- governed measurement (end to end) ---------------------------------------
+
+
+def test_governed_run_excludes_hot_region_and_roundtrips(tmp_path):
+    m = _governed_run(tmp_path, "gov")
+    doc = load_governor(str(tmp_path / "gov"))
+    assert doc is not None
+    assert doc["actions"], "governor took no action on a hot loop"
+    kinds = {s["kind"] for a in doc["actions"] for s in a["steps"]}
+    assert "exclude_regions" in kinds
+    # the hot inner function was excluded and its cached verdict invalidated
+    excluded = [
+        r for a in doc["actions"] for s in a["steps"]
+        if s["kind"] == "exclude_regions" for r in s["regions"]
+    ]
+    assert any("_hot.<locals>.inner" in r for r in excluded)
+    # suggested filter round-trips and keeps the hot region out
+    spec = doc["suggested_filter"]
+    flt = Filter.from_spec(spec)
+    assert flt.exclude or flt.runtime_exclude
+    assert not flt.decide(_hot.__module__, "_hot.<locals>.inner", __file__)
+    # applying the suggested spec to a re-run reduces the event rate
+    m2 = _governed_run(tmp_path, "ungov", budget=0.0, n=20_000)
+    m3 = _governed_run(tmp_path, "filtered", budget=0.0, n=20_000, filter_spec=spec)
+    with open(os.path.join(m2.run_dir, "meta.json")) as fh:
+        ev_plain = json.load(fh)["events_flushed"]
+    with open(os.path.join(m3.run_dir, "meta.json")) as fh:
+        ev_filtered = json.load(fh)["events_flushed"]
+    assert ev_filtered < 0.5 * ev_plain
+    # estimate + calibration sections are present and well-formed
+    assert doc["estimate"]["elapsed_ns"] > 0
+    assert doc["calibration"]["instrumenter"] == "profile"
+    assert isinstance(doc["estimate"]["under_budget"], bool)
+
+
+def test_governed_run_never_excludes_user_regions(tmp_path):
+    d = str(tmp_path / "user")
+    cfg = MeasurementConfig(
+        instrumenter="profile", substrates=("profiling",), run_dir=d,
+        flush_threshold=1024, budget=0.001,
+    )
+    m = Measurement(cfg)
+    m.start()
+    try:
+        for _ in range(20_000):
+            with m.region("tiny_step"):
+                pass
+    finally:
+        m.finalize()
+    doc = load_governor(d)
+    excluded = [
+        r for a in doc["actions"] for s in a["steps"]
+        if s["kind"] == "exclude_regions" for r in s["regions"]
+    ]
+    assert not any("tiny_step" in r for r in excluded)
+    assert "tiny_step" not in doc["suggested_filter"]
+
+
+def test_budget_env_and_cli_roundtrip():
+    cfg = MeasurementConfig(budget=0.07)
+    env = cfg.to_env()
+    assert env["REPRO_MONITOR_BUDGET"] == "0.07"
+    back = MeasurementConfig.from_env(env)
+    assert back.budget == 0.07
+    from repro.core.bootstrap import build_parser
+
+    ns = build_parser().parse_args(["--budget", "0.05", "target.py"])
+    assert ns.budget == 0.05
+
+
+def test_budget_zero_disables_governor(tmp_path):
+    m = _governed_run(tmp_path, "off", budget=0.0, n=1000)
+    assert m.governor is None
+    assert not os.path.exists(os.path.join(m.run_dir, "governor.json"))
+
+
+# -- analysis / merge --------------------------------------------------------
+
+
+def test_render_governor_and_suggest_filter(tmp_path):
+    _governed_run(tmp_path, "render")
+    doc = load_governor(str(tmp_path / "render"))
+    text = render_governor(doc)
+    assert "budget" in text and "final instrumenter" in text
+    # profile-based heuristic (no governor artifact needed)
+    profile = {
+        "flat": {
+            "app:hot_leaf": {"visits": 100_000, "excl_ns": 50_000_000},
+            "app:long_phase": {"visits": 3, "excl_ns": 9_000_000_000},
+            "user:step": {"visits": 100_000, "excl_ns": 1_000_000},
+            "train:tok": {"visits": 100_000, "excl_ns": 1_000_000, "kind": "user"},
+        }
+    }
+    spec = suggest_filter_from_profile(profile)
+    flt = Filter.from_spec(spec)
+    assert not flt.decide("app", "hot_leaf", "x.py")  # hot+short: filtered
+    assert flt.decide("app", "long_phase", "x.py")  # long: kept
+    assert flt.decide("user", "step", "x.py")  # user regions: kept
+    assert flt.decide("train", "tok", "x.py")  # user kind under any module: kept
+
+
+def test_merge_governor_summary(tmp_path):
+    docs = [
+        {
+            "budget": 0.05,
+            "actions": [{"steps": [{"kind": "exclude_regions"}]}],
+            "final_instrumenter": {"name": "sampling", "period": 194},
+            "estimate": {"overhead_fraction": 0.03, "under_budget": True},
+            "suggested_filter": "exclude:app.hot",
+        },
+        {
+            "budget": 0.05,
+            "actions": [
+                {"steps": [{"kind": "exclude_regions"}]},
+                {"steps": [{"kind": "downgrade_instrumenter"}]},
+            ],
+            "final_instrumenter": {"name": "none", "period": None},
+            "estimate": {"overhead_fraction": 0.09, "under_budget": False},
+            "suggested_filter": "exclude:app.hot,app.other",
+        },
+    ]
+    entries = []
+    for rank, doc in enumerate(docs):
+        d = tmp_path / f"r{rank}"
+        d.mkdir()
+        with open(d / "governor.json", "w") as fh:
+            json.dump(doc, fh)
+        entries.append({"pid": rank, "run_dir": str(d)})
+    summary = governor_summary(entries)
+    assert summary["actions_total"] == 3
+    assert summary["ranks_over_budget"] == 1
+    merged = Filter.from_spec(summary["suggested_filter"]).exclude
+    assert set(merged) == {"app.hot", "app.other"}
+    assert summary["ranks"][0]["final_instrumenter"] == "sampling/p194"
+    # renders without KeyError and mentions the governor section
+    text = render_merge_summary({"ranks": [], "governor": summary})
+    assert "governor:" in text
+    # absent governor.json -> section omitted
+    empty = tmp_path / "nogov"
+    empty.mkdir()
+    assert governor_summary([{"pid": 0, "run_dir": str(empty)}]) is None

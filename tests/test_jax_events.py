@@ -43,6 +43,58 @@ def test_collective_stats_parsing():
     assert cp["count"] == 1 and cp["wire_bytes"] == 16 * 4
 
 
+# Async-ified collective forms, as XLA emits them post-SPMD: the *-start op
+# carries the transfer (tuple-shaped result for all-gather/collective-permute)
+# and the paired *-done op must not double count.
+HLO_ASYNC_SAMPLE = """
+  %all-reduce-start.1 = f32[1024]{0} all-reduce-start(f32[1024]{0} %p), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  %all-reduce-done.1 = f32[1024]{0} all-reduce-done(f32[1024]{0} %all-reduce-start.1)
+  %all-gather-start.2 = (f32[8,128]{1,0}, f32[32,128]{1,0}) all-gather-start(f32[8,128]{1,0} %q), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %all-gather-done.2 = f32[32,128]{1,0} all-gather-done((f32[8,128]{1,0}, f32[32,128]{1,0}) %all-gather-start.2)
+  %collective-permute-start.3 = (f32[64]{0}, f32[64]{0}, u32[], u32[]) collective-permute-start(f32[64]{0} %r), channel_id=3, source_target_pairs={{0,1},{1,0}}
+  %collective-permute-done.3 = f32[64]{0} collective-permute-done((f32[64]{0}, f32[64]{0}, u32[], u32[]) %collective-permute-start.3)
+"""
+
+
+def test_collective_stats_async_forms_counted_once():
+    stats = collective_stats(HLO_ASYNC_SAMPLE)
+    ar = stats["all-reduce"]
+    assert ar["count"] == 1  # start counted, done deduped
+    assert ar["result_bytes"] == 1024 * 4
+    # group size 4 -> ring factor 2*(4-1)/4
+    assert ar["wire_bytes"] == pytest.approx(1024 * 4 * 1.5)
+    ag = stats["all-gather"]
+    assert ag["count"] == 1
+    # tuple result (input, output): the gathered output is the byte count
+    assert ag["result_bytes"] == 32 * 128 * 4
+    assert ag["wire_bytes"] == pytest.approx(32 * 128 * 4 * 0.75)
+    cp = stats["collective-permute"]
+    assert cp["count"] == 1
+    assert cp["result_bytes"] == 64 * 4 and cp["wire_bytes"] == 64 * 4
+
+
+def test_collective_stats_reduce_scatter_start_uses_scattered_result():
+    # reduce-scatter's async tuple is (input, output) with the *smaller*
+    # scattered output as the real result — max() over the tuple would
+    # overcount by the group-size factor.
+    hlo = """
+  %reduce-scatter-start.1 = (f32[800]{0}, f32[100]{0}) reduce-scatter-start(f32[800]{0} %p), channel_id=1, replica_groups=[1,8]<=[8], to_apply=%add
+  %reduce-scatter-done.1 = f32[100]{0} reduce-scatter-done((f32[800]{0}, f32[100]{0}) %reduce-scatter-start.1)
+"""
+    rs = collective_stats(hlo)["reduce-scatter"]
+    assert rs["count"] == 1
+    assert rs["result_bytes"] == 100 * 4
+    assert rs["wire_bytes"] == pytest.approx(100 * 4 * 7 / 8)
+
+
+def test_collective_stats_sync_and_async_mixed():
+    stats = collective_stats(HLO_SAMPLE + HLO_ASYNC_SAMPLE)
+    assert stats["all-reduce"]["count"] == 2
+    assert stats["all-gather"]["count"] == 2
+    # operand references to %all-reduce-start must not be miscounted
+    assert stats["reduce-scatter"]["count"] == 1
+
+
 def test_compiled_metrics_on_real_lowering():
     def f(x, w):
         return jnp.sum(jnp.tanh(x @ w))
