@@ -41,8 +41,11 @@ if __name__ == "__main__":
             print("\n" + fh.read())
 
         from repro.core.analysis import load_memory_doc, render_memory
+        from repro.core.report import write_report
 
         print("== memory hotspots ==")
         print(render_memory(load_memory_doc(run_dir), top=10))
-        print("\nopen trace.json in chrome://tracing or https://ui.perfetto.dev"
+        report = write_report(run_dir)
+        print(f"\nunified report: {report} (self-contained; open in any browser)")
+        print("open trace.json in chrome://tracing or https://ui.perfetto.dev"
               " (RSS/heap/GC appear as counter tracks)")

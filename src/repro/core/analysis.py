@@ -9,6 +9,12 @@ comparison is programmatic and drives the §Perf loop).
     PYTHONPATH=src python -m repro.core.analysis merge-summary SUMMARY_JSON
     PYTHONPATH=src python -m repro.core.analysis governor RUN_DIR
     PYTHONPATH=src python -m repro.core.analysis suggest-filter RUN_DIR
+    PYTHONPATH=src python -m repro.core.analysis report RUN_DIR [--diff BASE]
+
+Every subcommand follows one error convention: a missing/unreadable artifact
+raises :class:`MissingArtifact`, which the CLI renders as a one-line
+``error: ...`` on stderr and **exit code 2** (so scripts can tell "wrong
+substrate set" from real failures, which keep their tracebacks).
 """
 
 from __future__ import annotations
@@ -19,9 +25,10 @@ import sys
 from typing import Any, Dict, List, Optional, Tuple
 
 
-class MissingArtifact(RuntimeError):
-    """A run dir lacks the artifact a subcommand needs (wrong substrate set,
-    not a run dir at all, ...).  The CLI turns this into a one-line error."""
+# Canonical home is repro.core.schema (single class identity even when this
+# module runs as __main__ under `python -m`); re-exported here because the
+# exit-2 convention is this CLI's contract and callers import it from here.
+from .schema import MissingArtifact  # noqa: F401  (re-export)
 
 
 def _load_artifact(run_dir: str, artifact: str, substrate: str) -> Dict[str, Any]:
@@ -31,8 +38,14 @@ def _load_artifact(run_dir: str, artifact: str, substrate: str) -> Dict[str, Any
             f"no {artifact} in {run_dir or '.'} — was the {substrate!r} substrate "
             f"enabled for this run? (REPRO_MONITOR_SUBSTRATES / rmon.init(substrates=...))"
         )
-    with open(path) as fh:
-        return json.load(fh)
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        # Unreadable == missing for the exit-code contract: a truncated
+        # artifact (crashed writer) should produce the one-line error, not
+        # a traceback.
+        raise MissingArtifact(f"unreadable {artifact} in {run_dir or '.'}: {exc}") from exc
 
 
 def load_profile(run_dir: str) -> Dict[str, Any]:
@@ -102,35 +115,36 @@ def memory_hotspots(run_dir: str, top: int = 20) -> List[Tuple[str, Dict[str, An
 
 
 def render_memory(doc: Dict[str, Any], top: int = 20) -> str:
-    """Human-readable memory report: top-allocators table + system summary."""
-    heap = doc.get("heap", {})
-    rss = doc.get("rss", {})
-    gc = doc.get("gc", {})
+    """Human-readable memory report: top-allocators table + system summary.
+
+    Reads through the stable :mod:`repro.core.memsys` document accessors —
+    the same seam the HTML report uses — so renderer and report cannot
+    disagree about the memory.json layout."""
+    from .memsys import overview, region_rows
+
     out = [f"{'alloc_mb':>10s} {'net_mb':>10s} {'blocks':>10s} {'flushes':>8s}  region"]
-    rows = sorted(
-        heap.get("regions", {}).items(), key=lambda kv: -kv[1].get("alloc_bytes", 0)
-    )
-    for name, row in rows[:top]:
+    for row in region_rows(doc, top=top):
         out.append(
             f"{row['alloc_bytes'] / 1e6:10.2f} {row['net_bytes'] / 1e6:10.2f} "
-            f"{row['alloc_blocks']:10d} {row['flushes']:8d}  {name}"
+            f"{row['alloc_blocks']:10d} {row['flushes']:8d}  {row['region']}"
         )
-    if heap.get("dropped_regions"):
-        out.append(f"(+{heap['dropped_regions']} regions beyond the top-N cut)")
+    ov = overview(doc)
+    if ov["dropped_regions"]:
+        out.append(f"(+{ov['dropped_regions']} regions beyond the top-N cut)")
     out.append(
-        f"heap: start {heap.get('start_bytes', 0) / 1e6:.1f} MB, "
-        f"end {heap.get('end_bytes', 0) / 1e6:.1f} MB, "
-        f"peak {heap.get('peak_bytes', 0) / 1e6:.1f} MB (tracemalloc)"
+        f"heap: start {ov['heap_start_bytes'] / 1e6:.1f} MB, "
+        f"end {ov['heap_end_bytes'] / 1e6:.1f} MB, "
+        f"peak {ov['heap_peak_bytes'] / 1e6:.1f} MB (tracemalloc)"
     )
     out.append(
-        f"rss:  peak {rss.get('peak_bytes', 0) / 1e6:.1f} MB, "
-        f"end {rss.get('end_bytes', 0) / 1e6:.1f} MB "
-        f"({rss.get('samples', 0)} samples via {rss.get('source', '?')})"
+        f"rss:  peak {ov['rss_peak_bytes'] / 1e6:.1f} MB, "
+        f"end {ov['rss_end_bytes'] / 1e6:.1f} MB "
+        f"({ov['rss_samples']} samples via {ov['rss_source']})"
     )
     out.append(
-        f"gc:   {gc.get('collections', 0)} collections, "
-        f"{gc.get('pause_ns_total', 0) / 1e6:.2f} ms total pause, "
-        f"{gc.get('collected', 0)} objects collected"
+        f"gc:   {ov['gc_collections']} collections, "
+        f"{ov['gc_pause_ns_total'] / 1e6:.2f} ms total pause, "
+        f"{ov['gc_collected']} objects collected"
     )
     return "\n".join(out)
 
@@ -184,7 +198,13 @@ def load_governor_doc(run_dir: str) -> Dict[str, Any]:
 
 
 def render_governor(doc: Dict[str, Any], top: int = 15) -> str:
-    """Human-readable governor report: calibration, actions, cost table."""
+    """Human-readable governor report: calibration, actions, cost table.
+
+    Reads through the stable :mod:`repro.core.governor` document accessors
+    (``action_rows`` / ``region_rows``) shared with the HTML report."""
+    from .governor import action_rows
+    from .governor import region_rows as governor_region_rows
+
     out: List[str] = []
     cal = doc.get("calibration") or {}
     final = doc.get("final_instrumenter") or {}
@@ -196,24 +216,15 @@ def render_governor(doc: Dict[str, Any], top: int = 15) -> str:
     )
     period = f" (period {final['period']})" if final.get("period") else ""
     out.append(f"final instrumenter: {final.get('name', '?')}{period}")
-    actions = doc.get("actions", [])
+    actions = action_rows(doc)
     out.append(f"actions: {len(actions)}")
     for a in actions:
-        steps = "; ".join(
-            {
-                "exclude_regions": lambda s: f"excluded {len(s['regions'])} regions "
-                f"({', '.join(s['regions'][:3])}{'…' if len(s['regions']) > 3 else ''})",
-                "raise_period": lambda s: f"period {s['from']} -> {s['to']}",
-                "downgrade_instrumenter": lambda s: f"{s['from']} -> {s['to']}",
-            }.get(s["kind"], lambda s: s["kind"])(s)
-            for s in a.get("steps", [])
-        )
         out.append(
             f"  @{a['t_ns'] / 1e6:9.1f} ms  overhead {a['window_overhead']:.1%} "
-            f"-> projected {a['projected_overhead']:.1%}: {steps}"
+            f"-> projected {a['projected_overhead']:.1%}: {'; '.join(a['steps'])}"
         )
     out.append(f"{'est_cost_ms':>12s} {'leaf_ms':>10s} {'visits':>10s} {'x':>4s}  region")
-    for row in doc.get("regions", [])[:top]:
+    for row in governor_region_rows(doc, top=top):
         out.append(
             f"{row['est_cost_ns'] / 1e6:12.3f} {row['leaf_excl_ns'] / 1e6:10.3f} "
             f"{row['visits']:10d} {'EXCL' if row['excluded'] else '':>4s}  {row['region']}"
@@ -315,6 +326,20 @@ def render_merge_summary(summary: Dict[str, Any]) -> str:
                 f"gc {r['gc_pause_ns'] / 1e6:.2f} ms"
                 + (f"; top: {tops}" if tops else "")
             )
+    profile = summary.get("profile") or {}
+    if profile.get("regions"):
+        imb = profile.get("imbalance") or {}
+        worst = sorted(imb.items(), key=lambda kv: -kv[1])[:3]
+        out.append(
+            f"profile: {len(profile['regions'])} regions across "
+            f"{len(profile.get('ranks', []))} ranks"
+            + (
+                "; worst imbalance (max/mean): "
+                + ", ".join(f"{name} {v:.2f}x" for name, v in worst)
+                if worst
+                else ""
+            )
+        )
     governor = summary.get("governor") or {}
     if governor:
         out.append(
@@ -336,7 +361,96 @@ def render_merge_summary(summary: Dict[str, Any]) -> str:
     return "\n".join(out)
 
 
-def main(argv: Optional[List[str]] = None) -> int:
+def load_merge_summary(path: str) -> Dict[str, Any]:
+    """Read a merge summary; ``path`` may be the JSON itself or the merge
+    root directory containing ``merged_trace_summary.json``.  Raises
+    :class:`MissingArtifact` (-> CLI exit 2) when absent or unreadable."""
+    if os.path.isdir(path):
+        path = os.path.join(path, "merged_trace_summary.json")
+    if not os.path.exists(path):
+        raise MissingArtifact(
+            f"no merge summary at {path or '.'} — run "
+            f"`python -m repro.core.merge <root>` first"
+        )
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        raise MissingArtifact(f"unreadable merge summary {path}: {exc}") from exc
+
+
+def smoke_report(out_path: Optional[str] = None) -> str:
+    """Self-contained report smoke: record a tiny instrumented run into a
+    temp dir, generate report.html from it, and round-trip the embedded
+    payload.  Used by ``analysis report --smoke`` in CI so the documented
+    flow is *executed* on every push, not just described.  Returns the
+    report path."""
+    import shutil
+    import tempfile
+
+    from .measurement import MeasurementConfig, Measurement
+    from .report import build_report, extract_payload, render_report
+
+    tmp = tempfile.mkdtemp(prefix="repro-report-smoke-")
+    # The throwaway run dir is removed on the way out; the report itself
+    # lands outside it (default: one stable file in the temp root, so
+    # repeated smoke runs overwrite rather than accumulate).
+    out_path = out_path or os.path.join(
+        tempfile.gettempdir(), "repro-report-smoke.html"
+    )
+    run_dir = os.path.join(tmp, "smoke-run")
+    m = Measurement(
+        MeasurementConfig(
+            instrumenter="profile",
+            substrates=("profiling", "tracing", "metrics", "memory"),
+            run_dir=run_dir,
+            experiment="report-smoke",
+            memory_period=0.01,
+        )
+    )
+    try:
+        m.start()
+        # The workload must not live in repro.core.* — the filter always
+        # drops the measurement core's own regions — so compile it under a
+        # synthetic module name.
+        workload: Dict[str, Any] = {"__name__": "report_smoke"}
+        exec(
+            compile(
+                "def smoke_leaf(n):\n"
+                "    return sum(range(n))\n"
+                "def smoke_work():\n"
+                "    return [smoke_leaf(500) for _ in range(50)]\n",
+                "report_smoke.py",
+                "exec",
+            ),
+            workload,
+        )
+        for step in range(3):
+            with m.region("step"):
+                workload["smoke_work"]()
+            m.metric("smoke.step", float(step))
+        m.finalize()
+
+        doc = build_report(run_dir)
+        page = render_report(doc)
+        with open(out_path, "w", encoding="utf-8") as fh:
+            fh.write(page)
+        payload = extract_payload(page)
+        assert payload == json.loads(json.dumps(doc)), "embedded payload round-trip"
+        assert payload["regions"], "report has region rows"
+        assert any("smoke_leaf" in r["region"] for r in payload["regions"])
+        assert "smoke.step" in (payload["metrics"] or {})
+        for needle in ("https://", "http://", "cdn.", "@import", "src=\"//"):
+            assert needle not in page, f"report must be self-contained (found {needle})"
+        return out_path
+    finally:
+        m.finalize()  # no-op when already finalized; uninstalls on failure
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def build_parser():
+    """The ``python -m repro.core.analysis`` argument parser (also rendered
+    into docs/CLI.md by :mod:`repro.core.clidoc`)."""
     import argparse
 
     p = argparse.ArgumentParser(prog="python -m repro.core.analysis")
@@ -360,7 +474,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     md.add_argument("--min-bytes", type=int, default=0,
                     help="drop regions below this alloc size in both runs")
     m = sub.add_parser("merge-summary", help="render a merge summary JSON")
-    m.add_argument("summary", help="merged_trace_summary.json written by repro.core.merge")
+    m.add_argument("summary",
+                   help="merged_trace_summary.json written by repro.core.merge, "
+                        "or the merge root directory containing it")
     g = sub.add_parser("governor", help="overhead-governor report for one run")
     g.add_argument("run_dir")
     g.add_argument("--top", type=int, default=15)
@@ -376,7 +492,28 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="regions with longer mean exclusive time are kept")
     sf.add_argument("--min-visits", type=int, default=100,
                     help="regions with fewer visits are kept")
-    ns = p.parse_args(argv)
+    rp = sub.add_parser(
+        "report",
+        help="self-contained HTML report fusing all artifacts of a run "
+             "(or merge root) into one page",
+    )
+    rp.add_argument("run_dir", nargs="?", default=None,
+                    help="run directory or merge root (omit with --smoke)")
+    rp.add_argument("--diff", metavar="BASE", default=None,
+                    help="baseline run dir: adds a run-vs-run regression section "
+                         "(this run is B, BASE is A)")
+    rp.add_argument("--out", default=None,
+                    help="output path (default: <run_dir>/report.html)")
+    rp.add_argument("--open", action="store_true", dest="open_browser",
+                    help="open the generated report in the default browser")
+    rp.add_argument("--smoke", action="store_true",
+                    help="record a tiny throwaway run, report it, and verify "
+                         "the embedded payload round-trips (CI gate)")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ns = build_parser().parse_args(argv)
     try:
         if ns.cmd == "diff":
             print(render_diff(diff_profiles(ns.run_a, ns.run_b, min_ns=ns.min_ns), ns.top))
@@ -386,8 +523,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(render_memory_diff(
                 diff_memory(ns.run_a, ns.run_b, min_bytes=ns.min_bytes), ns.top))
         elif ns.cmd == "merge-summary":
-            with open(ns.summary) as fh:
-                print(render_merge_summary(json.load(fh)))
+            print(render_merge_summary(load_merge_summary(ns.summary)))
         elif ns.cmd == "governor":
             print(render_governor(load_governor_doc(ns.run_dir), ns.top))
         elif ns.cmd == "suggest-filter":
@@ -403,6 +539,22 @@ def main(argv: Optional[List[str]] = None) -> int:
                     min_visits=ns.min_visits,
                 )
             print(spec)
+        elif ns.cmd == "report":
+            from .report import write_report
+
+            if ns.smoke:
+                path = smoke_report(out_path=ns.out)
+                print(f"report smoke OK: {path}")
+            elif ns.run_dir is None:
+                print("error: report needs a run dir (or --smoke)", file=sys.stderr)
+                return 2
+            else:
+                path = write_report(ns.run_dir, out_path=ns.out, diff_base=ns.diff)
+                print(f"report written to {path}")
+            if ns.open_browser:
+                import webbrowser
+
+                webbrowser.open(f"file://{os.path.abspath(path)}")
         else:
             for name, vals in hotspots(ns.run_dir, ns.top):
                 print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")

@@ -73,6 +73,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--no-restart", action="store_true",
                    help="skip the execve restart (only safe if env is already correct)")
     p.add_argument("--no-chrome", action="store_true", help="skip Chrome trace export")
+    p.add_argument("--report", action="store_true",
+                   help="emit the unified HTML report (report.html) into the "
+                        "run dir at finalize (REPRO_MONITOR_REPORT=1)")
     p.add_argument("target", help="script path, or module name with -m style 'mod:pkg.mod'")
     p.add_argument("args", nargs=argparse.REMAINDER, help="target application arguments")
     return p
@@ -106,6 +109,7 @@ def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
         topology=topology,
         experiment=ns.experiment,
         chrome_export=not ns.no_chrome,
+        report=ns.report,
     )
     env.update(config.to_env())
     env[ENV_PREFIX + "ENABLE"] = "1"

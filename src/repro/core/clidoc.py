@@ -1,0 +1,143 @@
+"""Generated CLI documentation — docs/CLI.md is built from the live parsers.
+
+Docs that describe flags by hand drift; this module renders every
+user-facing argparse parser's ``--help`` output into one markdown file, and
+``tests/test_docs.py`` diffs that file against a fresh render, so a flag
+change that forgets the docs fails CI instead of shipping stale text.
+
+    PYTHONPATH=src python -m repro.core.clidoc          # rewrite docs/CLI.md
+    PYTHONPATH=src python -m repro.core.clidoc --check  # exit 1 on drift
+
+Help text is rendered at a pinned ``COLUMNS`` width so the output is
+byte-identical across terminals and CI.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import List, Optional, Tuple
+
+#: Pinned terminal width for deterministic argparse help rendering.
+HELP_COLUMNS = 80
+
+DOC_PATH = os.path.join("docs", "CLI.md")
+
+HEADER = """# CLI reference
+
+> **Generated file — do not edit.**  Rebuilt by
+> `PYTHONPATH=src python -m repro.core.clidoc`; `tests/test_docs.py` fails
+> when this file drifts from the live `--help` output of the parsers below.
+
+All commands are run as `PYTHONPATH=src python -m <module> ...` (or install
+the package and drop the `PYTHONPATH`).  Flag defaults shown here are the
+single source of truth — they come straight from the argparse definitions.
+"""
+
+_SECTIONS: List[Tuple[str, str]] = [
+    ("repro.scorep", "The measurement launcher (the paper's `python -m scorep` "
+     "analogue): wraps any Python program in monitoring without source changes."),
+    ("repro.core.analysis", "Offline artifact analysis: hotspots, run diffs, "
+     "memory/governor views, merge summaries, and the unified HTML report."),
+    ("repro.core.merge", "Cross-rank trace merge: unifies per-rank run dirs "
+     "into one clock-aligned Chrome trace + summary."),
+    ("repro.launch.train", "End-to-end training driver (config registry, "
+     "sharded step, checkpointing) with monitoring built in."),
+    ("repro.launch.serve", "Batched prefill + greedy-decode serving driver "
+     "with monitoring built in."),
+]
+
+
+def _parser_for(module: str):
+    if module == "repro.scorep":
+        from .bootstrap import build_parser
+    elif module == "repro.core.analysis":
+        from .analysis import build_parser
+    elif module == "repro.core.merge":
+        from .merge import build_parser
+    elif module == "repro.launch.train":
+        from repro.launch.train import build_parser
+    elif module == "repro.launch.serve":
+        from repro.launch.serve import build_parser
+    else:  # pragma: no cover - guarded by _SECTIONS
+        raise KeyError(module)
+    return build_parser()
+
+
+def _render_help(parser) -> str:
+    """``parser.format_help()`` at the pinned width (argparse reads COLUMNS
+    via shutil.get_terminal_size at format time)."""
+    old = os.environ.get("COLUMNS")
+    os.environ["COLUMNS"] = str(HELP_COLUMNS)
+    try:
+        return parser.format_help().rstrip("\n")
+    finally:
+        if old is None:
+            del os.environ["COLUMNS"]
+        else:
+            os.environ["COLUMNS"] = old
+
+
+def generate() -> str:
+    """The full docs/CLI.md content as a string."""
+    parts = [HEADER]
+    for module, blurb in _SECTIONS:
+        parts.append(f"## `python -m {module}`\n\n{blurb}\n")
+        parts.append("```text\n" + _render_help(_parser_for(module)) + "\n```\n")
+        if module == "repro.core.analysis":
+            parts.append(_analysis_subcommands())
+    return "\n".join(parts)
+
+
+def _analysis_subcommands() -> str:
+    """Per-subcommand help for the analysis tool (the top-level help only
+    lists them)."""
+    from .analysis import build_parser
+
+    parser = build_parser()
+    out = []
+    # Walk the subparsers action to render each subcommand's own help.
+    for action in parser._subparsers._group_actions:  # noqa: SLF001 (argparse has no public API for this)
+        for name, sub in action.choices.items():
+            out.append(f"### `analysis {name}`\n")
+            out.append("```text\n" + _render_help(sub) + "\n```\n")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(prog="python -m repro.core.clidoc")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if docs/CLI.md is stale instead of rewriting it")
+    p.add_argument("--out", default=DOC_PATH)
+    ns = p.parse_args(argv)
+    content = generate()
+    if ns.check:
+        try:
+            with open(ns.out) as fh:
+                on_disk = fh.read()
+        except OSError:
+            on_disk = ""
+        if on_disk != content:
+            print(
+                f"{ns.out} is stale — regenerate with "
+                "`PYTHONPATH=src python -m repro.core.clidoc`. "
+                f"(This interpreter is Python "
+                f"{sys.version_info.major}.{sys.version_info.minor}; argparse "
+                "help formatting varies across Python versions, so regenerate "
+                "with the same minor version CI pins or the check will flap.)",
+                file=sys.stderr,
+            )
+            return 1
+        print(f"{ns.out} is up to date")
+        return 0
+    os.makedirs(os.path.dirname(ns.out) or ".", exist_ok=True)
+    with open(ns.out, "w") as fh:
+        fh.write(content)
+    print(f"wrote {ns.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -57,6 +57,21 @@ class Filter:
 
     @classmethod
     def from_spec(cls, spec: str | None) -> "Filter":
+        """Parse a filter spec string into a :class:`Filter`.
+
+        The grammar (also accepted by ``--filter`` and
+        ``REPRO_MONITOR_FILTER``) is clauses separated by ``;``, each
+        ``include:``/``exclude:``/``exclude!:`` followed by comma-separated
+        fnmatch globs matched against ``module`` or ``module.function``::
+
+            exclude:numpy.*,scipy.*;include:numpy.linalg.*
+            include:mypkg.*                  # allow-list
+            exclude!:hot.leaf                # absolute (governor) exclude
+
+        Empty/None specs yield a record-everything filter.  Round-trips
+        with :meth:`to_spec` (clause order normalized, semantics exact).
+        Raises ``ValueError`` on an unknown verb or a clause without
+        ``:``."""
         flt = cls()
         if not spec:
             return flt

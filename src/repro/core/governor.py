@@ -59,6 +59,7 @@ from .buffer import EV_C_ENTER, EV_ENTER, ListEventBuffer
 from .filtering import Filter
 from .instrumenters import INSTRUMENTERS, make_instrumenter
 from .regions import KIND_USER, RegionRegistry
+from .schema import stamp
 
 if TYPE_CHECKING:  # pragma: no cover
     from .measurement import Measurement
@@ -758,7 +759,7 @@ class Governor:
             if len(rows) >= 50:
                 break
         state = self._current_state()
-        return {
+        return stamp({
             "budget": self.budget,
             "calibration": asdict(self.calibration) if self.calibration else None,
             "final_instrumenter": {"name": state.name, "period": state.period or None},
@@ -776,7 +777,7 @@ class Governor:
                 ),
             },
             "suggested_filter": self.suggest_filter(),
-        }
+        })
 
     def suggest_filter(self) -> str:
         """Filter spec for the next run: the base filter's own rules, plus —
@@ -836,3 +837,79 @@ def load_governor(run_dir: str) -> Optional[Dict[str, Any]]:
             return json.load(fh)
     except (OSError, ValueError):
         return None
+
+
+# -- stable document accessors ------------------------------------------------
+#
+# Consumers of governor.json (the analysis renderer, the HTML report, merge's
+# cross-rank section) read through these rather than walking the raw action
+# dicts, so the serialized step layout can evolve behind one seam.
+
+
+def describe_step(step: Dict[str, Any]) -> str:
+    """One-line human description of a single escalation step."""
+    kind = step.get("kind", "?")
+    if kind == "exclude_regions":
+        regions = step.get("regions", [])
+        head = ", ".join(regions[:3]) + ("…" if len(regions) > 3 else "")
+        return f"excluded {len(regions)} regions ({head})"
+    if kind == "raise_period":
+        return f"period {step.get('from')} -> {step.get('to')}"
+    if kind == "downgrade_instrumenter":
+        return f"{step.get('from')} -> {step.get('to')}"
+    return kind
+
+
+def action_rows(doc: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Flattened escalation timeline of a governor.json document.  Each row:
+    ``{"t_ns", "window_overhead", "projected_overhead", "steps": [str, ...]}``
+    with steps already rendered through :func:`describe_step`."""
+    rows = []
+    for action in doc.get("actions", []):
+        rows.append(
+            {
+                "t_ns": int(action.get("t_ns", 0)),
+                "window_overhead": float(action.get("window_overhead", 0.0)),
+                "projected_overhead": float(action.get("projected_overhead", 0.0)),
+                "steps": [describe_step(s) for s in action.get("steps", [])],
+            }
+        )
+    return rows
+
+
+def region_rows(doc: Dict[str, Any], top: int = 0) -> List[Dict[str, Any]]:
+    """Per-region cost rows of a governor.json document (already sorted by
+    estimated instrumentation cost by the writer).  ``top`` > 0 truncates."""
+    rows = [
+        {
+            "region": r.get("region", "?"),
+            "kind": r.get("kind", "?"),
+            "visits": int(r.get("visits", 0)),
+            "leaf_excl_ns": float(r.get("leaf_excl_ns", 0.0)),
+            "est_cost_ns": float(r.get("est_cost_ns", 0.0)),
+            "excluded": bool(r.get("excluded", False)),
+        }
+        for r in doc.get("regions", [])
+    ]
+    return rows[:top] if top > 0 else rows
+
+
+def estimate_overview(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Headline numbers of a governor.json document: budget, calibration,
+    final instrumenter, distortion estimate, suggested filter spec."""
+    cal = doc.get("calibration") or {}
+    final = doc.get("final_instrumenter") or {}
+    est = doc.get("estimate") or {}
+    return {
+        "budget": float(doc.get("budget", 0.0)),
+        "cost_full_ns": float(cal.get("cost_full_ns", 0.0)),
+        "cost_filtered_ns": float(cal.get("cost_filtered_ns", 0.0)),
+        "calibrated_instrumenter": cal.get("instrumenter", "?"),
+        "final_instrumenter": final.get("name", "?"),
+        "final_period": final.get("period"),
+        "actions": len(doc.get("actions", [])),
+        "overhead_fraction": float(est.get("overhead_fraction", 0.0)),
+        "under_budget": bool(est.get("under_budget", True)),
+        "elapsed_ns": int(est.get("elapsed_ns", 0)),
+        "suggested_filter": doc.get("suggested_filter", ""),
+    }

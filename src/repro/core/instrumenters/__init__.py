@@ -21,6 +21,10 @@ INSTRUMENTERS: Dict[str, Type[Instrumenter]] = {
 
 
 def make_instrumenter(name: str, **kwargs) -> Instrumenter:
+    """Instantiate a registered instrumenter (event source) by name —
+    ``none`` / ``profile`` / ``trace`` / ``sampling`` (takes ``period=``) /
+    ``monitoring`` (PEP 669, 3.12+).  Raises ``ValueError`` naming the
+    available instrumenters on an unknown name."""
     try:
         cls = INSTRUMENTERS[name]
     except KeyError:

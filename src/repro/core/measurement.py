@@ -33,12 +33,22 @@ from .filtering import Filter
 from .instrumenters import make_instrumenter
 from .memsys.substrate import DEFAULT_PERIOD_S, DEFAULT_TOPN
 from .regions import RegionRegistry
+from .schema import stamp
 from .substrates import make_substrate
 from .topology import ENV_PREFIX, ProcessTopology  # noqa: F401  (re-exported)
 
 
 @dataclass
 class MeasurementConfig:
+    """Everything one measurement run is parameterized by.
+
+    Round-trips through the process environment (``from_env``/``to_env``,
+    ``REPRO_MONITOR_*`` variables) so the two-phase bootstrap and any
+    forked worker see an identical configuration; see docs/CLI.md for the
+    CLI flags each field maps to and docs/ARTIFACTS.md for the artifacts
+    the substrate selection produces.
+    """
+
     instrumenter: str = "profile"
     substrates: Tuple[str, ...] = ("profiling", "tracing", "metrics")
     out_dir: str = "repro-traces"
@@ -67,6 +77,11 @@ class MeasurementConfig:
     experiment: str = "run"
     chrome_export: bool = True
     keep_series: bool = True
+    # Emit the unified HTML report (repro.core.report) into the run dir at
+    # finalize.  Off by default: report generation re-reads every artifact
+    # just written, which launch scripts may prefer to do offline via
+    # ``python -m repro.core.analysis report``.
+    report: bool = False
 
     def __post_init__(self):
         if self.topology is None:
@@ -113,6 +128,7 @@ class MeasurementConfig:
             experiment=get("EXPERIMENT", cls.experiment),
             chrome_export=get("CHROME", "1") not in ("0", "false", ""),
             keep_series=get("SERIES", "1") not in ("0", "false", ""),
+            report=get("REPORT", "0") not in ("0", "false", ""),
         )
 
     def to_env(self) -> Dict[str, str]:
@@ -131,6 +147,7 @@ class MeasurementConfig:
             ENV_PREFIX + "EXPERIMENT": self.experiment,
             ENV_PREFIX + "CHROME": "1" if self.chrome_export else "0",
             ENV_PREFIX + "SERIES": "1" if self.keep_series else "0",
+            ENV_PREFIX + "REPORT": "1" if self.report else "0",
         }
         env.update(self.topology.to_env())  # RANK / WORLD_SIZE / LOCAL_RANK / MESH
         if self.run_dir:
@@ -139,7 +156,31 @@ class MeasurementConfig:
 
 
 class Measurement:
-    """One measurement run: regions + buffers + instrumenter + substrates."""
+    """One measurement run: regions + buffers + instrumenter + substrates.
+
+    Owns the full lifecycle (``start`` → event recording → ``finalize``)
+    and the artifact contract of a run directory.  After ``finalize()``
+    the run dir contains, per enabled substrate (see docs/ARTIFACTS.md
+    for the field tables; every JSON carries ``report_schema_version``):
+
+    ======================  =====================================================
+    artifact                writer / contents
+    ======================  =====================================================
+    meta.json               always — topology, epochs, event counts
+    profile.json (+ .txt)   "profiling" — call tree + flat per-region table
+    defs.json + streams     "tracing" — raw event streams + region definitions
+    trace.json              "tracing" — Chrome/Perfetto trace (unless disabled)
+    metrics.json            "metrics" — metric aggregates + time series
+    memory.json             "memory" — per-region allocation attribution,
+                            RSS/heap/GC/fd timelines
+    governor.json           budget > 0 — calibration, actions, suggested filter
+    report.html             ``config.report`` — self-contained HTML report
+                            fusing all of the above (repro.core.report)
+    ======================  =====================================================
+
+    Thread-safe event intake: each thread appends to its own buffer; flushes
+    fan batches out to the substrates under one lock.
+    """
 
     def __init__(self, config: MeasurementConfig):
         self.config = config
@@ -298,7 +339,7 @@ class Measurement:
                         "(raw streams kept; re-run repro.core.export.export_run)",
                         RuntimeWarning,
                     )
-        meta = {
+        meta = stamp({
             "rank": self.config.rank,
             "topology": self.config.topology.as_dict(),
             "pid": os.getpid(),
@@ -310,10 +351,25 @@ class Measurement:
             "finalize_time_ns": time.time_ns(),
             "n_regions": len(region_table),
             "events_flushed": sum(getattr(b, "n_flushed", 0) for b in buffers),
-        }
+        })
         with open(os.path.join(self.run_dir, "meta.json"), "w") as fh:
             json.dump(meta, fh, indent=1)
         self.finalized = True
+        if self.config.report:
+            # Last: the report generator re-reads every artifact finalized
+            # above.  Best-effort for the same reason as the chrome export —
+            # raw artifacts are on disk and the report is re-generatable via
+            # `python -m repro.core.analysis report <run_dir>`.
+            try:
+                from .report import write_report
+
+                write_report(self.run_dir)
+            except Exception as exc:
+                warnings.warn(
+                    f"report generation failed for {self.run_dir}: {exc!r} "
+                    "(re-run `python -m repro.core.analysis report`)",
+                    RuntimeWarning,
+                )
         return self.run_dir
 
     def swap_instrumenter(self, name: str, **kwargs) -> None:
@@ -417,10 +473,20 @@ def init_from_env() -> Optional[Measurement]:
 
 
 def active() -> Optional[Measurement]:
+    """The live :class:`Measurement`, or ``None`` when none is running
+    (not initialized, not started, or already finalized).  Library code
+    uses this to make instrumentation unconditional-but-free."""
     return _active if (_active is not None and _active.started and not _active.finalized) else None
 
 
 def region(name: str, module: str = "user"):
+    """User-region context manager (paper: ``scorep.user.region``).
+
+    ``with rmon.region("train_step"): ...`` records an enter/exit event
+    pair attributed to ``module:name``.  A safe no-op (shared null context)
+    when measurement is inactive, so annotations can stay in library code
+    permanently.  User regions are never auto-excluded by filters or the
+    overhead governor."""
     m = active()
     if m is None:
         return _NULL_CONTEXT
@@ -428,6 +494,11 @@ def region(name: str, module: str = "user"):
 
 
 def metric(name: str, value: float) -> None:
+    """Record one sample of a named metric (paper: Score-P metric plugin
+    / user counter).  Lands in metrics.json (aggregates + optional time
+    series) and as a Perfetto counter track in trace.json.  No-op when
+    measurement is inactive; non-finite values are tolerated (counted,
+    serialized as ``null``)."""
     m = active()
     if m is not None:
         m.metric(name, value)
@@ -461,6 +532,12 @@ def instrument(fn=None, *, name: Optional[str] = None, module: str = "user"):
 
 
 def finalize() -> Optional[str]:
+    """Finalize the active measurement: uninstall hooks, drain buffers,
+    close every substrate (writing their artifacts — see docs/ARTIFACTS.md),
+    export the Chrome trace, and return the run directory path (``None``
+    when no measurement was active).  Registered via ``atexit`` by
+    :func:`init`, so an unexceptional interpreter exit always produces
+    complete artifacts."""
     global _active
     m = _active
     if m is None:

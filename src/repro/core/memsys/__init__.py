@@ -29,6 +29,9 @@ from .substrate import (  # noqa: F401
     DEFAULT_TOPN,
     MemorySubstrate,
     load_memory,
+    overview,
+    region_rows,
+    timelines,
 )
 from .sysinfo import open_fd_count, rss_bytes  # noqa: F401
 
@@ -41,5 +44,8 @@ __all__ = [
     "SystemPoller",
     "load_memory",
     "open_fd_count",
+    "overview",
+    "region_rows",
     "rss_bytes",
+    "timelines",
 ]

@@ -26,6 +26,7 @@ import json
 import os
 from typing import Any, Dict, List, Optional
 
+from ..schema import stamp
 from ..substrates.base import Substrate
 from .heap import HeapCollector
 from .poller import GcWatcher, SystemPoller
@@ -90,7 +91,7 @@ class MemorySubstrate(Substrate):
             "mem.fds": [[t, float(v)] for t, v in fd_series],
             "mem.gc_pause_ms": [[t, p / 1e6] for t, p in self.gc.pauses],
         }
-        return {
+        return stamp({
             "meta": self._meta,
             "config": {"period_s": self.period, "topn": self.topn},
             "heap": heap_doc,
@@ -114,7 +115,7 @@ class MemorySubstrate(Substrate):
                 "end": fd_series[-1][1] if fd_series else None,
             },
             "series": {k: v for k, v in series.items() if v},
-        }
+        })
 
 
 def load_memory(run_dir: str) -> Optional[Dict[str, Any]]:
@@ -128,3 +129,59 @@ def load_memory(run_dir: str) -> Optional[Dict[str, Any]]:
             return json.load(fh)
     except (OSError, ValueError):
         return None
+
+
+# -- stable document accessors ------------------------------------------------
+#
+# Every consumer of memory.json (analysis renderers, the HTML report, merge's
+# cross-rank section) goes through these instead of indexing the raw dict, so
+# the JSON layout can evolve behind one compatibility seam.  All of them
+# tolerate missing sections (older writers, partial documents).
+
+
+def region_rows(doc: Dict[str, Any], top: int = 0) -> List[Dict[str, Any]]:
+    """Per-region allocation rows from a memory.json document, sorted by
+    attributed alloc bytes descending.  ``top`` > 0 truncates.  Each row:
+    ``{"region", "alloc_bytes", "net_bytes", "alloc_blocks", "flushes"}``."""
+    regions = doc.get("heap", {}).get("regions", {})
+    rows = [
+        {
+            "region": name,
+            "alloc_bytes": int(row.get("alloc_bytes", 0)),
+            "net_bytes": int(row.get("net_bytes", 0)),
+            "alloc_blocks": int(row.get("alloc_blocks", 0)),
+            "flushes": int(row.get("flushes", 0)),
+        }
+        for name, row in regions.items()
+    ]
+    rows.sort(key=lambda r: -r["alloc_bytes"])
+    return rows[:top] if top > 0 else rows
+
+
+def overview(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Scalar summary of a memory.json document (heap/rss/gc/fds headline
+    numbers) with every field present regardless of writer age."""
+    heap = doc.get("heap", {})
+    rss = doc.get("rss", {})
+    gc = doc.get("gc", {})
+    fds = doc.get("fds", {})
+    return {
+        "heap_start_bytes": int(heap.get("start_bytes", 0)),
+        "heap_end_bytes": int(heap.get("end_bytes", 0)),
+        "heap_peak_bytes": int(heap.get("peak_bytes", 0)),
+        "dropped_regions": int(heap.get("dropped_regions", 0) or 0),
+        "rss_peak_bytes": int(rss.get("peak_bytes", 0)),
+        "rss_end_bytes": int(rss.get("end_bytes", 0)),
+        "rss_samples": int(rss.get("samples", 0)),
+        "rss_source": rss.get("source", "?"),
+        "gc_collections": int(gc.get("collections", 0)),
+        "gc_pause_ns_total": int(gc.get("pause_ns_total", 0)),
+        "gc_collected": int(gc.get("collected", 0)),
+        "fds_peak": fds.get("peak"),
+    }
+
+
+def timelines(doc: Dict[str, Any]) -> Dict[str, List[List[float]]]:
+    """The ``mem.*`` counter series of a memory.json document as
+    ``{name: [[t_ns, value], ...]}`` (empty when series were not kept)."""
+    return {k: v for k, v in doc.get("series", {}).items() if v}

@@ -29,6 +29,7 @@ from .export import load_defs, merge_chrome_trace
 from .filtering import Filter
 from .governor import load_governor
 from .memsys import load_memory
+from .schema import stamp
 from .topology import ProcessTopology
 
 
@@ -144,6 +145,69 @@ def governor_summary(entries: List[Dict[str, Any]]) -> Optional[Dict[str, Any]]:
     }
 
 
+def profile_summary(
+    entries: List[Dict[str, Any]], top: int = 12
+) -> Optional[Dict[str, Any]]:
+    """Cross-rank region-time section for the merge summary (heatmap data).
+
+    Reads each selected rank's ``profile.json`` flat table (best-effort:
+    ranks without the profiling substrate are simply absent) and builds a
+    rank × region matrix of exclusive times over the union of each rank's
+    top regions — the per-region load-imbalance view the HTML report renders
+    as a heatmap.  Layout::
+
+        {"ranks": [0, 1, ...],               # column order
+         "regions": [name, ...],             # row order (total excl desc)
+         "excl_ns": [[...], ...],            # excl_ns[row][col]
+         "visits": [[...], ...],
+         "imbalance": {region: max/mean}}    # rows with >1 rank present
+    """
+    per_rank: Dict[int, Dict[str, Dict[str, float]]] = {}
+    for entry in entries:
+        path = os.path.join(entry["run_dir"], "profile.json")
+        if not os.path.exists(path):
+            continue
+        try:
+            with open(path) as fh:
+                per_rank[entry["pid"]] = json.load(fh).get("flat", {})
+        except (OSError, ValueError):
+            continue
+    if not per_rank:
+        return None
+    chosen: List[str] = []
+    for flat in per_rank.values():
+        for name in sorted(flat, key=lambda n: -flat[n].get("excl_ns", 0))[:top]:
+            if name not in chosen:
+                chosen.append(name)
+    totals = {
+        name: sum(flat.get(name, {}).get("excl_ns", 0) for flat in per_rank.values())
+        for name in chosen
+    }
+    regions = sorted(chosen, key=lambda n: -totals[n])
+    ranks = sorted(per_rank)
+    excl = [
+        [int(per_rank[r].get(name, {}).get("excl_ns", 0)) for r in ranks]
+        for name in regions
+    ]
+    visits = [
+        [int(per_rank[r].get(name, {}).get("visits", 0)) for r in ranks]
+        for name in regions
+    ]
+    imbalance = {}
+    if len(ranks) > 1:
+        for name, row in zip(regions, excl):
+            mean = sum(row) / len(row)
+            if mean > 0:
+                imbalance[name] = round(max(row) / mean, 4)
+    return {
+        "ranks": ranks,
+        "regions": regions,
+        "excl_ns": excl,
+        "visits": visits,
+        "imbalance": imbalance,
+    }
+
+
 def find_runs(root: str, experiment: Optional[str] = None) -> List[str]:
     """Locate run directories (those containing defs.json) under ``root``.
 
@@ -217,6 +281,14 @@ def merge_runs(
 
     Per-rank timestamps are perf_counter_ns readings; alignment maps them to
     wall time: wall = epoch_time_ns + (t - epoch_perf_ns).
+
+    Returns the merge summary (persisted as ``merged_trace_summary.json``
+    by the CLI, rendered by ``analysis merge-summary`` and the HTML
+    report): per-rank event counts (``ranks``), stale duplicates dropped
+    (``dropped_runs``), export engine stats (``export``), and — when the
+    per-rank artifacts exist — cross-rank ``memory``, ``governor``, and
+    ``profile`` (rank × region exclusive-time heatmap) sections.  Stamped
+    with ``report_schema_version``; field tables in docs/ARTIFACTS.md.
     """
     entries: List[Dict[str, Any]] = []
     summary: Dict[str, Any] = {
@@ -274,21 +346,32 @@ def merge_runs(
     governor = governor_summary(selected)
     if governor is not None:
         summary["governor"] = governor
-    return summary
+    profile = profile_summary(selected)
+    if profile is not None:
+        summary["profile"] = profile
+    return stamp(summary)
 
 
-def main(argv: Optional[List[str]] = None) -> int:
+def build_parser():
+    """The ``python -m repro.core.merge`` argument parser (also rendered into
+    docs/CLI.md by :mod:`repro.core.clidoc`)."""
     import argparse
-
-    from .analysis import render_merge_summary
 
     p = argparse.ArgumentParser(prog="python -m repro.core.merge")
     p.add_argument("root", help="directory containing per-rank run dirs")
-    p.add_argument("--experiment", default=None)
-    p.add_argument("--out", default=None)
+    p.add_argument("--experiment", default=None,
+                   help="only merge run dirs of this experiment name")
+    p.add_argument("--out", default=None,
+                   help="merged trace path (default: <root>/merged_trace.json)")
     p.add_argument("--chunk", type=int, default=None,
                    help="export chunk size in events (REPRO_MONITOR_EXPORT_CHUNK)")
-    ns = p.parse_args(argv)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    from .analysis import render_merge_summary
+
+    ns = build_parser().parse_args(argv)
     runs = find_runs(ns.root, ns.experiment)
     if not runs:
         print(f"no runs found under {ns.root}")

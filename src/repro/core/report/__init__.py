@@ -1,0 +1,54 @@
+"""repro.core.report — unified HTML performance report.
+
+The human-facing end of the toolchain: one self-contained ``report.html``
+that fuses every artifact a run (or merged multi-rank run root) produced —
+per-region time joined with memory attribution, RSS/heap/GC and metric
+timelines as inline SVG sparklines, the overhead governor's action timeline
+and suggested filter, the cross-rank imbalance heatmap, and an optional
+run-vs-run diff.  Zero dependencies, no network/CDN references; the full
+data model is embedded as a JSON payload inside the page.
+
+Entry points::
+
+    from repro.core.report import build_report, render_report, write_report
+    write_report(run_dir)                      # -> <run_dir>/report.html
+    write_report(run_dir, diff_base=base_dir)  # adds the regression section
+
+    python -m repro.core.analysis report RUN_DIR [--diff BASE] [--open]
+    python -m repro.scorep --report app.py     # emit at finalize
+"""
+
+from ..schema import REPORT_SCHEMA_VERSION  # noqa: F401
+from .html import PAYLOAD_ID, extract_payload, render_report  # noqa: F401
+from .model import build_report  # noqa: F401
+
+import os
+from typing import Optional
+
+__all__ = [
+    "REPORT_SCHEMA_VERSION",
+    "PAYLOAD_ID",
+    "build_report",
+    "extract_payload",
+    "render_report",
+    "write_report",
+]
+
+
+def write_report(
+    run_dir: str,
+    out_path: Optional[str] = None,
+    diff_base: Optional[str] = None,
+) -> str:
+    """Build and write the HTML report for ``run_dir``.
+
+    ``out_path`` defaults to ``<run_dir>/report.html``.  Returns the path
+    written.  Raises :class:`repro.core.analysis.MissingArtifact` when the
+    directory holds no known artifact.
+    """
+    doc = build_report(run_dir, diff_base=diff_base)
+    out_path = out_path or os.path.join(run_dir, "report.html")
+    page = render_report(doc)
+    with open(out_path, "w", encoding="utf-8") as fh:
+        fh.write(page)
+    return out_path

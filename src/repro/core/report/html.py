@@ -1,0 +1,577 @@
+"""HTML templating for the unified performance report — zero dependencies.
+
+:func:`render_report` turns the data model from :mod:`.model` into one
+self-contained page: no CDN, no external script/style/font, every chart is
+inline SVG or CSS-painted table cells.  The full data model is embedded in
+a ``<script type="application/json" id="repro-report-data">`` block — the
+machine-readable contract (tests round-trip it, tools can scrape it) and
+the source the in-page sorter reads.
+
+Visual system (kept deliberately small): one accent hue for single-series
+sparklines, a single-hue sequential ramp for the cross-rank heatmap, a
+blue/red diverging pair for diff deltas, and ink tokens for all text.
+Light and dark surfaces are both defined; the page follows
+``prefers-color-scheme``.
+"""
+
+from __future__ import annotations
+
+import html as html_mod
+import json
+from typing import Any, Dict, List, Optional
+
+from ..schema import SCHEMA_KEY
+
+PAYLOAD_ID = "repro-report-data"
+
+#: Regions rendered into the table; the embedded payload always carries all
+#: of them (the truncation note points there).
+MAX_TABLE_ROWS = 200
+#: Sparkline sections rendered; additional series stay in the payload.
+MAX_TIMELINES = 12
+
+# Sequential blue ramp (reference palette steps 100..650).  On the light
+# surface low values recede toward white; the dark-mode classes below use
+# the same steps with luminance order reversed so low values recede toward
+# the dark surface instead.
+_HEAT_LIGHT = ["#cde2fb", "#b7d3f6", "#9ec5f4", "#6da7ec",
+               "#3987e5", "#256abf", "#184f95", "#104281"]
+_HEAT_DARK = list(reversed(_HEAT_LIGHT))
+_N_HEAT = len(_HEAT_LIGHT)
+
+_CSS = """
+:root {
+  color-scheme: light;
+  --surface: #fcfcfb; --surface-2: #f0efec; --border: #dddbd4;
+  --ink: #0b0b0b; --ink-2: #52514e; --ink-3: #878680;
+  --series-1: #2a78d6; --series-fill: rgba(42, 120, 214, 0.12);
+  --pos: #e34948; --neg: #2a78d6;  /* diverging: red = slower, blue = faster */
+  --ok: #008300; --bad: #e34948;
+""" + "".join(
+    f"  --heat-{i}: {c};\n" for i, c in enumerate(_HEAT_LIGHT)
+) + "".join(
+    f"  --heat-ink-{i}: {'#0b0b0b' if i < 4 else '#ffffff'};\n"
+    for i in range(_N_HEAT)
+) + """
+}
+@media (prefers-color-scheme: dark) {
+  :root {
+    color-scheme: dark;
+    --surface: #1a1a19; --surface-2: #262625; --border: #3a3935;
+    --ink: #ffffff; --ink-2: #c3c2b7; --ink-3: #8a897f;
+    --series-1: #3987e5; --series-fill: rgba(57, 135, 229, 0.18);
+    --pos: #e66767; --neg: #3987e5;
+    --ok: #4dbd4d; --bad: #e66767;
+""" + "".join(
+    f"    --heat-{i}: {c};\n" for i, c in enumerate(_HEAT_DARK)
+) + "".join(
+    f"    --heat-ink-{i}: {'#ffffff' if i < 4 else '#0b0b0b'};\n"
+    for i in range(_N_HEAT)
+) + """
+  }
+}
+* { box-sizing: border-box; }
+body {
+  margin: 0 auto; padding: 24px 28px 64px; max-width: 1080px;
+  background: var(--surface); color: var(--ink);
+  font: 14px/1.5 system-ui, -apple-system, "Segoe UI", sans-serif;
+}
+h1 { font-size: 22px; margin: 0 0 4px; }
+h2 { font-size: 16px; margin: 36px 0 8px; }
+code, .mono { font-family: ui-monospace, SFMono-Regular, Menlo, monospace; font-size: 12.5px; }
+.sub { color: var(--ink-2); margin: 0 0 2px; }
+.note { color: var(--ink-3); font-size: 12.5px; }
+.tiles { display: flex; flex-wrap: wrap; gap: 12px; margin: 18px 0 6px; }
+.tile {
+  background: var(--surface-2); border: 1px solid var(--border);
+  border-radius: 8px; padding: 10px 14px; min-width: 120px;
+}
+.tile .v { font-size: 20px; font-weight: 600; }
+.tile .k { color: var(--ink-2); font-size: 12px; }
+.tile .v.ok { color: var(--ok); } .tile .v.bad { color: var(--bad); }
+table { border-collapse: collapse; width: 100%; margin: 8px 0; }
+th, td { padding: 4px 10px 4px 0; text-align: right; white-space: nowrap; }
+th { color: var(--ink-2); font-weight: 600; border-bottom: 1px solid var(--border); }
+td { border-bottom: 1px solid var(--surface-2); }
+th.l, td.l { text-align: left; }
+td.l { max-width: 420px; overflow: hidden; text-overflow: ellipsis; }
+table.sortable th { cursor: pointer; user-select: none; }
+table.sortable th:hover { color: var(--ink); }
+th .dir { color: var(--ink-3); font-size: 10px; }
+.spark-line { fill: none; stroke: var(--series-1); stroke-width: 2; stroke-linejoin: round; }
+.spark-area { fill: var(--series-fill); }
+.spark-hit { fill: transparent; }
+.spark-hit:hover { fill: var(--series-1); fill-opacity: 0.5; }
+.sparkrow { display: flex; align-items: center; gap: 16px; margin: 10px 0; }
+.sparkrow .name { width: 180px; text-align: right; color: var(--ink-2); }
+.sparkrow .range { color: var(--ink-3); font-size: 12px; }
+.heat td.cell { text-align: right; padding: 4px 8px; border-bottom: 2px solid var(--surface); }
+""" + "".join(
+    f".hc{i} {{ background: var(--heat-{i}); color: var(--heat-ink-{i}); }}\n"
+    for i in range(_N_HEAT)
+) + """
+.bar { display: inline-block; height: 10px; border-radius: 2px; vertical-align: middle; }
+.bar.pos { background: var(--pos); }
+.bar.neg { background: var(--neg); }
+pre.spec {
+  background: var(--surface-2); border: 1px solid var(--border); border-radius: 6px;
+  padding: 10px 12px; overflow-x: auto; white-space: pre-wrap; word-break: break-all;
+}
+"""
+
+_JS = """
+var REPRO_REPORT = JSON.parse(document.getElementById("%s").textContent);
+document.querySelectorAll("table.sortable").forEach(function (table) {
+  var ths = table.querySelectorAll("th");
+  ths.forEach(function (th, col) {
+    th.addEventListener("click", function () {
+      var tbody = table.tBodies[0];
+      var rows = Array.prototype.slice.call(tbody.rows);
+      var dir = th.dataset.dir === "desc" ? "asc" : "desc";
+      ths.forEach(function (o) { delete o.dataset.dir;
+        var d = o.querySelector(".dir"); if (d) d.textContent = ""; });
+      th.dataset.dir = dir;
+      var mark = th.querySelector(".dir");
+      if (mark) mark.textContent = dir === "desc" ? "\\u25BE" : "\\u25B4";
+      rows.sort(function (a, b) {
+        var x = a.cells[col].dataset.v, y = b.cells[col].dataset.v, r;
+        if (x !== undefined && y !== undefined) r = Number(x) - Number(y);
+        else r = a.cells[col].textContent.localeCompare(b.cells[col].textContent);
+        return dir === "desc" ? -r : r;
+      });
+      rows.forEach(function (r) { tbody.appendChild(r); });
+    });
+  });
+});
+""" % PAYLOAD_ID
+
+
+def esc(value: Any) -> str:
+    return html_mod.escape(str(value), quote=True)
+
+
+def _payload_script(doc: Dict[str, Any]) -> str:
+    # "</" must not appear inside the script element (a literal "</script>"
+    # in a region name would end the block early); JSON allows the escape.
+    blob = json.dumps(doc, separators=(",", ":"), allow_nan=False)
+    blob = blob.replace("</", "<\\/")
+    return f'<script type="application/json" id="{PAYLOAD_ID}">{blob}</script>'
+
+
+def _ms(ns: Optional[float]) -> str:
+    return "—" if ns is None else f"{ns / 1e6:,.3f}"
+
+
+def _mb(b: Optional[float]) -> str:
+    return "—" if b is None else f"{b / 1e6:,.2f}"
+
+
+def _num(v: Optional[float], fmt: str = ",.0f") -> str:
+    return "—" if v is None else format(v, fmt)
+
+
+def _cellv(v: Optional[float]) -> str:
+    return "" if v is None else f' data-v="{v}"'
+
+
+def _tile(label: str, value: str, cls: str = "") -> str:
+    cls = f" {cls}" if cls else ""
+    return (
+        f'<div class="tile"><div class="v{cls}">{esc(value)}</div>'
+        f'<div class="k">{esc(label)}</div></div>'
+    )
+
+
+def _header(doc: Dict[str, Any]) -> str:
+    meta = doc.get("meta") or {}
+    topo = meta.get("topology") or {}
+    bits = []
+    if meta.get("experiment"):
+        bits.append(f"experiment <b>{esc(meta['experiment'])}</b>")
+    if meta.get("instrumenter"):
+        bits.append(f"instrumenter {esc(meta['instrumenter'])}")
+    if topo.get("world_size", 1) and int(topo.get("world_size", 1)) > 1:
+        bits.append(f"rank {topo.get('rank', 0)}/{topo.get('world_size')}")
+    sub = " · ".join(bits)
+    return (
+        "<h1>Performance report</h1>"
+        f'<p class="sub">{sub}</p>'
+        f'<p class="sub mono">{esc(doc.get("run_dir", ""))}</p>'
+    )
+
+
+def _overview_tiles(doc: Dict[str, Any]) -> str:
+    meta = doc.get("meta") or {}
+    mem = doc.get("memory")
+    gov = doc.get("governor")
+    tiles = []
+    t0, t1 = meta.get("epoch_time_ns"), meta.get("finalize_time_ns")
+    if t0 and t1 and t1 > t0:
+        tiles.append(_tile("wall time", f"{(t1 - t0) / 1e9:,.2f} s"))
+    if meta.get("events_flushed") is not None:
+        tiles.append(_tile("events recorded", f"{meta['events_flushed']:,}"))
+    regions = doc.get("regions") or []
+    if regions:
+        tiles.append(_tile("regions", f"{len(regions):,}"))
+    if mem:
+        tiles.append(_tile("peak RSS", f"{_mb(mem['rss_peak_bytes'])} MB"))
+        tiles.append(_tile("GC pause", f"{mem['gc_pause_ns_total'] / 1e6:,.1f} ms"))
+    if gov:
+        ok = gov.get("under_budget", True)
+        tiles.append(
+            _tile(
+                f"overhead vs {gov['budget']:.0%} budget",
+                f"{gov['overhead_fraction']:.2%} "
+                + ("✓ under" if ok else "✗ over"),
+                "ok" if ok else "bad",
+            )
+        )
+    merge = doc.get("merge")
+    if merge:
+        tiles.append(_tile("ranks merged", f"{len(merge.get('ranks', []))}"))
+        tiles.append(_tile("span events", f"{merge.get('total_events', 0):,}"))
+    return f'<div class="tiles">{"".join(tiles)}</div>' if tiles else ""
+
+
+_REGION_COLS = [
+    ("region", "region", "l"),
+    ("kind", "kind", "l"),
+    ("visits", "visits", ""),
+    ("excl ms", "excl_ns", ""),
+    ("incl ms", "incl_ns", ""),
+    ("mean µs", "mean_ns", ""),
+    ("alloc MB", "alloc_bytes", ""),
+    ("net MB", "net_bytes", ""),
+    ("blocks", "alloc_blocks", ""),
+    ("gov cost ms", "est_cost_ns", ""),
+]
+
+
+def _regions_table(doc: Dict[str, Any]) -> str:
+    rows = doc.get("regions") or []
+    if not rows:
+        return ""
+    head = "".join(
+        f'<th class="{cls}">{esc(label)} <span class="dir"></span></th>'
+        for label, _, cls in _REGION_COLS
+    )
+    body = []
+    for r in rows[:MAX_TABLE_ROWS]:
+        name = esc(r["region"]) + (
+            ' <span class="note">[gov-excluded]</span>'
+            if r.get("governor_excluded")
+            else ""
+        )
+        cells = [
+            f'<td class="l" title="{esc(r["region"])}">{name}</td>',
+            f'<td class="l">{esc(r.get("kind") or "—")}</td>',
+            f'<td{_cellv(r["visits"])}>{r["visits"]:,}</td>',
+            f'<td{_cellv(r["excl_ns"])}>{_ms(r["excl_ns"])}</td>',
+            f'<td{_cellv(r["incl_ns"])}>{_ms(r["incl_ns"])}</td>',
+            f'<td{_cellv(r["mean_ns"])}>'
+            + ("—" if r["mean_ns"] is None else f"{r['mean_ns'] / 1e3:,.2f}")
+            + "</td>",
+            f'<td{_cellv(r["alloc_bytes"])}>{_mb(r["alloc_bytes"])}</td>',
+            f'<td{_cellv(r["net_bytes"])}>{_mb(r["net_bytes"])}</td>',
+            f'<td{_cellv(r["alloc_blocks"])}>{_num(r["alloc_blocks"])}</td>',
+            f'<td{_cellv(r["est_cost_ns"])}>{_ms(r["est_cost_ns"])}</td>',
+        ]
+        body.append("<tr>" + "".join(cells) + "</tr>")
+    note = (
+        f'<p class="note">showing {MAX_TABLE_ROWS} of {len(rows)} regions by '
+        f"exclusive time — the full table is in the embedded JSON payload.</p>"
+        if len(rows) > MAX_TABLE_ROWS
+        else ""
+    )
+    return (
+        "<h2>Regions — time &amp; memory</h2>"
+        '<p class="note">click a column header to sort; time from profile.json, '
+        "allocation columns from memory.json, governor columns from governor.json.</p>"
+        f'<table class="sortable"><thead><tr>{head}</tr></thead>'
+        f'<tbody>{"".join(body)}</tbody></table>{note}'
+    )
+
+
+def _timeline_section(doc: Dict[str, Any]) -> str:
+    from .svg import sparkline
+
+    series = doc.get("timelines") or {}
+    if not series:
+        return ""
+    shown = sorted(series)[:MAX_TIMELINES]
+    rows = []
+    for name in shown:
+        pts = series[name]
+        svg = sparkline(pts)
+        if not svg:
+            continue
+        vals = [v for _, v in pts]
+        rows.append(
+            f'<div class="sparkrow"><div class="name mono">{esc(name)}</div>{svg}'
+            f'<div class="range">min {min(vals):,.2f} · max {max(vals):,.2f} · '
+            f"last {vals[-1]:,.2f}</div></div>"
+        )
+    if not rows:
+        return ""
+    note = (
+        f'<p class="note">showing {len(shown)} of {len(series)} series — '
+        f"the rest are in the embedded JSON payload.</p>"
+        if len(series) > len(shown)
+        else ""
+    )
+    return "<h2>Timelines</h2>" + "".join(rows) + note
+
+
+def _governor_section(doc: Dict[str, Any]) -> str:
+    gov = doc.get("governor")
+    if not gov:
+        return ""
+    out = ["<h2>Overhead governor</h2>"]
+    out.append(
+        '<p class="sub">'
+        f"budget {gov['budget']:.1%} · calibrated {esc(gov['calibrated_instrumenter'])} "
+        f"at {gov['cost_full_ns']:,.0f} ns/pair · final instrumenter "
+        f"{esc(gov['final_instrumenter'])}"
+        + (f" (period {gov['final_period']})" if gov.get("final_period") else "")
+        + f" · estimated distortion {gov['overhead_fraction']:.2%} "
+        + ("(under budget)" if gov["under_budget"] else "(<b>over budget</b>)")
+        + "</p>"
+    )
+    actions = gov.get("actions") or []
+    if actions:
+        rows = "".join(
+            f'<tr><td data-v="{a["t_ns"]}">{a["t_ns"] / 1e6:,.1f}</td>'
+            f'<td data-v="{a["window_overhead"]}">{a["window_overhead"]:.1%}</td>'
+            f'<td data-v="{a["projected_overhead"]}">{a["projected_overhead"]:.1%}</td>'
+            f'<td class="l">{esc("; ".join(a["steps"]))}</td></tr>'
+            for a in actions
+        )
+        out.append(
+            "<table><thead><tr><th>t ms</th><th>measured</th><th>projected</th>"
+            '<th class="l">escalation</th></tr></thead>'
+            f"<tbody>{rows}</tbody></table>"
+        )
+    else:
+        out.append('<p class="note">no escalations — the run stayed under budget.</p>')
+    if gov.get("suggested_filter"):
+        out.append(
+            '<p class="sub">suggested filter for the next run '
+            "(<code>--filter</code> / <code>REPRO_MONITOR_FILTER</code>):</p>"
+            f'<pre class="spec">{esc(gov["suggested_filter"])}</pre>'
+        )
+    return "".join(out)
+
+
+def _heat_class(value: float, row_max: float) -> str:
+    if row_max <= 0:
+        return "hc0"
+    idx = min(int((value / row_max) * _N_HEAT), _N_HEAT - 1)
+    return f"hc{idx}"
+
+
+def _merge_section(doc: Dict[str, Any]) -> str:
+    merge = doc.get("merge")
+    if not merge:
+        return ""
+    out = ["<h2>Cross-rank view</h2>"]
+    ranks = merge.get("ranks") or []
+    if ranks:
+        rows = "".join(
+            f'<tr><td data-v="{r["rank"]}">{r["rank"]}</td>'
+            f'<td data-v="{r["events"]}">{r["events"]:,}</td>'
+            f'<td class="l mono">{esc(r["run_dir"])}</td></tr>'
+            for r in ranks
+        )
+        out.append(
+            "<table><thead><tr><th>rank</th><th>events</th>"
+            '<th class="l">run dir</th></tr></thead>'
+            f"<tbody>{rows}</tbody></table>"
+        )
+    dropped = merge.get("dropped_runs") or []
+    if dropped:
+        out.append(
+            f'<p class="note">dropped {len(dropped)} stale duplicate run dir(s): '
+            + ", ".join(esc(d["run_dir"]) for d in dropped)
+            + "</p>"
+        )
+    profile = merge.get("profile") or {}
+    if profile.get("regions"):
+        heat_ranks = profile["ranks"]
+        header = '<th class="l">region</th>' + "".join(
+            f"<th>r{r}</th>" for r in heat_ranks
+        ) + "<th>imbalance</th>"
+        body = []
+        imbalance = profile.get("imbalance") or {}
+        for name, row in zip(profile["regions"], profile["excl_ns"]):
+            row_max = max(row) if row else 0
+            cells = "".join(
+                f'<td class="cell {_heat_class(v, row_max)}" '
+                f'title="{esc(name)} @ rank {r}: {v / 1e6:,.3f} ms">'
+                f"{v / 1e6:,.1f}</td>"
+                for r, v in zip(heat_ranks, row)
+            )
+            imb = imbalance.get(name)
+            body.append(
+                f'<tr><td class="l" title="{esc(name)}">{esc(name)}</td>{cells}'
+                f"<td>{_num(imb, '.2f') if imb is not None else '—'}</td></tr>"
+            )
+        out.append(
+            "<h2>Per-region exclusive time by rank (ms)</h2>"
+            '<p class="note">cell shade is relative to the region&#39;s own '
+            "max across ranks — darker = closer to the slowest rank; "
+            "imbalance = max/mean.</p>"
+            f'<table class="heat"><thead><tr>{header}</tr></thead>'
+            f'<tbody>{"".join(body)}</tbody></table>'
+        )
+    memory = merge.get("memory") or {}
+    if memory.get("peak_rss"):
+        peak = memory["peak_rss"]
+        imb = peak.get("imbalance")
+        out.append(
+            '<p class="sub">peak RSS: '
+            f"max {_mb(peak.get('max_bytes'))} MB (rank {peak.get('max_rank')}) / "
+            f"min {_mb(peak.get('min_bytes'))} MB (rank {peak.get('min_rank')}), "
+            f"imbalance {_num(imb, '.2f') if imb else '—'}×</p>"
+        )
+    governor = merge.get("governor") or {}
+    if governor:
+        out.append(
+            f'<p class="sub">governor: {governor.get("actions_total", 0)} actions '
+            f'across {len(governor.get("ranks", []))} ranks, '
+            f'{governor.get("ranks_over_budget", 0)} rank(s) over budget.</p>'
+        )
+        if governor.get("suggested_filter"):
+            out.append(
+                f'<pre class="spec">{esc(governor["suggested_filter"])}</pre>'
+            )
+    return "".join(out)
+
+
+def _delta_bar(delta: float, max_abs: float, width: int = 90) -> str:
+    if max_abs <= 0 or delta == 0:
+        return ""
+    w = max(2, int(abs(delta) / max_abs * width))
+    cls = "pos" if delta > 0 else "neg"
+    return f'<span class="bar {cls}" style="width:{w}px"></span> '
+
+
+def _diff_section(doc: Dict[str, Any]) -> str:
+    diff = doc.get("diff")
+    if not diff:
+        return ""
+    out = [
+        "<h2>Run-vs-run diff</h2>",
+        f'<p class="sub">base (A): <span class="mono">{esc(diff["base"])}</span> '
+        f'→ this run (B): <span class="mono">{esc(doc["run_dir"])}</span>. '
+        "Red bars mark regressions (B slower / allocating more), blue bars "
+        "improvements.</p>",
+    ]
+    rows = diff.get("profile") or []
+    if rows:
+        shown = rows[:40]
+        max_abs = max(abs(r["delta_ns"]) for r in shown)
+        body = "".join(
+            f'<tr><td class="l" title="{esc(r["region"])}">{esc(r["region"])}</td>'
+            f'<td data-v="{r["delta_ns"]}">{_delta_bar(r["delta_ns"], max_abs)}'
+            f'{r["delta_ns"] / 1e6:+,.3f}</td>'
+            f'<td data-v="{r["excl_ns_a"]}">{_ms(r["excl_ns_a"])}</td>'
+            f'<td data-v="{r["excl_ns_b"]}">{_ms(r["excl_ns_b"])}</td>'
+            f'<td>{"new" if r["ratio"] is None else format(r["ratio"], ".2f")}</td></tr>'
+            for r in shown
+        )
+        out.append(
+            "<h2>Exclusive-time deltas (ms)</h2>"
+            '<table class="sortable"><thead><tr><th class="l">region '
+            '<span class="dir"></span></th><th>Δ ms <span class="dir"></span></th>'
+            '<th>A ms <span class="dir"></span></th><th>B ms <span class="dir"></span></th>'
+            '<th>ratio <span class="dir"></span></th></tr></thead>'
+            f"<tbody>{body}</tbody></table>"
+        )
+        if len(rows) > len(shown):
+            out.append(
+                f'<p class="note">showing 40 of {len(rows)} changed regions — '
+                "full rows in the embedded JSON payload.</p>"
+            )
+    mem_rows = diff.get("memory") or []
+    if mem_rows:
+        shown = mem_rows[:25]
+        max_abs = max(abs(r["delta_bytes"]) for r in shown)
+        body = "".join(
+            f'<tr><td class="l" title="{esc(r["region"])}">{esc(r["region"])}</td>'
+            f'<td data-v="{r["delta_bytes"]}">{_delta_bar(r["delta_bytes"], max_abs)}'
+            f'{r["delta_bytes"] / 1e6:+,.2f}</td>'
+            f'<td data-v="{r["alloc_bytes_a"]}">{_mb(r["alloc_bytes_a"])}</td>'
+            f'<td data-v="{r["alloc_bytes_b"]}">{_mb(r["alloc_bytes_b"])}</td></tr>'
+            for r in shown
+        )
+        out.append(
+            "<h2>Allocation deltas (MB)</h2>"
+            '<table class="sortable"><thead><tr><th class="l">region '
+            '<span class="dir"></span></th><th>Δ MB <span class="dir"></span></th>'
+            '<th>A MB <span class="dir"></span></th><th>B MB <span class="dir"></span></th>'
+            "</tr></thead>"
+            f"<tbody>{body}</tbody></table>"
+        )
+    return "".join(out)
+
+
+def _metrics_section(doc: Dict[str, Any]) -> str:
+    metrics = doc.get("metrics")
+    if not metrics:
+        return ""
+    body = []
+    for name in sorted(metrics):
+        m = metrics[name]
+        body.append(
+            f'<tr><td class="l mono">{esc(name)}</td>'
+            f'<td data-v="{m.get("count", 0)}">{m.get("count", 0):,}</td>'
+            f'<td{_cellv(m.get("mean"))}>{_num(m.get("mean"), ",.4g")}</td>'
+            f'<td{_cellv(m.get("min"))}>{_num(m.get("min"), ",.4g")}</td>'
+            f'<td{_cellv(m.get("max"))}>{_num(m.get("max"), ",.4g")}</td>'
+            f'<td{_cellv(m.get("p99"))}>{_num(m.get("p99"), ",.4g")}</td></tr>'
+        )
+    return (
+        "<h2>Metrics</h2>"
+        '<table class="sortable"><thead><tr><th class="l">metric '
+        '<span class="dir"></span></th><th>count <span class="dir"></span></th>'
+        '<th>mean <span class="dir"></span></th><th>min <span class="dir"></span></th>'
+        '<th>max <span class="dir"></span></th><th>p99 <span class="dir"></span></th>'
+        f'</tr></thead><tbody>{"".join(body)}</tbody></table>'
+    )
+
+
+def render_report(doc: Dict[str, Any]) -> str:
+    """Render the data model into one self-contained HTML page."""
+    title = (doc.get("meta") or {}).get("experiment") or "run"
+    sections = [
+        _header(doc),
+        _overview_tiles(doc),
+        _regions_table(doc),
+        _timeline_section(doc),
+        _metrics_section(doc),
+        _governor_section(doc),
+        _merge_section(doc),
+        _diff_section(doc),
+        f'<p class="note">generated by repro.core.report · schema '
+        f"v{doc.get(SCHEMA_KEY, '?')} · data: embedded JSON payload "
+        f'<code>#{PAYLOAD_ID}</code></p>',
+    ]
+    return (
+        "<!DOCTYPE html>\n"
+        '<html lang="en"><head><meta charset="utf-8">'
+        f"<title>repro report — {esc(title)}</title>"
+        '<meta name="viewport" content="width=device-width, initial-scale=1">'
+        f"<style>{_CSS}</style></head><body>"
+        + "".join(s for s in sections if s)
+        + _payload_script(doc)
+        + f"<script>{_JS}</script></body></html>"
+    )
+
+
+def extract_payload(page: str) -> Dict[str, Any]:
+    """Parse the embedded JSON payload back out of a rendered report page —
+    the round-trip the contract tests exercise."""
+    marker = f'<script type="application/json" id="{PAYLOAD_ID}">'
+    start = page.index(marker) + len(marker)
+    end = page.index("</script>", start)
+    return json.loads(page[start:end])

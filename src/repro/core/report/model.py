@@ -1,0 +1,233 @@
+"""Report data model — one versioned document joining every run artifact.
+
+:func:`build_report` reads whatever artifacts a run directory contains
+(profile.json, memory.json, metrics.json, governor.json, meta.json,
+merged_trace_summary.json) and produces a single JSON-serializable dict —
+the payload embedded verbatim in report.html for client-side sorting, and
+the contract tests round-trip against.  Every section is optional: a
+profile-only run reports time, a merge root reports the cross-rank view,
+and missing substrates simply leave their section ``None``.
+
+Layout (``report_schema_version`` stamped at the top level)::
+
+    run_dir, generated_time_ns, meta
+    regions     [{region, kind, visits, incl_ns, excl_ns, mean_ns,
+                  alloc_bytes, net_bytes, alloc_blocks,   # None w/o memsys
+                  governor_excluded, est_cost_ns}]        # None w/o governor
+    memory      scalar overview (memsys.overview) or None
+    metrics     {name: aggregate row} or None
+    timelines   {name: [[t_ns, value], ...]} — mem.* + metrics series,
+                decimated to <= MAX_TIMELINE_POINTS points each
+    governor    {overview..., "actions": [...]} or None
+    merge       merged_trace_summary.json content or None
+    diff        {"base", "profile": rows, "memory": rows or None} or None
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from typing import Any, Dict, List, Optional
+
+from .. import governor as governor_mod
+from .. import memsys
+from ..schema import REPORT_SCHEMA_VERSION, MissingArtifact, schema_version, stamp
+
+#: Per-series cap on embedded timeline points; longer series are strided
+#: down.  Keeps report.html small for long runs without losing the shape.
+MAX_TIMELINE_POINTS = 240
+
+MERGE_SUMMARY = "merged_trace_summary.json"
+
+
+def _load_json(run_dir: str, name: str) -> Optional[Dict[str, Any]]:
+    path = os.path.join(run_dir, name)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None
+
+
+def decimate(series: List[List[float]], max_points: int = MAX_TIMELINE_POINTS):
+    """Stride a ``[[t, v], ...]`` series down to at most ``max_points``,
+    always keeping the final point (the end state matters most)."""
+    n = len(series)
+    if n <= max_points:
+        return series
+    step = -(-n // max_points)  # ceil division
+    out = series[::step]
+    if out[-1] is not series[-1]:
+        # Keep the final point without ever exceeding the cap (striding
+        # can already yield exactly max_points rows).
+        if len(out) >= max_points:
+            out[-1] = series[-1]
+        else:
+            out.append(series[-1])
+    return out
+
+
+def region_rows(
+    profile: Optional[Dict[str, Any]],
+    memory: Optional[Dict[str, Any]],
+    governor: Optional[Dict[str, Any]],
+) -> List[Dict[str, Any]]:
+    """The joined per-region table: profile time columns, memsys allocation
+    columns, governor exclusion flags — one row per region name."""
+    rows: Dict[str, Dict[str, Any]] = {}
+
+    def row(name: str) -> Dict[str, Any]:
+        r = rows.get(name)
+        if r is None:
+            r = rows[name] = {
+                "region": name,
+                "kind": None,
+                "visits": 0,
+                "incl_ns": 0,
+                "excl_ns": 0,
+                "mean_ns": None,
+                "alloc_bytes": None,
+                "net_bytes": None,
+                "alloc_blocks": None,
+                "governor_excluded": None,
+                "est_cost_ns": None,
+            }
+        return r
+
+    for name, vals in (profile or {}).get("flat", {}).items():
+        r = row(name)
+        r["kind"] = vals.get("kind")
+        r["visits"] = int(vals.get("visits", 0))
+        r["incl_ns"] = int(vals.get("incl_ns", 0))
+        r["excl_ns"] = int(vals.get("excl_ns", 0))
+        if r["visits"]:
+            r["mean_ns"] = round(r["excl_ns"] / r["visits"], 1)
+    if memory is not None:
+        for m in memsys.region_rows(memory):
+            r = row(m["region"])
+            r["alloc_bytes"] = m["alloc_bytes"]
+            r["net_bytes"] = m["net_bytes"]
+            r["alloc_blocks"] = m["alloc_blocks"]
+    if governor is not None:
+        for g in governor_mod.region_rows(governor):
+            r = rows.get(g["region"])
+            # Governor rows for regions the profile never saw (excluded
+            # before their first flush) still matter — they explain where
+            # the time table's gaps come from.
+            if r is None:
+                r = row(g["region"])
+                r["kind"] = g["kind"]
+                r["visits"] = g["visits"]
+            r["governor_excluded"] = g["excluded"]
+            r["est_cost_ns"] = g["est_cost_ns"]
+    out = list(rows.values())
+    out.sort(key=lambda r: -r["excl_ns"])
+    return out
+
+
+def _timelines(
+    memory: Optional[Dict[str, Any]], metrics: Optional[Dict[str, Any]]
+) -> Dict[str, List[List[float]]]:
+    series: Dict[str, List[List[float]]] = {}
+    if memory is not None:
+        series.update(memsys.timelines(memory))
+    if metrics is not None:
+        for name, vals in (metrics.get("series") or {}).items():
+            series.setdefault(name, vals)
+    out: Dict[str, List[List[float]]] = {}
+    for name, vals in series.items():
+        # Drop null samples (serialized non-finite values) *before* the
+        # emptiness check: an all-NaN series must not claim a sparkline
+        # slot or a payload entry.
+        pts = [[t, v] for t, v in vals if v is not None]
+        if pts:
+            out[name] = decimate(pts)
+    return out
+
+
+def _diff_section(run_dir: str, base_dir: str) -> Dict[str, Any]:
+    # Imported here: analysis imports the report package for its subcommand.
+    from ..analysis import diff_memory, diff_profiles
+
+    # Both halves are optional (a metrics+memory-only run has no
+    # profile.json); a side missing in either run leaves its half None
+    # rather than failing the whole report.
+    section: Dict[str, Any] = {"base": base_dir}
+    try:
+        section["profile"] = diff_profiles(base_dir, run_dir)
+    except MissingArtifact:
+        section["profile"] = None
+    try:
+        section["memory"] = diff_memory(base_dir, run_dir)
+    except MissingArtifact:
+        section["memory"] = None
+    return section
+
+
+def build_report(run_dir: str, diff_base: Optional[str] = None) -> Dict[str, Any]:
+    """Assemble the report data model for ``run_dir``.
+
+    ``run_dir`` may be a single run directory or a merge root containing
+    ``merged_trace_summary.json`` (both at once also works: a rank dir that
+    was itself the merge output root).  ``diff_base`` adds the run-vs-run
+    regression section (this run is B, the base is A).  Raises
+    :class:`repro.core.analysis.MissingArtifact` when the directory contains
+    *no* known artifact at all.
+    """
+    profile = _load_json(run_dir, "profile.json")
+    memory = _load_json(run_dir, "memory.json")
+    metrics = _load_json(run_dir, "metrics.json")
+    governor = _load_json(run_dir, "governor.json")
+    meta = _load_json(run_dir, "meta.json")
+    merge = _load_json(run_dir, MERGE_SUMMARY)
+    if all(doc is None for doc in (profile, memory, metrics, governor, merge)):
+        raise MissingArtifact(
+            f"no artifacts in {run_dir or '.'} — expected at least one of "
+            f"profile.json / memory.json / metrics.json / governor.json / "
+            f"{MERGE_SUMMARY} (is this a run dir or merge root?)"
+        )
+    if meta is None:
+        meta = (profile or memory or metrics or {}).get("meta") or {}
+    # Versioning policy: newer-than-us documents are reported, not guessed
+    # at (the sections still render best-effort — fields we know may have
+    # moved, which the warning makes diagnosable).
+    newest = max(
+        (schema_version(doc) for doc in (profile, memory, metrics, governor, meta, merge)
+         if doc is not None),
+        default=0,
+    )
+    if newest > REPORT_SCHEMA_VERSION:
+        warnings.warn(
+            f"artifacts in {run_dir} were written at report_schema_version "
+            f"{newest}, newer than this reader ({REPORT_SCHEMA_VERSION}) — "
+            "upgrade the tools; rendering best-effort",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+
+    doc: Dict[str, Any] = stamp(
+        {
+            "run_dir": run_dir,
+            "generated_time_ns": time.time_ns(),
+            "meta": meta,
+            "regions": region_rows(profile, memory, governor),
+            "memory": memsys.overview(memory) if memory is not None else None,
+            "metrics": (metrics or {}).get("metrics") or None,
+            "timelines": _timelines(memory, metrics),
+            "governor": (
+                dict(
+                    governor_mod.estimate_overview(governor),
+                    actions=governor_mod.action_rows(governor),
+                )
+                if governor is not None
+                else None
+            ),
+            "merge": merge,
+            "diff": _diff_section(run_dir, diff_base) if diff_base else None,
+        }
+    )
+    return doc

@@ -1,0 +1,69 @@
+"""Inline-SVG primitives for the HTML report — zero dependencies.
+
+Only what the report needs: a timeline sparkline (RSS / heap / GC / metric
+series) with native ``<title>`` hover tooltips, so the generated page stays
+fully self-contained (no charting library, no network).  Colors are CSS
+custom properties supplied by the page style (``--series-1`` etc.), so the
+SVG follows the page's light/dark mode for free.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+__all__ = ["sparkline"]
+
+
+def _scale(values: Sequence[float], lo: float, hi: float, out_lo: float, out_hi: float):
+    span = hi - lo
+    if span <= 0:  # constant series: park everything mid-range
+        mid = (out_lo + out_hi) / 2.0
+        return [mid for _ in values]
+    k = (out_hi - out_lo) / span
+    return [out_lo + (v - lo) * k for v in values]
+
+
+def sparkline(
+    points: Sequence[Tuple[float, float]],
+    width: int = 560,
+    height: int = 64,
+    pad: float = 6.0,
+    unit: str = "",
+) -> str:
+    """A single-series sparkline for ``[(t_ns, value), ...]``.
+
+    2px line + translucent area fill (both from CSS vars), invisible hover
+    targets carrying ``<title>`` tooltips with the exact value and the
+    offset from the first sample in seconds.  Returns ``""`` for an empty
+    series so callers can drop the section cleanly.
+    """
+    pts = [(float(t), float(v)) for t, v in points]
+    if not pts:
+        return ""
+    ts = [t for t, _ in pts]
+    vs = [v for _, v in pts]
+    t0 = ts[0]
+    xs = _scale(ts, min(ts), max(ts), pad, width - pad)
+    # SVG y grows downward: map the max value to the top padding.
+    ys = _scale(vs, min(vs), max(vs), height - pad, pad)
+    line = " ".join(f"{x:.1f},{y:.1f}" for x, y in zip(xs, ys))
+    area = (
+        f"M{xs[0]:.1f},{height - pad:.1f} "
+        + " ".join(f"L{x:.1f},{y:.1f}" for x, y in zip(xs, ys))
+        + f" L{xs[-1]:.1f},{height - pad:.1f} Z"
+    )
+    hovers = []
+    for (t, v), x, y in zip(pts, xs, ys):
+        label = f"{v:,.2f}{unit} @ +{(t - t0) / 1e9:.2f}s"
+        hovers.append(
+            f'<circle class="spark-hit" cx="{x:.1f}" cy="{y:.1f}" r="7">'
+            f"<title>{label}</title></circle>"
+        )
+    return (
+        f'<svg class="spark" viewBox="0 0 {width} {height}" width="{width}" '
+        f'height="{height}" role="img">'
+        f'<path class="spark-area" d="{area}"/>'
+        f'<polyline class="spark-line" points="{line}"/>'
+        + "".join(hovers)
+        + "</svg>"
+    )

@@ -1,0 +1,53 @@
+"""Artifact schema versioning — one number, stamped into every JSON artifact.
+
+Every JSON document a run produces (profile.json, memory.json, metrics.json,
+governor.json, meta.json, merged_trace_summary.json) and the report data
+model embedded in report.html carries a top-level ``report_schema_version``
+key.  The version covers the *union* of the artifact schemas — it is bumped
+whenever any field documented in docs/ARTIFACTS.md changes meaning, moves,
+or disappears, not when purely additive fields appear.  Offline tools
+(``repro.core.analysis``, ``repro.core.report``) accept documents whose
+version is at most ``REPORT_SCHEMA_VERSION`` and treat missing keys as
+"older writer, additive field absent"; a *newer* version than the reader
+knows is reported, not guessed at.
+
+The policy in one line: **readers are backwards-compatible, writers stamp
+the current version, breaking changes bump it.**  See docs/ARTIFACTS.md for
+the per-artifact field tables this version number protects.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+class MissingArtifact(RuntimeError):
+    """A run dir lacks the artifact a tool needs (wrong substrate set, not
+    a run dir at all, ...).  CLIs render this as a one-line ``error:`` and
+    exit code 2.  Defined here — not in the CLI module — so the class has
+    exactly one identity even when a CLI module runs as ``__main__`` under
+    ``python -m`` (a duplicate class in ``__main__`` would not be caught
+    when library code raises the imported one)."""
+
+
+#: Current artifact-schema generation.  History:
+#:   1 — first stamped generation (PR 5): the PR 0-4 artifact fields as
+#:       documented in docs/ARTIFACTS.md, plus the report data model.
+REPORT_SCHEMA_VERSION = 1
+
+SCHEMA_KEY = "report_schema_version"
+
+
+def stamp(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Stamp ``doc`` (in place) with the current schema version and return it."""
+    doc[SCHEMA_KEY] = REPORT_SCHEMA_VERSION
+    return doc
+
+
+def schema_version(doc: Dict[str, Any]) -> int:
+    """The schema generation ``doc`` was written under.
+
+    Documents from before versioning (PR 0-4 writers) carry no key and are
+    generation 0 — readers treat them exactly like generation 1 with every
+    post-PR-4 additive field absent.
+    """
+    return int(doc.get(SCHEMA_KEY, 0))

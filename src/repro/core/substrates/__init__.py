@@ -1,4 +1,21 @@
-"""Substrate registry."""
+"""Substrate registry — the measurement back-ends and their artifacts.
+
+A *substrate* consumes flushed event batches (and user metrics) and writes
+one artifact family into the run directory at finalize (the Score-P
+analogue: profiling and tracing substrates behind one measurement core).
+Registered here:
+
+    ``profiling``  profile.json / profile.txt — call-path profile
+    ``tracing``    defs.json + per-thread event streams + trace.json
+    ``metrics``    metrics.json — metric aggregates and time series
+    ``memory``     memory.json — allocation attribution + RSS/GC timelines
+                   (lazily imported from repro.core.memsys)
+
+Select substrates per run via ``MeasurementConfig.substrates``,
+``--substrates`` on the CLI, or ``REPRO_MONITOR_SUBSTRATES``.  Every JSON
+artifact carries ``report_schema_version`` (see repro.core.schema and
+docs/ARTIFACTS.md for the field tables).
+"""
 
 from __future__ import annotations
 
@@ -22,6 +39,9 @@ _LAZY = {"memory": "repro.core.memsys.substrate"}
 
 
 def make_substrate(name: str, **kwargs) -> Substrate:
+    """Instantiate a registered substrate by name (kwargs go to the
+    constructor, e.g. ``period=``/``topn=`` for ``memory``).  Raises
+    ``ValueError`` naming the available substrates on an unknown name."""
     cls = SUBSTRATES.get(name)
     if cls is None and name in _LAZY:
         import importlib

@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from ..schema import stamp
 from .base import Substrate
 
 
@@ -82,11 +83,11 @@ class MetricsSubstrate(Substrate):
         return out
 
     def close(self, region_table) -> None:
-        doc = {
+        doc = stamp({
             "meta": self._meta,
             "events_per_thread": {str(k): v for k, v in self._event_counts.items()},
             "metrics": self.summary(),
-        }
+        })
         if self.keep_series:
             doc["series"] = {
                 name: [[int(t), _finite_or_none(v)] for t, v in vals]

@@ -24,6 +24,7 @@ import numpy as np
 
 from ..buffer import EV_EXCEPTION, EV_LINE
 from ..replay import ReplayState, replay, unwind
+from ..schema import stamp
 from .base import Substrate
 
 
@@ -176,7 +177,7 @@ class ProfilingSubstrate(Substrate):
                 "lines_executed": {str(k): v for k, v in state.lines.items()},
             }
 
-        doc = {
+        doc = stamp({
             "meta": self._meta,
             "metrics": self._metrics,
             "threads": threads_doc,
@@ -184,7 +185,7 @@ class ProfilingSubstrate(Substrate):
                 name_of(rid): vals
                 for rid, vals in sorted(flat.items(), key=lambda kv: -kv[1]["excl_ns"])
             },
-        }
+        })
         with open(os.path.join(self._run_dir, "profile.json"), "w") as fh:
             json.dump(doc, fh, indent=1, allow_nan=False)
         with open(os.path.join(self._run_dir, "profile.txt"), "w") as fh:

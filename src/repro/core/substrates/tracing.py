@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from ..schema import stamp
 from .base import Substrate
 
 
@@ -52,11 +53,11 @@ class TracingSubstrate(Substrate):
             path = os.path.join(self._run_dir, f"stream_t{tid}.npz")
             np.savez_compressed(path, **cols)
             streams[str(tid)] = {"file": os.path.basename(path), "events": int(len(cols["kind"]))}
-        defs = {
+        defs = stamp({
             "meta": self._meta,
             "streams": streams,
             "regions": region_table,
-        }
+        })
         with open(os.path.join(self._run_dir, "defs.json"), "w") as fh:
             json.dump(defs, fh, indent=1)
 

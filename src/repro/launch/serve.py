@@ -89,7 +89,9 @@ def serve(
     }
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The ``python -m repro.launch.serve`` argument parser (also rendered
+    into docs/CLI.md by :mod:`repro.core.clidoc`)."""
     p = argparse.ArgumentParser(prog="python -m repro.launch.serve")
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
@@ -97,11 +99,32 @@ def main(argv=None) -> int:
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--mesh", action="store_true")
-    ns = p.parse_args(argv)
+    p.add_argument("--report", action="store_true",
+                   help="emit report.html at finalize: flips the active "
+                        "measurement's report flag when launched under "
+                        "repro.scorep, else starts a measurement of its own")
+    return p
+
+
+def main(argv=None) -> int:
+    ns = build_parser().parse_args(argv)
+    owns_measurement = False
+    if ns.report:
+        m = rmon.active()
+        if m is not None:
+            m.config.report = True
+        else:
+            rmon.init(experiment="serve", report=True,
+                      substrates=("profiling", "tracing", "metrics", "memory"))
+            owns_measurement = True
     cfg = get_smoke_config(ns.arch) if ns.smoke else get_config(ns.arch)
     result = serve(cfg, batch=ns.batch, prompt_len=ns.prompt_len, gen=ns.gen,
                    use_mesh=ns.mesh)
     print(result)
+    if owns_measurement:
+        run_dir = rmon.finalize()
+        if run_dir:
+            print(f"report: {run_dir}/report.html")
     return 0 if result["finite"] else 1
 
 

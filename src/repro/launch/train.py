@@ -175,7 +175,9 @@ def train(
     return result
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The ``python -m repro.launch.train`` argument parser (also rendered
+    into docs/CLI.md by :mod:`repro.core.clidoc`)."""
     p = argparse.ArgumentParser(prog="python -m repro.launch.train")
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true", help="use the reduced config")
@@ -189,7 +191,25 @@ def main(argv=None) -> int:
     p.add_argument("--mesh", action="store_true")
     p.add_argument("--d-model", type=int, default=None, help="override width")
     p.add_argument("--n-groups", type=int, default=None, help="override depth")
-    ns = p.parse_args(argv)
+    p.add_argument("--report", action="store_true",
+                   help="emit report.html at finalize: flips the active "
+                        "measurement's report flag when launched under "
+                        "repro.scorep, else starts a measurement of its own")
+    return p
+
+
+def main(argv=None) -> int:
+    ns = build_parser().parse_args(argv)
+
+    owns_measurement = False
+    if ns.report:
+        m = rmon.active()
+        if m is not None:
+            m.config.report = True
+        else:
+            rmon.init(experiment="train", report=True,
+                      substrates=("profiling", "tracing", "metrics", "memory"))
+            owns_measurement = True
 
     cfg = get_smoke_config(ns.arch) if ns.smoke else get_config(ns.arch)
     overrides = {}
@@ -212,6 +232,10 @@ def main(argv=None) -> int:
         use_mesh=ns.mesh,
     )
     print(result)
+    if owns_measurement:
+        run_dir = rmon.finalize()
+        if run_dir:
+            print(f"report: {run_dir}/report.html")
     ok = result["final_loss"] is not None and np.isfinite(result["final_loss"])
     return 0 if ok else 1
 

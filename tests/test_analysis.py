@@ -59,3 +59,63 @@ def test_analysis_cli(tmp_path, capsys):
     out = capsys.readouterr().out
     assert "region" in out
     assert main(["top", a]) == 0
+
+
+def test_missing_artifact_exit_codes_are_uniform(tmp_path, capsys):
+    """Every subcommand pointed at a dir without its artifact follows one
+    convention: one-line ``error:`` on stderr + exit code 2 (never a
+    traceback, never a different code)."""
+    from repro.core.analysis import main
+
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    for argv in (
+        ["top", str(empty)],
+        ["diff", str(empty), str(empty)],
+        ["memory", str(empty)],
+        ["memory-diff", str(empty), str(empty)],
+        ["governor", str(empty)],
+        ["suggest-filter", str(empty)],
+        ["merge-summary", str(empty / "nope.json")],
+        ["merge-summary", str(empty)],  # dir form: no summary inside
+        ["report", str(empty)],
+    ):
+        assert main(argv) == 2, argv
+        err = capsys.readouterr().err
+        assert err.startswith("error:"), (argv, err)
+
+
+def test_merge_summary_accepts_directory(tmp_path, capsys):
+    """`analysis merge-summary` takes either the JSON path or the merge
+    root directory containing merged_trace_summary.json."""
+    import json as json_mod
+
+    from repro.core.analysis import main
+
+    summary = {"ranks": [], "dropped_runs": [], "total_events": 0, "world_size": 1}
+    path = tmp_path / "merged_trace_summary.json"
+    path.write_text(json_mod.dumps(summary))
+    assert main(["merge-summary", str(path)]) == 0
+    assert main(["merge-summary", str(tmp_path)]) == 0
+    assert "world_size" in capsys.readouterr().out
+
+
+def test_merge_summary_corrupt_json_exits_2(tmp_path, capsys):
+    from repro.core.analysis import main
+
+    path = tmp_path / "merged_trace_summary.json"
+    path.write_text("{not json")
+    assert main(["merge-summary", str(path)]) == 2
+    assert "error:" in capsys.readouterr().err
+
+
+def test_corrupt_artifact_exits_2(tmp_path, capsys):
+    """A truncated/corrupt artifact (crashed writer) follows the same
+    exit-2 convention as a missing one — no tracebacks."""
+    from repro.core.analysis import main
+
+    run = tmp_path / "corrupt"
+    run.mkdir()
+    (run / "profile.json").write_text("{truncated")
+    assert main(["top", str(run)]) == 2
+    assert "error:" in capsys.readouterr().err
