@@ -172,6 +172,58 @@ def check_suggested_filter(n: int) -> Dict[str, object]:
     }
 
 
+def check_adaptive_rung(n: int, budget: float = BUDGET) -> Dict[str, object]:
+    """Ladder check (3.12+): a percent-level budget walks the governor off
+    the counting sampler, and with the PEP 669 adaptive rung present it must
+    land there — bounded-rate signal retained — instead of going dark at
+    ``none``.
+
+    The counting sampler's cost floor is its unsampled per-call base cost
+    times the call rate (far above any percent-level budget on this kernel,
+    even at the period cap), so exclusions and period raises cannot satisfy
+    the budget.  The adaptive sampler's projected cost is capped at its
+    target sample rate, which fits with a wide margin."""
+    code = compile(CASES["case2"], "<case2>", "exec")
+    cfg = MeasurementConfig(
+        instrumenter="sampling", substrates=(),
+        run_dir=tempfile.mkdtemp(prefix="repro-governed-"),
+        flush_threshold=2048, sampling_period=5, adaptive_rate=2000.0,
+        budget=budget,
+    )
+    m = Measurement(cfg)
+    argv_saved = sys.argv
+    sys.argv = ["case", str(n)]
+    try:
+        m.start()
+        exec(code, {"__name__": "__overhead__"})
+        m.stop()
+    finally:
+        sys.argv = argv_saved
+        m.finalize()
+    doc = load_governor(m.run_dir)
+    assert doc is not None, "governed sampling run wrote no governor.json"
+    downgrades = [
+        (s.get("from"), s.get("to"))
+        for a in doc["actions"] for s in a["steps"]
+        if s["kind"] == "downgrade_instrumenter"
+    ]
+    final = doc["final_instrumenter"]["name"]
+    assert ("sampling", "adaptive") in downgrades, (
+        f"adaptive rung not exercised: downgrades={downgrades}, final={final}"
+    )
+    assert final == "adaptive", (
+        f"ladder overshot the adaptive rung: final={final}, "
+        f"downgrades={downgrades}"
+    )
+    assert events_flushed(m.run_dir) > 0, "adaptive rung recorded no events"
+    return {
+        "downgrades": downgrades,
+        "final_instrumenter": doc["final_instrumenter"],
+        "actions": len(doc["actions"]),
+        "events_flushed": events_flushed(m.run_dir),
+    }
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--smoke", action="store_true",
@@ -223,6 +275,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"event rate with suggested filter: {artifact['events_filtered']} vs "
           f"{artifact['events_unfiltered']} unfiltered")
 
+    adaptive_rung = None
+    if hasattr(sys, "monitoring"):
+        adaptive_rung = check_adaptive_rung(max(ns[-1], 120_000), budget)
+        print(f"adaptive rung: downgrades {adaptive_rung['downgrades']}, "
+              f"final {adaptive_rung['final_instrumenter']}, "
+              f"{adaptive_rung['events_flushed']} events recorded")
+    else:
+        print("adaptive rung check skipped (sys.monitoring needs 3.12+)")
+
     doc = {
         "ns": ns, "repeats": repeats, "budget": budget, "smoke": args.smoke,
         "beta_us": {
@@ -234,6 +295,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         "steady": steady,
         "converged": bool(converged),
         "filter_check": artifact,
+        "adaptive_rung": adaptive_rung,
     }
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as fh:

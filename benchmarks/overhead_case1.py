@@ -18,12 +18,15 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 from typing import Dict, List, Optional
 
 from repro.core.overhead import OverheadResult, measure_case
 
 DEFAULT_NS = [10_000, 100_000, 400_000, 1_000_000]
-INSTRUMENTERS = [None, "none", "profile", "trace", "sampling", "monitoring"]
+INSTRUMENTERS = [None, "none", "profile", "trace", "sampling"]
+if hasattr(sys, "monitoring"):  # PEP 669 rows need Python 3.12+
+    INSTRUMENTERS += ["monitoring", "adaptive"]
 
 
 def run(

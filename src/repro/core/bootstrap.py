@@ -44,8 +44,10 @@ def build_parser() -> argparse.ArgumentParser:
         allow_abbrev=False,
     )
     p.add_argument("--instrumenter", default="profile",
-                   choices=["none", "profile", "trace", "sampling", "monitoring"],
-                   help="event source (paper: sys.setprofile / sys.settrace)")
+                   choices=["none", "profile", "trace", "sampling", "monitoring",
+                            "adaptive"],
+                   help="event source (paper: sys.setprofile / sys.settrace; "
+                        "monitoring/adaptive need Python 3.12+)")
     p.add_argument("--substrates", default="profiling,tracing,metrics",
                    help="comma-separated substrate list")
     p.add_argument("--out", default="repro-traces", help="output directory")
@@ -54,6 +56,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="include/exclude rules, e.g. 'exclude:numpy.*;include:mypkg.*'")
     p.add_argument("--flush-events", type=int, default=1 << 16)
     p.add_argument("--sampling-period", type=int, default=97)
+    p.add_argument("--adaptive-rate", type=float, default=4000.0,
+                   help="target sampled call pairs per second for the "
+                        "adaptive instrumenter (REPRO_MONITOR_ADAPTIVE_RATE)")
     p.add_argument("--buffer", default="list", choices=["list", "numpy"])
     p.add_argument("--memory", action="store_true",
                    help="enable the memory substrate (REPRO_MONITOR_MEMORY=1)")
@@ -101,6 +106,7 @@ def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
         filter_spec=ns.filter_spec,
         flush_threshold=ns.flush_events,
         sampling_period=ns.sampling_period,
+        adaptive_rate=ns.adaptive_rate,
         buffer_strategy=ns.buffer,
         memory_period=ns.memory_period,
         memory_topn=ns.memory_topn,

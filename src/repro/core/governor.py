@@ -26,7 +26,18 @@ what this module automates *online*:
       ``RegionRegistry.refilter``),
    b. raise the counting sampler's period (``Instrumenter.set_period``),
    c. downgrade the instrumenter along ``Instrumenter.downgrade_to``
-      (trace → profile → sampling → none).
+      (trace → profile → sampling → none; on 3.12+ the sampler downgrades
+      to the PEP 669 ``adaptive`` sampler first, which self-limits its
+      sample rate and so keeps *some* signal where the ladder previously
+      went dark).
+
+Cost tiers: instrumenters with ``zero_cost_filtered`` (the PEP 669 family)
+retire filtered locations via ``sys.monitoring.DISABLE``, so their
+filtered-verdict cost is a one-time hit, not a per-call rate — the
+projection prices excluded regions at zero for them, which makes rung (a)
+a true fix instead of a shuffle from the full path to the filtered path.
+The adaptive sampler's projected cost is likewise capped at its configured
+target sample rate rather than scaling with the application call rate.
 4. **Report** — ``governor.json`` records the calibration, every action
    taken, the per-region cost table, the estimated distortion, and a
    Score-P-style suggested filter spec that round-trips through
@@ -118,8 +129,14 @@ class Calibration:
     cost_filtered_ns: float  # configured instrumenter, verdict FILTERED
     sampling_base_ns: float  # counting sampler, unsampled path
     sampling_sampled_ns: float  # counting sampler, period=1 (every call)
-    probe_calls: int
-    probe_s: float
+    # Adaptive (PEP 669) sampler, cost per *recorded* pair: unsampled calls
+    # are DISABLEd away entirely, so the per-call unit is meaningless — the
+    # projection multiplies this by the (self-limited) sample rate instead.
+    # 0.0 when the probe did not run (no sys.monitoring, or instrumenter
+    # "none").
+    adaptive_sample_ns: float = 0.0
+    probe_calls: int = 0
+    probe_s: float = 0.0
 
 
 def _time_probe(n: int, repeats: int, instrumenter=None, record: bool = True) -> float:
@@ -174,9 +191,34 @@ def calibrate(
         t = _time_probe(calls, repeats, instrumenter=inst, record=record)
         return max(t - bare, 0.0) / calls * 1e9
 
+    def adaptive_sample_cost() -> float:
+        # Per *recorded pair* cost of the adaptive sampler.  Unsampled calls
+        # never reach a callback (DISABLE retires their location), so the
+        # probe's slowdown is divided by the pairs it actually buffered, not
+        # by the loop's call count.
+        inst = make_instrumenter("adaptive")
+        best = float("inf")
+        for _ in range(repeats):
+            host = _ProbeHost()
+            inst.install(host)
+            try:
+                t0 = time.perf_counter()
+                _probe_loop(calls)
+                dt = time.perf_counter() - t0
+            finally:
+                inst.uninstall()
+            pairs = max(len(host._buf.events) / 2.0, 1.0)
+            best = min(best, max(dt - bare, 0.0) / pairs * 1e9)
+        return best
+
     if instrumenter_name == "sampling":
         cost_full = pair_cost("sampling", period=sampling_period)
         cost_filtered = pair_cost("sampling", record=False, period=sampling_period)
+    elif instrumenter_name == "adaptive":
+        # Priced per recorded pair (see adaptive_sample_ns); filtered
+        # locations retire after one DISABLE hit, so their rate cost is 0.
+        cost_full = 0.0
+        cost_filtered = 0.0
     else:
         cost_full = pair_cost(instrumenter_name)
         cost_filtered = pair_cost(instrumenter_name, record=False)
@@ -186,6 +228,13 @@ def calibrate(
     sampling_sampled = (
         0.0 if instrumenter_name == "none" else pair_cost("sampling", period=1)
     )
+    adaptive_sample = (
+        adaptive_sample_cost()
+        if instrumenter_name != "none" and hasattr(sys, "monitoring")
+        else 0.0
+    )
+    if instrumenter_name == "adaptive":
+        cost_full = adaptive_sample
     result = _CALIBRATION_CACHE[key] = Calibration(
         instrumenter=instrumenter_name,
         sampling_period=sampling_period,
@@ -193,6 +242,7 @@ def calibrate(
         cost_filtered_ns=cost_filtered,
         sampling_base_ns=sampling_base,
         sampling_sampled_ns=max(sampling_sampled, sampling_base),
+        adaptive_sample_ns=adaptive_sample,
         probe_calls=calls,
         probe_s=time.perf_counter() - t_start,
     )
@@ -341,6 +391,12 @@ class Governor:
             return cal.sampling_base_ns + (
                 cal.sampling_sampled_ns - cal.sampling_base_ns
             ) / max(state.period, 1)
+        if state.name == "adaptive":
+            # Cost per *recorded* pair; unsampled calls never fire a
+            # callback, so this only ever multiplies a sample rate (the
+            # observed buffer rate in accounting, the capped target rate in
+            # projection — see _projected).
+            return cal.adaptive_sample_ns
         return cal.cost_full_ns
 
     def _filtered_pair_cost(self, state: _LadderState) -> float:
@@ -349,6 +405,12 @@ class Governor:
             return 0.0
         if state.name == "sampling":
             return cal.sampling_base_ns
+        inst_cls = INSTRUMENTERS.get(state.name)
+        if inst_cls is not None and inst_cls.zero_cost_filtered:
+            # DISABLE retires filtered locations after one hit: excluding a
+            # region removes its cost entirely instead of moving it to a
+            # per-call filtered fast path.
+            return 0.0
         return cal.cost_filtered_ns
 
     def _current_state(self) -> _LadderState:
@@ -372,6 +434,12 @@ class Governor:
         return cost_ns / useful
 
     def _projected(self, state: _LadderState, kept_rate: float, excl_rate: float) -> float:
+        if state.name == "adaptive":
+            # The adaptive sampler is self-limiting: its controller holds
+            # the recorded-pair rate near the configured target no matter
+            # how fast the application calls, so projected cost is bounded
+            # by the target rate, not the call rate.
+            kept_rate = min(kept_rate, self.measurement.config.adaptive_rate)
         cost_per_s = kept_rate * self._pair_cost(state) + excl_rate * self._filtered_pair_cost(
             state
         )

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from typing import Dict, Type
 
+from .adaptive import AdaptiveInstrumenter
 from .base import Instrumenter
 from .monitoring import MonitoringInstrumenter
 from .none import NoneInstrumenter
@@ -17,13 +18,15 @@ INSTRUMENTERS: Dict[str, Type[Instrumenter]] = {
     TraceInstrumenter.name: TraceInstrumenter,
     SamplingInstrumenter.name: SamplingInstrumenter,
     MonitoringInstrumenter.name: MonitoringInstrumenter,
+    AdaptiveInstrumenter.name: AdaptiveInstrumenter,
 }
 
 
 def make_instrumenter(name: str, **kwargs) -> Instrumenter:
     """Instantiate a registered instrumenter (event source) by name —
     ``none`` / ``profile`` / ``trace`` / ``sampling`` (takes ``period=``) /
-    ``monitoring`` (PEP 669, 3.12+).  Raises ``ValueError`` naming the
+    ``monitoring`` (PEP 669, 3.12+) / ``adaptive`` (PEP 669 epoch sampler,
+    3.12+, takes ``target_rate=``).  Raises ``ValueError`` naming the
     available instrumenters on an unknown name."""
     try:
         cls = INSTRUMENTERS[name]
@@ -43,4 +46,5 @@ __all__ = [
     "TraceInstrumenter",
     "SamplingInstrumenter",
     "MonitoringInstrumenter",
+    "AdaptiveInstrumenter",
 ]

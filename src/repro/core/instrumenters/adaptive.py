@@ -1,0 +1,260 @@
+"""Adaptive sampling instrumenter — PEP 669 epochs with per-code backoff.
+
+The governor ladder rung between ``sampling`` and ``none``: where the
+counting sampler still pays a per-call countdown on *every* call, this
+instrumenter pays nothing at all for unsampled calls.  Each callback records
+one sample and returns ``sys.monitoring.DISABLE``, retiring its (code,
+location) until a controller thread calls ``restart_events()`` — so between
+epochs the interpreter runs at native speed, and the steady-state cost is
+bounded by the sample rate, not the call rate.
+
+Two feedback loops shape the sample stream (cf. scalene's adaptive sampling:
+grow the effective period for signals that keep firing, decay so nothing is
+starved forever):
+
+* **Global epoch interval** — the controller compares the observed sample
+  rate against ``target_rate`` (sampled call pairs per second) and
+  doubles/halves the epoch interval within [``min_interval``,
+  ``max_interval``].  Many live code objects -> longer epochs; sparse
+  signal -> shorter epochs.
+* **Per-code period** — a code object sampled in ``grow_streak`` consecutive
+  epochs doubles its personal epoch period (up to ``max_code_period``):
+  persistently hot functions skip whole epochs while rare ones stay at
+  period 1.  Every ``decay_epochs`` epochs the per-code state is cleared so
+  cooled-down regions are re-observed from scratch.
+
+Sampled enters are balanced by a per-code pending count: the matching
+PY_RETURN/PY_YIELD records the exit (a return with nothing pending is
+DISABLEd away).  An exit may land in a later epoch than its enter — the
+recorded span then brackets the true one, which downstream replay already
+tolerates (same approximation class as the counting sampler's shadow stack).
+Filtered verdicts behave exactly like the monitoring instrumenter: DISABLE
+on first hit, zero cost afterwards, re-armed by the refilter hook.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from ..buffer import EV_ENTER, EV_EXIT
+from .base import Instrumenter
+from .monitoring import _TOOL_NAME, acquire_tool_id
+
+DEFAULT_TARGET_RATE = 4000.0  # sampled call pairs per second
+MIN_INTERVAL = 0.002
+MAX_INTERVAL = 0.5
+MAX_CODE_PERIOD = 64  # epochs skipped by the hottest code objects
+GROW_STREAK = 4  # consecutive sampled epochs before the period doubles
+DECAY_EPOCHS = 64  # epochs between per-code state resets
+
+
+class AdaptiveInstrumenter(Instrumenter):
+    name = "adaptive"
+    events_supported = ("call", "return")
+    downgrade_to = "none"
+    zero_cost_filtered = True
+
+    def __init__(self, target_rate: float = DEFAULT_TARGET_RATE, interval: float = 0.01) -> None:
+        if target_rate <= 0:
+            raise ValueError("adaptive target_rate must be > 0 (samples/s)")
+        if not MIN_INTERVAL <= interval <= MAX_INTERVAL:
+            raise ValueError(
+                f"adaptive interval must be in [{MIN_INTERVAL}, {MAX_INTERVAL}]"
+            )
+        self.target_rate = float(target_rate)
+        # Shared cell: the controller adapts it live; exposed for tests.
+        self._interval_cell = [float(interval)]
+        self._measurement = None
+        self._installed = False
+        self._tool_id = None
+        self._regions = None
+        self._nfiltered: list = [0]
+        self._nsampled: list = [0]
+        self._epoch = 0
+        # code object -> [epochs_to_skip, period, streak]
+        self._code_state: dict = {}
+        # code object -> count of sampled enters awaiting their exit
+        self._pending: dict = {}
+        self._stop = threading.Event()
+        self._controller = None
+
+    def filtered_calls(self) -> int:
+        return self._nfiltered[0]
+
+    def sampled_calls(self) -> int:
+        return self._nsampled[0]
+
+    @property
+    def interval(self) -> float:
+        return self._interval_cell[0]
+
+    def _make_callbacks(self, measurement):
+        mon = sys.monitoring
+        DISABLE = mon.DISABLE
+        regions = measurement.regions
+        by_code = regions.by_code
+        register_code = regions.register_code
+        clock = time.perf_counter_ns
+        get_ident = threading.get_ident
+        appends = {}
+        buffers = {}
+
+        def _bind(ident):
+            buf = measurement.thread_buffer()
+            buffers[ident] = buf
+            appends[ident] = buf.events.append
+            return appends[ident]
+
+        def _maybe_flush(ident):
+            buf = buffers[ident]
+            if len(buf.events) >= buf.flush_threshold:
+                buf.flush()
+                appends[ident] = buf.events.append
+
+        nfiltered = self._nfiltered
+        nsampled = self._nsampled
+        code_state = self._code_state
+        pending = self._pending
+
+        def on_start(code, instruction_offset):
+            t = clock()
+            rid = by_code.get(code)
+            if rid is None:
+                rid = register_code(code, None)
+            if rid < 0:
+                nfiltered[0] += 1
+                return DISABLE
+            st = code_state.get(code)
+            if st is None:
+                st = code_state[code] = [0, 1, 0]
+            elif st[0] > 0:
+                # Backed-off code object: sit this epoch out entirely.
+                st[0] -= 1
+                return DISABLE
+            ident = get_ident()
+            append = appends.get(ident)
+            if append is None:
+                append = _bind(ident)
+            append((EV_ENTER, rid, t, 0))
+            _maybe_flush(ident)
+            nsampled[0] += 1
+            pending[code] = pending.get(code, 0) + 1
+            st[2] += 1
+            if st[2] >= GROW_STREAK:
+                st[1] = min(st[1] * 2, MAX_CODE_PERIOD)
+                st[2] = 0
+            st[0] = st[1] - 1
+            return DISABLE
+
+        def on_return(code, instruction_offset, retval):
+            t = clock()
+            n = pending.get(code)
+            if not n:
+                # No sampled enter waiting for this code: go dark until the
+                # next epoch re-arms returns alongside starts.
+                return DISABLE
+            rid = by_code.get(code)
+            if rid is None or rid < 0:
+                # Verdict flipped (refilter) between enter and exit: drop
+                # the orphaned enters rather than record a filtered region.
+                pending.pop(code, None)
+                return DISABLE
+            ident = get_ident()
+            append = appends.get(ident)
+            if append is None:
+                append = _bind(ident)
+            append((EV_EXIT, rid, t, 0))
+            _maybe_flush(ident)
+            if n == 1:
+                del pending[code]
+                return DISABLE
+            pending[code] = n - 1
+            # More enters pending (recursion): keep the return armed.
+            return None
+
+        def on_unwind(code, instruction_offset, exception):
+            # Not locally disableable; balance like a return, return None.
+            on_return(code, instruction_offset, None)
+
+        return on_start, on_return, on_unwind
+
+    # -- controller ---------------------------------------------------------
+
+    def _controller_loop(self) -> None:
+        mon = sys.monitoring
+        last = 0
+        while not self._stop.wait(self._interval_cell[0]):
+            if not self._installed:
+                return
+            n = self._nsampled[0]
+            delta = n - last
+            last = n
+            interval = self._interval_cell[0]
+            rate = delta / interval
+            if rate > 2.0 * self.target_rate:
+                self._interval_cell[0] = min(interval * 2.0, MAX_INTERVAL)
+            elif delta and rate < 0.5 * self.target_rate:
+                self._interval_cell[0] = max(interval / 2.0, MIN_INTERVAL)
+            self._epoch += 1
+            if self._epoch % DECAY_EPOCHS == 0:
+                self._code_state.clear()
+            try:
+                mon.restart_events()
+            except Exception:  # pragma: no cover - interpreter shutdown
+                return
+
+    def _rearm(self) -> None:
+        if self._installed:
+            sys.monitoring.restart_events()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def install(self, measurement) -> None:
+        mon = sys.monitoring
+        tool_id = acquire_tool_id(mon, _TOOL_NAME)
+        self._tool_id = tool_id
+        self._measurement = measurement
+        self._regions = measurement.regions
+        self._code_state = {}
+        self._pending = {}
+        on_start, on_return, on_unwind = self._make_callbacks(measurement)
+        ev = mon.events
+        mon.register_callback(tool_id, ev.PY_START, on_start)
+        mon.register_callback(tool_id, ev.PY_RESUME, on_start)
+        mon.register_callback(tool_id, ev.PY_RETURN, on_return)
+        mon.register_callback(tool_id, ev.PY_YIELD, on_return)
+        mon.register_callback(tool_id, ev.PY_UNWIND, on_unwind)
+        mon.set_events(
+            tool_id, ev.PY_START | ev.PY_RESUME | ev.PY_RETURN | ev.PY_YIELD | ev.PY_UNWIND
+        )
+        # Clear DISABLE state left by prior measurements/probes (it lives on
+        # code objects, not the tool id).
+        mon.restart_events()
+        self._regions.add_refilter_hook(self._rearm)
+        self._installed = True
+        self._stop = threading.Event()
+        self._controller = threading.Thread(
+            target=self._controller_loop, name="repro-adaptive", daemon=True
+        )
+        self._controller.start()
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        self._installed = False
+        self._stop.set()
+        if self._controller is not None:
+            self._controller.join(timeout=1.0)
+            self._controller = None
+        if self._regions is not None:
+            self._regions.remove_refilter_hook(self._rearm)
+            self._regions = None
+        mon = sys.monitoring
+        ev = mon.events
+        mon.set_events(self._tool_id, 0)
+        for kind in (ev.PY_START, ev.PY_RESUME, ev.PY_RETURN, ev.PY_YIELD, ev.PY_UNWIND):
+            mon.register_callback(self._tool_id, kind, None)
+        mon.free_tool_id(self._tool_id)
+        self._tool_id = None

@@ -27,6 +27,13 @@ class Instrumenter(ABC):
     #: next rung of the overhead governor's downgrade ladder (``None`` =
     #: nothing cheaper exists).  Set per subclass.
     downgrade_to: "str | None" = None
+    #: True when filtered verdicts stop costing anything after the first hit
+    #: (PEP 669 instrumenters return ``sys.monitoring.DISABLE`` and the
+    #: interpreter retires the location).  The governor's projection model
+    #: then prices excluded regions at zero instead of the calibrated
+    #: filtered-path cost, which is what makes excluding offenders a real
+    #: fix rather than a cost shuffle.
+    zero_cost_filtered: bool = False
 
     @abstractmethod
     def install(self, measurement: "Measurement") -> None:

@@ -13,6 +13,20 @@ PY_YIELD/PY_RESUME so generator suspension balances like ``sys.setprofile``'s
 call/return semantics).  C-function events are intentionally not subscribed —
 subscribing ``CALL`` would reintroduce per-call argument materialization and
 most of the cost this instrumenter exists to avoid.
+
+Filtered regions cost zero after the first hit: callbacks return
+``sys.monitoring.DISABLE`` for code objects whose filter verdict is
+``FILTERED``, so the interpreter stops dispatching that (code, location)
+entirely — no callback, no dict lookup, nothing.  The exception is
+``PY_UNWIND``, which CPython defines as not locally disableable (returning
+DISABLE from it raises ValueError); its callback does the balancing work and
+returns None — exceptional exits from filtered code stay a per-event cost,
+but they are rare by construction.  DISABLE state lives on the code object
+and survives ``free_tool_id``, so ``install`` calls ``restart_events()`` to
+clear verdicts left over from a previous measurement (or calibration probe)
+in the same process; a registered :meth:`RegionRegistry.add_refilter_hook`
+re-arms events whenever the governor tightens the filter on a live
+measurement, giving every tool a fresh first hit under the new verdicts.
 """
 
 from __future__ import annotations
@@ -27,22 +41,54 @@ from .base import Instrumenter
 _TOOL_NAME = "repro-monitor"
 
 
+def acquire_tool_id(mon, name: str) -> int:
+    """Claim a free PEP 669 tool id, never stealing a foreign tool.
+
+    Prefers ``PROFILER_ID`` (this *is* a profiler), then walks the remaining
+    ids 0..5; an id whose ``get_tool`` is non-None belongs to someone else
+    (debugger, coverage, another profiler) and is skipped — ``free_tool_id``
+    on it would silently unregister that tool.  Raises ``RuntimeError``
+    naming the holders when all six ids are taken.
+    """
+    candidates = [mon.PROFILER_ID] + [i for i in range(6) if i != mon.PROFILER_ID]
+    for tool_id in candidates:
+        if mon.get_tool(tool_id) is not None:
+            continue
+        try:
+            mon.use_tool_id(tool_id, name)
+        except ValueError:  # lost a race for the id; try the next one
+            continue
+        return tool_id
+    holders = ", ".join(
+        f"{i}={mon.get_tool(i)!r}" for i in range(6) if mon.get_tool(i) is not None
+    )
+    raise RuntimeError(
+        f"no free sys.monitoring tool id for {name!r} (all in use: {holders})"
+    )
+
+
 class MonitoringInstrumenter(Instrumenter):
     name = "monitoring"
     events_supported = ("call", "return")
     # Governor downgrade rung: exhaustive PEP 669 events -> counting sampler.
     downgrade_to = "sampling"
+    # Filtered verdicts cost nothing per call: the callback returns DISABLE
+    # on first hit and the interpreter never dispatches that location again.
+    zero_cost_filtered = True
 
     def __init__(self) -> None:
         self._measurement = None
         self._installed = False
         self._tool_id = None
+        self._regions = None
         self._nfiltered: list = [0]
 
     def filtered_calls(self) -> int:
         return self._nfiltered[0]
 
     def _make_callbacks(self, measurement):
+        mon = sys.monitoring
+        DISABLE = mon.DISABLE
         regions = measurement.regions
         by_code = regions.by_code
         register_code = regions.register_code
@@ -78,10 +124,12 @@ class MonitoringInstrumenter(Instrumenter):
                     append = _bind(ident)
                 append((EV_ENTER, rid, t, 0))
                 _maybe_flush(ident)
-            else:
-                # Verdict-miss count for the governor's residual-cost
-                # observation.
-                nfiltered[0] += 1
+                return None
+            # Verdict-miss count for the governor's residual-cost
+            # observation: at most one per (code, location) per
+            # restart_events epoch — DISABLE retires the location.
+            nfiltered[0] += 1
+            return DISABLE
 
         def on_return(code, instruction_offset, retval):
             t = clock()
@@ -95,20 +143,39 @@ class MonitoringInstrumenter(Instrumenter):
                     append = _bind(ident)
                 append((EV_EXIT, rid, t, 0))
                 _maybe_flush(ident)
+                return None
+            return DISABLE
 
         def on_unwind(code, instruction_offset, exception):
-            on_return(code, instruction_offset, None)
+            # PY_UNWIND is not locally disableable (returning DISABLE raises
+            # ValueError), so exceptional exits always pay the callback; the
+            # filtered path just declines to record.
+            rid = by_code.get(code)
+            if rid is None:
+                rid = register_code(code, None)
+            if rid >= 0:
+                t = clock()
+                ident = get_ident()
+                append = appends.get(ident)
+                if append is None:
+                    append = _bind(ident)
+                append((EV_EXIT, rid, t, 0))
+                _maybe_flush(ident)
 
         return on_start, on_return, on_unwind
 
+    def _rearm(self) -> None:
+        """Refilter hook: re-enable every DISABLEd location so tightened
+        verdicts get their one fresh hit (and then go dark again)."""
+        if self._installed:
+            sys.monitoring.restart_events()
+
     def install(self, measurement) -> None:
         mon = sys.monitoring
-        tool_id = mon.PROFILER_ID
-        if mon.get_tool(tool_id) is not None:  # pragma: no cover - defensive
-            mon.free_tool_id(tool_id)
-        mon.use_tool_id(tool_id, _TOOL_NAME)
+        tool_id = acquire_tool_id(mon, _TOOL_NAME)
         self._tool_id = tool_id
         self._measurement = measurement
+        self._regions = measurement.regions
         on_start, on_return, on_unwind = self._make_callbacks(measurement)
         ev = mon.events
         mon.register_callback(tool_id, ev.PY_START, on_start)
@@ -119,15 +186,24 @@ class MonitoringInstrumenter(Instrumenter):
         mon.set_events(
             tool_id, ev.PY_START | ev.PY_RESUME | ev.PY_RETURN | ev.PY_YIELD | ev.PY_UNWIND
         )
+        # DISABLE state is per (code, location) and survives tool-id reuse:
+        # a previous measurement (or the calibration probe) in this process
+        # may have retired locations this measurement must observe.
+        mon.restart_events()
+        self._regions.add_refilter_hook(self._rearm)
         self._installed = True
 
     def uninstall(self) -> None:
         if not self._installed:
             return
+        self._installed = False
+        if self._regions is not None:
+            self._regions.remove_refilter_hook(self._rearm)
+            self._regions = None
         mon = sys.monitoring
         ev = mon.events
         mon.set_events(self._tool_id, 0)
         for kind in (ev.PY_START, ev.PY_RESUME, ev.PY_RETURN, ev.PY_YIELD, ev.PY_UNWIND):
             mon.register_callback(self._tool_id, kind, None)
         mon.free_tool_id(self._tool_id)
-        self._installed = False
+        self._tool_id = None

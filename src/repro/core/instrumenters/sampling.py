@@ -32,7 +32,9 @@ from .base import Instrumenter
 class SamplingInstrumenter(Instrumenter):
     name = "sampling"
     events_supported = ("call", "return")
-    downgrade_to = "none"
+    # On 3.12+ the next rung down is the PEP 669 adaptive sampler (zero cost
+    # for unsampled calls); older interpreters fall straight through to none.
+    downgrade_to = "adaptive" if hasattr(sys, "monitoring") else "none"
 
     def __init__(self, period: int = 97) -> None:
         if period < 1:
@@ -102,6 +104,8 @@ class SamplingInstrumenter(Instrumenter):
                     rid = register_code(code, frame)
                 if rid >= 0:
                     append((EV_ENTER, rid, clock(), 0))
+                    if len(events) >= threshold:
+                        flush()
                     push(True)
                 else:
                     # Verdict-miss count (sampled calls only) so the

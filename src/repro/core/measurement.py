@@ -56,6 +56,10 @@ class MeasurementConfig:
     filter_spec: str = ""
     flush_threshold: int = 1 << 16
     sampling_period: int = 97
+    # Target recorded-pair rate (samples/s) for the "adaptive" instrumenter
+    # (PEP 669 epoch sampler, 3.12+); also caps the governor's projected
+    # cost for the adaptive ladder rung.
+    adaptive_rate: float = 4000.0
     buffer_strategy: str = "list"
     # Memory monitoring (repro.core.memsys): poller period / top-N region
     # table size.  The substrate itself is off unless "memory" appears in
@@ -119,6 +123,7 @@ class MeasurementConfig:
             filter_spec=get("FILTER", cls.filter_spec),
             flush_threshold=int(get("FLUSH", cls.flush_threshold)),
             sampling_period=int(get("SAMPLING_PERIOD", cls.sampling_period)),
+            adaptive_rate=float(get("ADAPTIVE_RATE", cls.adaptive_rate)),
             buffer_strategy=get("BUFFER", cls.buffer_strategy),
             memory_period=float(get("MEMORY_PERIOD", cls.memory_period)),
             memory_topn=int(get("MEMORY_TOPN", cls.memory_topn)),
@@ -139,6 +144,7 @@ class MeasurementConfig:
             ENV_PREFIX + "FILTER": self.filter_spec,
             ENV_PREFIX + "FLUSH": str(self.flush_threshold),
             ENV_PREFIX + "SAMPLING_PERIOD": str(self.sampling_period),
+            ENV_PREFIX + "ADAPTIVE_RATE": str(self.adaptive_rate),
             ENV_PREFIX + "BUFFER": self.buffer_strategy,
             ENV_PREFIX + "MEMORY": "1" if "memory" in self.substrates else "0",
             ENV_PREFIX + "MEMORY_PERIOD": str(self.memory_period),
@@ -205,6 +211,8 @@ class Measurement:
                 self._substrates.append(make_substrate(name))
         if config.instrumenter == "sampling":
             self.instrumenter = make_instrumenter("sampling", period=config.sampling_period)
+        elif config.instrumenter == "adaptive":
+            self.instrumenter = make_instrumenter("adaptive", target_rate=config.adaptive_rate)
         else:
             self.instrumenter = make_instrumenter(config.instrumenter)
         if config.budget > 0:
@@ -384,6 +392,8 @@ class Measurement:
         self.instrumenter.uninstall()
         if name == "sampling" and "period" not in kwargs:
             kwargs["period"] = self.config.sampling_period
+        elif name == "adaptive" and "target_rate" not in kwargs:
+            kwargs["target_rate"] = self.config.adaptive_rate
         self.instrumenter = make_instrumenter(name, **kwargs)
         self.config.instrumenter = name
         if self.started and not self.finalized:

@@ -98,6 +98,12 @@ class RegionRegistry:
         self.by_code: Dict[Any, int] = {}
         self.by_cfunc: Dict[Any, int] = {}
         self._user: Dict[str, int] = {}
+        # Called after refilter() flips verdicts.  PEP 669 instrumenters
+        # register sys.monitoring.restart_events here: their DISABLE state
+        # caches the *old* verdicts on code locations, and without a re-arm a
+        # tightened filter would only take effect on locations that happen to
+        # fire again before being retired.
+        self._refilter_hooks: List[Callable[[], None]] = []
 
     # -- cold paths -------------------------------------------------------
 
@@ -181,7 +187,25 @@ class RegionRegistry:
                     if not self._decide(r.module, r.name, r.file):
                         table[key] = FILTERED
                         changed.append(rid)
+            hooks = list(self._refilter_hooks) if changed else []
+        for hook in hooks:
+            # Outside the lock: restart_events() re-dispatches retired
+            # locations whose callbacks re-enter registration.
+            hook()
         return changed
+
+    def add_refilter_hook(self, hook: Callable[[], None]) -> None:
+        """Register ``hook`` to run after :meth:`refilter` flips verdicts."""
+        with self._lock:
+            if hook not in self._refilter_hooks:
+                self._refilter_hooks.append(hook)
+
+    def remove_refilter_hook(self, hook: Callable[[], None]) -> None:
+        with self._lock:
+            try:
+                self._refilter_hooks.remove(hook)
+            except ValueError:
+                pass
 
     # -- introspection ----------------------------------------------------
 

@@ -199,6 +199,39 @@ def test_stale_worker_thread_callback_self_removes(tmp_path, instrumenter):
         th.join()
 
 
+def test_sampling_enter_path_flushes_at_threshold(tmp_path):
+    """Regression: the sampled-enter branch must honor flush_threshold too.
+
+    It used to flush only on exits, so an enter-heavy phase (deep recursion:
+    hundreds of enters before the first return) grew the live buffer far past
+    the threshold — unbounded memory on pathological call shapes."""
+    d = str(tmp_path / "flushsym")
+    m = rmon.init(
+        instrumenter="sampling",
+        run_dir=d,
+        sampling_period=1,
+        flush_threshold=64,
+        # no substrates: a 600-deep call tree is a buffer-bound test, not a
+        # profile-replay one (tree_dict would recurse past the stack limit)
+        substrates=(),
+    )
+    peak = []
+
+    def deep(k):
+        if k == 0:
+            # at the recursion base ~600 sampled enters have been appended
+            # with zero exits in between
+            peak.append(max(len(b) for b in m._buffers))
+            return 0
+        return deep(k - 1) + 1
+
+    try:
+        assert deep(600) == 600
+    finally:
+        rmon.finalize()
+    assert peak and peak[0] <= 64 + 8  # bounded by the threshold, not ~600
+
+
 def test_generator_balance_under_profile(tmp_path):
     # setprofile fires return on yield and call on resume; profiles must stay
     # balanced through generator suspension.

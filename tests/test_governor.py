@@ -56,6 +56,7 @@ def test_calibration_shape_and_cache():
     assert isinstance(cal, Calibration)
     assert cal.cost_full_ns >= 0 and cal.cost_filtered_ns >= 0
     assert cal.sampling_sampled_ns >= cal.sampling_base_ns >= 0
+    assert cal.adaptive_sample_ns >= 0  # 0.0 when sys.monitoring is absent
     assert cal.probe_s > 0
     # second call with the same key hits the process-wide cache
     again = calibrate("profile", calls=500, repeats=2)
@@ -71,13 +72,26 @@ def test_calibration_none_is_free():
 
 
 def test_downgrade_ladder_declared():
+    import sys
+
     from repro.core.instrumenters import INSTRUMENTERS
 
     assert INSTRUMENTERS["trace"].downgrade_to == "profile"
     assert INSTRUMENTERS["profile"].downgrade_to == "sampling"
     assert INSTRUMENTERS["monitoring"].downgrade_to == "sampling"
-    assert INSTRUMENTERS["sampling"].downgrade_to == "none"
+    # the adaptive rung needs PEP 669; without it the sampler drops to none
+    if hasattr(sys, "monitoring"):
+        assert INSTRUMENTERS["sampling"].downgrade_to == "adaptive"
+    else:
+        assert INSTRUMENTERS["sampling"].downgrade_to == "none"
+    assert INSTRUMENTERS["adaptive"].downgrade_to == "none"
     assert INSTRUMENTERS["none"].downgrade_to is None
+    # the zero-cost filtered tier is the PEP 669 family only
+    assert INSTRUMENTERS["monitoring"].zero_cost_filtered
+    assert INSTRUMENTERS["adaptive"].zero_cost_filtered
+    assert not INSTRUMENTERS["profile"].zero_cost_filtered
+    assert not INSTRUMENTERS["trace"].zero_cost_filtered
+    assert not INSTRUMENTERS["sampling"].zero_cost_filtered
 
 
 def test_sampling_set_period_live(tmp_path):
@@ -195,6 +209,21 @@ def test_budget_env_and_cli_roundtrip():
 
     ns = build_parser().parse_args(["--budget", "0.05", "target.py"])
     assert ns.budget == 0.05
+
+
+def test_adaptive_rate_env_and_cli_roundtrip():
+    cfg = MeasurementConfig(adaptive_rate=1234.0)
+    env = cfg.to_env()
+    assert env["REPRO_MONITOR_ADAPTIVE_RATE"] == "1234.0"
+    back = MeasurementConfig.from_env(env)
+    assert back.adaptive_rate == 1234.0
+    from repro.core.bootstrap import build_parser
+
+    ns = build_parser().parse_args(
+        ["--instrumenter", "adaptive", "--adaptive-rate", "800", "target.py"]
+    )
+    assert ns.instrumenter == "adaptive"
+    assert ns.adaptive_rate == 800.0
 
 
 def test_budget_zero_disables_governor(tmp_path):
