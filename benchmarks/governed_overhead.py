@@ -224,12 +224,81 @@ def check_adaptive_rung(n: int, budget: float = BUDGET) -> Dict[str, object]:
     }
 
 
+def check_static_plan(n: int, budget: float = BUDGET) -> Dict[str, object]:
+    """Warm-start check (repro.core.staticpass): plan the case-2 kernel
+    ahead of run, then run the same governed workload cold and plan-seeded.
+
+    The planner classifies ``add`` as trivial+hot and pre-excludes it, so
+    the plan-seeded governor starts with the flood already dammed: it must
+    converge with *strictly fewer* escalation steps than the cold run,
+    which has to discover the same verdict online (first flush, exclude
+    rung) before its projection fits the budget."""
+    from repro.core.staticpass import build_plan, save_plan
+
+    tmp = tempfile.mkdtemp(prefix="repro-planbench-")
+    # The kernel must exist as a real file under its runtime module name:
+    # the plan's exclude patterns carry both the dotted module and the file
+    # stem, and both are derived from this path.
+    kpath = os.path.join(tmp, "case2_kernel.py")
+    with open(kpath, "w") as fh:
+        fh.write(CASES["case2"])
+    plan = build_plan([kpath])
+    plan_path = save_plan(plan, os.path.join(tmp, "static_plan.json"))
+    assert any("add" in p for p in plan["filter"]["patterns"]), (
+        f"planner did not exclude the hot trivial kernel: "
+        f"{plan['filter']['patterns']}"
+    )
+
+    def governed(static_plan: str = "") -> Tuple[Dict[str, object], int]:
+        code = compile(CASES["case2"], kpath, "exec")
+        cfg = MeasurementConfig(
+            instrumenter="profile", substrates=(),
+            run_dir=tempfile.mkdtemp(prefix="repro-governed-"),
+            flush_threshold=FLUSH, budget=budget, static_plan=static_plan,
+        )
+        m = Measurement(cfg)
+        argv_saved = sys.argv
+        sys.argv = ["case", str(n)]
+        try:
+            m.start()
+            exec(code, {"__name__": "case2_kernel", "__file__": kpath})
+            m.stop()
+        finally:
+            sys.argv = argv_saved
+            m.finalize()
+        doc = load_governor(m.run_dir)
+        assert doc is not None, "governed run wrote no governor.json"
+        steps = sum(len(a["steps"]) for a in doc.get("actions", []))
+        return doc, steps
+
+    cold_doc, cold_steps = governed()
+    warm_doc, warm_steps = governed(static_plan=plan_path)
+    assert warm_doc.get("static_plan"), "plan-seeded run lost its plan section"
+    assert not cold_doc.get("static_plan"), "cold run claims a plan"
+    assert warm_steps < cold_steps, (
+        f"plan-seeded run did not save escalation work: "
+        f"{warm_steps} steps warm vs {cold_steps} cold"
+    )
+    return {
+        "plan_patterns": plan["filter"]["patterns"],
+        "cold_steps": cold_steps,
+        "warm_steps": warm_steps,
+        "cold_actions": len(cold_doc.get("actions", [])),
+        "warm_actions": len(warm_doc.get("actions", [])),
+        "warm_final": warm_doc.get("final_instrumenter"),
+        "cold_final": cold_doc.get("final_instrumenter"),
+    }
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--smoke", action="store_true",
                    help="small iteration counts + loose convergence asserts (CI)")
     p.add_argument("--budget", type=float, default=BUDGET)
     p.add_argument("--repeats", type=int, default=None)
+    p.add_argument("--static-plan", action="store_true", dest="static_plan",
+                   help="also run the plan-seeded (repro.core.staticpass) "
+                        "vs cold warm-start comparison (always on in --smoke)")
     p.add_argument("--out", default="benchmarks/artifacts/governed_overhead.json")
     args = p.parse_args(argv)
 
@@ -275,6 +344,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"event rate with suggested filter: {artifact['events_filtered']} vs "
           f"{artifact['events_unfiltered']} unfiltered")
 
+    static_plan = None
+    if args.static_plan or args.smoke:
+        static_plan = check_static_plan(ns[-1], budget)
+        print(f"static plan warm start: {static_plan['warm_steps']} escalation "
+              f"steps vs {static_plan['cold_steps']} cold "
+              f"(plan pre-excluded {len(static_plan['plan_patterns'])} pattern(s))")
+
     adaptive_rung = None
     if hasattr(sys, "monitoring"):
         adaptive_rung = check_adaptive_rung(max(ns[-1], 120_000), budget)
@@ -295,6 +371,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         "steady": steady,
         "converged": bool(converged),
         "filter_check": artifact,
+        "static_plan": static_plan,
         "adaptive_rung": adaptive_rung,
     }
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

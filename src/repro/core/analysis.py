@@ -10,11 +10,16 @@ comparison is programmatic and drives the §Perf loop).
     PYTHONPATH=src python -m repro.core.analysis governor RUN_DIR
     PYTHONPATH=src python -m repro.core.analysis suggest-filter RUN_DIR
     PYTHONPATH=src python -m repro.core.analysis report RUN_DIR [--diff BASE]
+    PYTHONPATH=src python -m repro.core.analysis plan PATHS... [--out FILE]
+    PYTHONPATH=src python -m repro.core.analysis lint PATHS...
 
 Every subcommand follows one error convention: a missing/unreadable artifact
-raises :class:`MissingArtifact`, which the CLI renders as a one-line
-``error: ...`` on stderr and **exit code 2** (so scripts can tell "wrong
-substrate set" from real failures, which keep their tracebacks).
+(or a bad path handed to ``plan``/``lint``) raises :class:`MissingArtifact`,
+which the CLI renders as a one-line ``error: ...`` on stderr and
+**exit code 2** (so scripts can tell "wrong substrate set" from real
+failures, which keep their tracebacks).  ``lint`` additionally exits **1** when violations remain
+and **0** when clean — the same contract as every mainstream linter, so it
+drops into CI gates unchanged.
 """
 
 from __future__ import annotations
@@ -509,6 +514,29 @@ def build_parser():
     rp.add_argument("--smoke", action="store_true",
                     help="record a tiny throwaway run, report it, and verify "
                          "the embedded payload round-trips (CI gate)")
+    pl = sub.add_parser(
+        "plan",
+        help="static instrumentation plan: scan sources (no execution), "
+             "classify every function, emit static_plan.json",
+    )
+    pl.add_argument("paths", nargs="+",
+                    help="package directories and/or .py files to scan")
+    pl.add_argument("--out", default=None,
+                    help="plan output path (default: ./static_plan.json; "
+                         "directories resolve to static_plan.json inside)")
+    pl.add_argument("--top", type=int, default=15,
+                    help="predicted-offender rows to print")
+    pl.add_argument("--smoke", action="store_true",
+                    help="build + verify the plan round-trip without writing "
+                         "it (CI gate); --out still writes when given")
+    ln = sub.add_parser(
+        "lint",
+        help="measurement-API lint: report misuse (never-entered regions, "
+             "foreign hooks, threads before install, ...) with stable rule "
+             "ids; exit 1 on violations",
+    )
+    ln.add_argument("paths", nargs="+",
+                    help="package directories and/or .py files to lint")
     return p
 
 
@@ -555,6 +583,31 @@ def main(argv: Optional[List[str]] = None) -> int:
                 import webbrowser
 
                 webbrowser.open(f"file://{os.path.abspath(path)}")
+        elif ns.cmd == "plan":
+            from .staticpass import build_plan, render_plan, save_plan, verify_plan
+
+            plan = build_plan(ns.paths)
+            verify_plan(plan)
+            print(render_plan(plan, top=ns.top))
+            if ns.smoke and ns.out is None:
+                print("plan smoke OK (round-trip verified, nothing written)")
+            else:
+                out = ns.out or os.path.join(os.curdir, "static_plan.json")
+                if os.path.isdir(out):
+                    from .staticpass import ARTIFACT
+
+                    out = os.path.join(out, ARTIFACT)
+                print(f"plan written to {save_plan(plan, out)}")
+        elif ns.cmd == "lint":
+            from .staticpass import lint_paths
+
+            violations = lint_paths(ns.paths)
+            for v in violations:
+                print(v.format())
+            if violations:
+                print(f"{len(violations)} violation(s)", file=sys.stderr)
+                return 1
+            print("clean: no measurement-API violations")
         else:
             for name, vals in hotspots(ns.run_dir, ns.top):
                 print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")

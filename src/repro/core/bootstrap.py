@@ -81,6 +81,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--report", action="store_true",
                    help="emit the unified HTML report (report.html) into the "
                         "run dir at finalize (REPRO_MONITOR_REPORT=1)")
+    p.add_argument("--static-plan", dest="static_plan", default="",
+                   help="static_plan.json from `analysis plan`: merges its "
+                        "auto-excludes into the filter and warm-starts the "
+                        "governor (REPRO_MONITOR_STATIC_PLAN)")
     p.add_argument("target", help="script path, or module name with -m style 'mod:pkg.mod'")
     p.add_argument("args", nargs=argparse.REMAINDER, help="target application arguments")
     return p
@@ -116,6 +120,7 @@ def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
         experiment=ns.experiment,
         chrome_export=not ns.no_chrome,
         report=ns.report,
+        static_plan=ns.static_plan,
     )
     env.update(config.to_env())
     env[ENV_PREFIX + "ENABLE"] = "1"

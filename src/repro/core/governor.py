@@ -353,7 +353,30 @@ class Governor:
         self._total_residual = 0.0
         self._residual_mark = 0  # last time residual was folded into totals
 
+        # Static-plan warm start (repro.core.staticpass): predicted offender
+        # region names (both module forms) pre-qualified for the exclude
+        # rung, plus a provenance summary for the governor document.
+        self._plan_offenders: set = set()
+        self._plan_meta: Optional[Dict[str, Any]] = None
+
     # -- lifecycle ----------------------------------------------------------
+
+    def seed_static_plan(self, plan: Dict[str, Any]) -> None:
+        """Warm-start from a static plan (``staticpass.apply_plan`` calls
+        this).  Predicted offenders become exclude-rung candidates without
+        waiting for observed leaf-duration evidence — the short-duration
+        verdict was reached statically, so the first over-budget window can
+        act on them instead of burning a ladder rung on a downgrade."""
+        from .staticpass import offender_names, plan_exclude_patterns
+
+        self._plan_offenders = offender_names(plan)
+        self._plan_meta = {
+            "generator": plan.get("generator", "?"),
+            "functions": plan.get("functions", 0),
+            "verdicts": dict(plan.get("verdicts", {})),
+            "predicted_offenders": len(plan.get("predicted_offenders", [])),
+            "patterns": len(plan_exclude_patterns(plan)),
+        }
 
     def calibrate_startup(self) -> Calibration:
         cfg = self.measurement.config
@@ -637,7 +660,10 @@ class Governor:
         Short-duration means the fastest observed leaf span is under the
         cap; regions never seen as a leaf are skipped — once their callees
         are excluded they become leaves in later batches and turn eligible
-        (the ladder's downgrade rungs cover the meantime)."""
+        (the ladder's downgrade rungs cover the meantime).  Exception: a
+        region the static plan predicted as an offender is pre-qualified
+        (``seed_static_plan``) — the short-duration verdict was reached
+        statically, so no observed-leaf evidence is required."""
         n = self._visits.size
         regions = self.measurement.regions
         order = np.argsort(-self._est_cost[:n])
@@ -646,14 +672,15 @@ class Governor:
             rid = int(rid)
             if self._visits[rid] <= 0 or rid in exclude_ids:
                 continue
-            if not self._leaf_min[rid] <= self.offender_max_leaf_ns:
-                continue
             try:
                 region = regions.get(rid)
             except KeyError:
                 continue
             if region.kind == KIND_USER:
                 continue
+            if not self._leaf_min[rid] <= self.offender_max_leaf_ns:
+                if f"{region.module}:{region.name}" not in self._plan_offenders:
+                    continue
             out.append(rid)
         return out
 
@@ -845,6 +872,9 @@ class Governor:
                 ),
             },
             "suggested_filter": self.suggest_filter(),
+            # None when no plan seeded this run — report renders the
+            # plan-vs-observed section only for plan-seeded runs.
+            "static_plan": self._plan_meta,
         })
 
     def suggest_filter(self) -> str:

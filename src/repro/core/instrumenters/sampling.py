@@ -18,6 +18,8 @@ The period lives in a shared mutable cell read at every countdown *reset*
 (not per event), so the overhead governor can raise it on a live measurement
 (``set_period``) and every thread's callback converges within one period.
 """
+# repro-lint: allow-file=SP201 — this module IS an instrumenter; installing
+# the interpreter hook is its job, not a collision with itself.
 
 from __future__ import annotations
 

@@ -7,6 +7,8 @@ measures this instrumenter to be strictly more expensive than
 not the default; we reproduce that comparison in
 ``benchmarks/overhead_case1.py`` / ``overhead_case2.py``.
 """
+# repro-lint: allow-file=SP201 — this module IS an instrumenter; installing
+# the interpreter hook is its job, not a collision with itself.
 
 from __future__ import annotations
 

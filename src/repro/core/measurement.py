@@ -86,6 +86,12 @@ class MeasurementConfig:
     # just written, which launch scripts may prefer to do offline via
     # ``python -m repro.core.analysis report``.
     report: bool = False
+    # Path to a static_plan.json (repro.core.staticpass) produced by
+    # ``analysis plan``.  When set, the plan's exclude patterns merge into
+    # the filter as runtime excludes (same ``exclude!`` precedence the
+    # governor uses) and its predicted offenders warm-start the governor.
+    # The plan is copied into the run dir at start() for provenance.
+    static_plan: str = ""
 
     def __post_init__(self):
         if self.topology is None:
@@ -134,6 +140,7 @@ class MeasurementConfig:
             chrome_export=get("CHROME", "1") not in ("0", "false", ""),
             keep_series=get("SERIES", "1") not in ("0", "false", ""),
             report=get("REPORT", "0") not in ("0", "false", ""),
+            static_plan=get("STATIC_PLAN", cls.static_plan),
         )
 
     def to_env(self) -> Dict[str, str]:
@@ -158,6 +165,8 @@ class MeasurementConfig:
         env.update(self.topology.to_env())  # RANK / WORLD_SIZE / LOCAL_RANK / MESH
         if self.run_dir:
             env[ENV_PREFIX + "RUN_DIR"] = self.run_dir
+        if self.static_plan:
+            env[ENV_PREFIX + "STATIC_PLAN"] = self.static_plan
         return env
 
 
@@ -221,6 +230,17 @@ class Measurement:
             self.governor: Optional[Governor] = Governor(self, config.budget)
         else:
             self.governor = None
+        #: The loaded static plan dict (repro.core.staticpass), or None.
+        #: Set by apply_plan — either here via config.static_plan or later
+        #: by a caller holding an already-loaded plan.
+        self.static_plan: Optional[Dict[str, Any]] = None
+        if config.static_plan:
+            from .staticpass import apply_plan, load_plan
+
+            # Before the instrumenter installs: plan excludes must be in the
+            # filter before any region verdict is cached.  A bad plan path
+            # raises MissingArtifact here, at construction, not mid-run.
+            apply_plan(self, load_plan(config.static_plan))
         self._buffer_cls = BUFFER_STRATEGIES[config.buffer_strategy]
         self.run_dir = config.run_dir or os.path.join(
             config.out_dir,
@@ -285,6 +305,13 @@ class Measurement:
         }
         for sub in self._substrates:
             sub.open(self.run_dir, meta)
+        if self.static_plan is not None:
+            # Provenance copy: the run dir records exactly which plan shaped
+            # this run's filter, next to the artifacts it shaped.
+            from .staticpass import ARTIFACT as _PLAN_ARTIFACT
+
+            with open(os.path.join(self.run_dir, _PLAN_ARTIFACT), "w") as fh:
+                json.dump(self.static_plan, fh, indent=1)
         self.started = True
         if self.governor is not None:
             # Calibrate before the instrumenter installs: the probe runs

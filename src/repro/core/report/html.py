@@ -362,6 +362,53 @@ def _governor_section(doc: Dict[str, Any]) -> str:
     return "".join(out)
 
 
+def _plan_section(doc: Dict[str, Any]) -> str:
+    plan = doc.get("plan")
+    if not plan:
+        return ""
+    v = plan.get("verdicts", {})
+    out = ["<h2>Static plan vs observed</h2>"]
+    out.append(
+        '<p class="sub">'
+        f"planned ahead of run over {plan.get('files', 0)} files / "
+        f"{plan.get('functions', 0)} functions: "
+        f"{v.get('exclude', 0)} auto-excluded, {v.get('sample', 0)} "
+        f"sampler-friendly, {v.get('keep', 0)} kept "
+        f"({plan.get('patterns', 0)} filter patterns)</p>"
+    )
+    vs = plan.get("vs_observed") or {}
+    if not vs.get("governed"):
+        out.append(
+            '<p class="note">no governor ran — the plan\'s excludes applied, '
+            "but there is no runtime verdict to compare against.</p>"
+        )
+        return "".join(out)
+    rows = []
+    for label, names, note in (
+        ("pre-excluded", vs.get("pre_excluded", []),
+         "excluded by the plan before any event fired"),
+        ("confirmed", vs.get("confirmed", []),
+         "predicted offenders the governor also excluded at runtime"),
+        ("unconfirmed", vs.get("unconfirmed", []),
+         "predicted offenders the governor observed but left alone"),
+        ("unpredicted", vs.get("unpredicted", []),
+         "runtime excludes the plan missed"),
+    ):
+        shown = ", ".join(names[:8]) + ("…" if len(names) > 8 else "")
+        rows.append(
+            f'<tr><td class="l">{esc(label)}</td>'
+            f'<td data-v="{len(names)}">{len(names)}</td>'
+            f'<td class="l">{esc(shown or "—")}</td>'
+            f'<td class="l">{esc(note)}</td></tr>'
+        )
+    out.append(
+        '<table><thead><tr><th class="l">bucket</th><th>n</th>'
+        '<th class="l">regions</th><th class="l"></th></tr></thead>'
+        f"<tbody>{''.join(rows)}</tbody></table>"
+    )
+    return "".join(out)
+
+
 def _heat_class(value: float, row_max: float) -> str:
     if row_max <= 0:
         return "hc0"
@@ -550,6 +597,7 @@ def render_report(doc: Dict[str, Any]) -> str:
         _timeline_section(doc),
         _metrics_section(doc),
         _governor_section(doc),
+        _plan_section(doc),
         _merge_section(doc),
         _diff_section(doc),
         f'<p class="note">generated by repro.core.report · schema '

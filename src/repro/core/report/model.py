@@ -227,7 +227,29 @@ def build_report(run_dir: str, diff_base: Optional[str] = None) -> Dict[str, Any
                 else None
             ),
             "merge": merge,
+            "plan": _plan_section(run_dir, governor),
             "diff": _diff_section(run_dir, diff_base) if diff_base else None,
         }
     )
     return doc
+
+
+def _plan_section(
+    run_dir: str, governor: Optional[Dict[str, Any]]
+) -> Optional[Dict[str, Any]]:
+    """Plan-vs-observed: what the static plan predicted against what the
+    governor actually did.  ``None`` for runs without a static_plan.json
+    (the measurement copies the applied plan into the run dir at start)."""
+    from ..staticpass import ARTIFACT as PLAN_ARTIFACT
+    from ..staticpass import plan_vs_observed
+
+    plan = _load_json(run_dir, PLAN_ARTIFACT)
+    if plan is None:
+        return None
+    return {
+        "files": plan.get("files", 0),
+        "functions": plan.get("functions", 0),
+        "verdicts": plan.get("verdicts", {}),
+        "patterns": len(plan.get("filter", {}).get("patterns", [])),
+        "vs_observed": plan_vs_observed(plan, governor),
+    }

@@ -1,0 +1,63 @@
+"""Ahead-of-run static analysis — plan instrumentation before any event fires.
+
+Score-P users hand-write filter files after a costly first run; the runtime
+governor (repro.core.governor) re-derives the same knowledge online, paying a
+budget-blowing first window before it converges.  This package closes the gap
+*statically*: it walks Python source + bytecode (``ast`` + ``dis``, never
+importing user code) and produces the knowledge both of those workflows had to
+buy with a live run.
+
+Two passes share one scanner (:mod:`.scanner`):
+
+``planner`` (:mod:`.planner`, CLI ``analysis plan``)
+    Classifies every function (trivial accessor / dunder / property →
+    auto-exclude candidate; generator / async → PEP 669 PY_YIELD/PY_RESUME
+    cost class; recursive or loop-nested call sites → hot / flush-pressure;
+    pure C-call wrapper → sampler-friendly), estimates per-function event
+    rates from call-graph fan-in, and emits a schema-stamped
+    ``static_plan.json`` whose filter spec round-trips
+    ``Filter.from_spec`` and whose predicted offenders warm-start the
+    governor's escalation ladder (:mod:`.integrate`).
+
+``linter`` (:mod:`.linter`, CLI ``analysis lint``)
+    Reports measurement-API misuse with ``file:line`` diagnostics and stable
+    rule ids (``SP1xx`` lifecycle, ``SP2xx`` environment, ``SP3xx``
+    distortion); see :data:`.linter.RULES`.
+
+Both passes run with zero runtime overhead — nothing is imported or executed
+— so they are safe as pre-deploy gates (CI runs ``analysis lint`` over this
+repo itself and ``analysis plan src/repro --smoke`` on every push).
+"""
+
+from .linter import RULES, Violation, lint_paths
+from .planner import (
+    ARTIFACT,
+    build_plan,
+    load_plan,
+    plan_exclude_patterns,
+    predicted_offenders,
+    render_plan,
+    save_plan,
+    verify_plan,
+)
+from .integrate import apply_plan, offender_names, plan_vs_observed
+from .scanner import module_name_for, scan_paths
+
+__all__ = [
+    "ARTIFACT",
+    "RULES",
+    "Violation",
+    "apply_plan",
+    "build_plan",
+    "lint_paths",
+    "load_plan",
+    "module_name_for",
+    "offender_names",
+    "plan_exclude_patterns",
+    "plan_vs_observed",
+    "predicted_offenders",
+    "render_plan",
+    "save_plan",
+    "scan_paths",
+    "verify_plan",
+]

@@ -1,0 +1,213 @@
+"""Function classification + call-graph event-rate estimation.
+
+Maps each scanned function to the cost classes the governor reasons about
+at runtime, before anything runs:
+
+``trivial``
+    Accessor-shaped: property getters, dunders, and single-expression
+    bodies with no calls.  Instrumenting these is all overhead (the
+    paper's filter-file motivation) — auto-exclude candidates.
+``generator`` / ``async``
+    Under PEP 669 every suspension fires PY_YIELD/PY_RESUME in addition to
+    the start/return pair, so their per-call event weight doubles.
+``hot``
+    Recursive, or called from loop-nested call sites — the flush-pressure
+    class the governor's offender search discovers online.
+``cwrapper``
+    Body is a single call to a name outside the scanned set (presumed
+    C/builtin).  Sampler-friendly: the wrapped work is invisible to the
+    Python instrumenters anyway, so sampling loses nothing.
+
+The event-rate estimate propagates call-graph fan-in: every function gets a
+base weight of 1 (anything may call it from outside the scanned set), plus
+the weight of each scanned call site scaled by ``LOOP_WEIGHT ** loop_depth``.
+A few damped iterations make cycles converge; the result is a unitless
+*relative* rate — enough to rank offenders and size cost tiers, which is all
+the governor needs to start warm.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from .scanner import FunctionInfo, ScannedModule
+
+#: Assumed iterations represented by one loop level of a call site.
+LOOP_WEIGHT = 64.0
+#: Fan-in propagation rounds (damped; cycles converge, they don't blow up).
+_ROUNDS = 4
+_DAMPING = 0.5
+_RATE_CAP = 1e12
+
+#: Relative per-call event-pair weight by cost class (the calibration seed:
+#: multiply by the calibrated pair cost to project a function's cost).
+COST_WEIGHTS = {
+    "default": 1.0,
+    # PY_YIELD/PY_RESUME fire per suspension on top of PY_START/PY_RETURN;
+    # one yield per call is the conservative floor.
+    "yield": 2.0,
+}
+
+#: ``simple_body`` functions at or under this AST size are trivial.
+TRIVIAL_MAX_NODES = 12
+#: Relative rate above which a trivial/hot function is worth excluding.
+EXCLUDE_MIN_RATE = 2.0
+
+
+@dataclass
+class Classified:
+    """One function with its classes, verdict, and rate estimate."""
+
+    info: FunctionInfo
+    classes: List[str] = field(default_factory=list)
+    cost_class: str = "default"
+    est_rate: float = 1.0
+    verdict: str = "keep"  # keep | exclude | sample
+
+
+def classify_modules(modules: List[ScannedModule]) -> List[Classified]:
+    """Classify every function across the scanned set (shared by planner
+    and linter; the linter only consumes the ``hot`` tag)."""
+    functions: List[FunctionInfo] = [
+        fn for mod in modules for fn in mod.functions
+    ]
+    defined = _defined_names(functions)
+    rates = _estimate_rates(modules, functions, defined)
+
+    out: List[Classified] = []
+    for fn in functions:
+        c = Classified(info=fn, est_rate=rates.get(_key(fn), 1.0))
+        if fn.is_property:
+            c.classes.append("property")
+        if fn.is_dunder:
+            c.classes.append("dunder")
+        if fn.simple_body and fn.body_nodes <= TRIVIAL_MAX_NODES:
+            c.classes.append("trivial")
+        if fn.is_generator:
+            c.classes.append("generator")
+            c.cost_class = "yield"
+        if fn.is_async:
+            c.classes.append("async")
+            c.cost_class = "yield"
+        if _is_recursive(fn, functions):
+            c.classes.append("recursive")
+        if "recursive" in c.classes or _loop_fanin(fn, modules, functions):
+            c.classes.append("hot")
+        if fn.wrapped_call and not _resolves_local(fn.wrapped_call, defined):
+            c.classes.append("cwrapper")
+        c.verdict = _verdict(c)
+        out.append(c)
+    return out
+
+
+def _verdict(c: Classified) -> str:
+    trivial_shape = (
+        "trivial" in c.classes
+        or (("property" in c.classes or "dunder" in c.classes)
+            and c.info.body_nodes <= TRIVIAL_MAX_NODES)
+    )
+    small = c.info.body_nodes <= 2 * TRIVIAL_MAX_NODES
+    if trivial_shape and ("hot" in c.classes or c.est_rate >= EXCLUDE_MIN_RATE):
+        return "exclude"
+    if "hot" in c.classes and small and not c.info.has_loop:
+        # Loop-nested tiny leaves: the flush-pressure shape the governor
+        # excludes first at runtime; exclude them for free instead.
+        return "exclude"
+    if "cwrapper" in c.classes or "hot" in c.classes:
+        return "sample"
+    return "keep"
+
+
+# ---------------------------------------------------------------------------
+# call-graph helpers
+# ---------------------------------------------------------------------------
+
+
+def _key(fn: FunctionInfo) -> str:
+    return f"{fn.module}:{fn.qualname}"
+
+
+def _defined_names(functions: List[FunctionInfo]) -> Dict[str, List[str]]:
+    """bare/qualified name -> keys of scanned functions carrying it."""
+    names: Dict[str, List[str]] = {}
+    for fn in functions:
+        for alias in {fn.name, fn.qualname}:
+            names.setdefault(alias, []).append(_key(fn))
+    return names
+
+
+def _resolves_local(callee: str, defined: Dict[str, List[str]]) -> bool:
+    tail = callee.rsplit(".", 1)[-1]
+    return callee in defined or tail in defined
+
+
+def _callee_keys(callee: str, defined: Dict[str, List[str]]) -> List[str]:
+    if callee in defined:
+        return defined[callee]
+    tail = callee.rsplit(".", 1)[-1]
+    return defined.get(tail, [])
+
+
+def _estimate_rates(
+    modules: List[ScannedModule],
+    functions: List[FunctionInfo],
+    defined: Dict[str, List[str]],
+) -> Dict[str, float]:
+    """Damped fan-in propagation over the intra-package call graph."""
+    rates = {_key(fn): 1.0 for fn in functions}
+    # Static edge list: (callee_key, caller_key_or_None, loop_depth).
+    edges = []
+    for mod in modules:
+        for site in mod.module_calls:
+            for key in _callee_keys(site.callee, defined):
+                edges.append((key, None, site.loop_depth))
+    for fn in functions:
+        for site in fn.calls:
+            for key in _callee_keys(site.callee, defined):
+                edges.append((key, _key(fn), site.loop_depth))
+    for _ in range(_ROUNDS):
+        incoming: Dict[str, float] = {k: 0.0 for k in rates}
+        for callee, caller, depth in edges:
+            caller_rate = 1.0 if caller is None else rates.get(caller, 1.0)
+            incoming[callee] += caller_rate * (LOOP_WEIGHT ** depth)
+        for key in rates:
+            target = 1.0 + incoming[key]
+            rates[key] = min(
+                rates[key] + _DAMPING * (target - rates[key]), _RATE_CAP
+            )
+    return rates
+
+
+def _is_recursive(fn: FunctionInfo, functions: List[FunctionInfo]) -> bool:
+    """Direct recursion, or a two-cycle with another scanned function."""
+    own = {fn.name, fn.qualname}
+    callees = {site.callee.rsplit(".", 1)[-1] for site in fn.calls}
+    if own & callees:
+        return True
+    for other in functions:
+        if other is fn:
+            continue
+        if other.name in callees or other.qualname in callees:
+            other_callees = {s.callee.rsplit(".", 1)[-1] for s in other.calls}
+            if own & other_callees:
+                return True
+    return False
+
+
+def _loop_fanin(
+    fn: FunctionInfo,
+    modules: List[ScannedModule],
+    functions: List[FunctionInfo],
+) -> bool:
+    """Any scanned call site targeting ``fn`` sits inside a loop?"""
+    targets = {fn.name, fn.qualname}
+    for mod in modules:
+        for site in mod.module_calls:
+            if site.loop_depth > 0 and site.callee.rsplit(".", 1)[-1] in targets:
+                return True
+    for other in functions:
+        for site in other.calls:
+            if site.loop_depth > 0 and site.callee.rsplit(".", 1)[-1] in targets:
+                return True
+    return False

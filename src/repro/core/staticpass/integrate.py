@@ -1,0 +1,93 @@
+"""Plan → runtime integration: filter merging, governor seeding, reporting.
+
+The plan's exclude patterns enter the live filter as *runtime excludes*
+(the ``exclude!`` clause), the same channel the governor uses — so plan and
+governor excludes compose under one precedence rule: absolute, never
+re-admitted by include rules, never flipping an allow-list spec.
+
+Governor warm start: the plan's predicted offenders (both module forms) are
+handed to :meth:`Governor.seed_static_plan`, making them eligible for the
+exclude rung on the first flush without waiting for observed leaf-duration
+evidence — the verdict was reached statically.  The governor's document then
+carries a ``static_plan`` section, and :func:`plan_vs_observed` joins it
+with the plan for the report's plan-vs-observed view.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from .planner import plan_exclude_patterns, predicted_offenders
+
+
+def offender_names(plan: Dict[str, Any]) -> set:
+    """Both module forms of every predicted offender (``module:qualname``)."""
+    names = set()
+    for row in predicted_offenders(plan):
+        names.add(row.get("region", ""))
+        names.add(row.get("frameless_region", ""))
+    names.discard("")
+    return names
+
+
+def apply_plan(measurement, plan: Dict[str, Any]) -> List[str]:
+    """Merge a plan into a live (or not-yet-started) measurement.
+
+    Adds the plan's exclude patterns as runtime excludes, refilters cached
+    verdicts when the measurement already registered regions, stores the
+    plan on the measurement (copied into the run dir at ``start()``), and
+    seeds the governor.  Returns the patterns actually added."""
+    added = measurement.filter.add_runtime_excludes(plan_exclude_patterns(plan))
+    if added and len(measurement.regions):
+        measurement.regions.refilter()
+    measurement.static_plan = plan
+    if measurement.governor is not None:
+        measurement.governor.seed_static_plan(plan)
+    return added
+
+
+def plan_vs_observed(
+    plan: Dict[str, Any], governor_doc: Optional[Dict[str, Any]]
+) -> Dict[str, Any]:
+    """Join statically-predicted offenders with what the governor observed.
+
+    Buckets (all ``module:qualname`` region names):
+
+    * ``pre_excluded`` — predicted offenders the plan itself already
+      excluded; they never register, so the governor never has to act.
+    * ``confirmed`` — predicted offenders the governor *also* excluded at
+      runtime (the static verdict was right).
+    * ``unconfirmed`` — predicted offenders the governor observed but left
+      alone (over-prediction, or the budget never forced an action).
+    * ``unpredicted`` — regions the governor excluded that the plan missed
+      (under-prediction: the interesting rows for improving the planner).
+    """
+    predicted_rows = predicted_offenders(plan)
+    predicted = offender_names(plan)
+    pre_excluded = {
+        row["region"]
+        for row in predicted_rows
+        if row.get("verdict") == "exclude"
+    }
+    runtime_excluded: set = set()
+    observed: set = set()
+    if governor_doc:
+        for row in governor_doc.get("regions", []):
+            observed.add(row.get("region", ""))
+            if row.get("excluded"):
+                runtime_excluded.add(row.get("region", ""))
+        for action in governor_doc.get("actions", []):
+            for step in action.get("steps", []):
+                if step.get("kind") == "exclude_regions":
+                    runtime_excluded.update(step.get("regions", []))
+    confirmed = sorted(predicted & runtime_excluded)
+    unconfirmed = sorted((predicted & observed) - runtime_excluded - pre_excluded)
+    unpredicted = sorted(runtime_excluded - predicted)
+    return {
+        "predicted": len(predicted_rows),
+        "pre_excluded": sorted(pre_excluded),
+        "confirmed": confirmed,
+        "unconfirmed": unconfirmed,
+        "unpredicted": unpredicted,
+        "governed": governor_doc is not None,
+    }

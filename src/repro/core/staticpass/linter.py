@@ -1,0 +1,452 @@
+"""Measurement-API linter — static misuse detection with stable rule ids.
+
+Rules (ids are stable; renumbering is a breaking change):
+
+========  ===========================  =============================================
+id        name                         catches
+========  ===========================  =============================================
+SP101     region-not-entered           ``region(...)`` created but never entered:
+                                       a bare expression statement, or assigned to
+                                       a name that is never used again — the
+                                       enter/exit pair never fires, the region
+                                       silently records nothing.
+SP102     measurement-not-finalized    a module starts measurement (``init(...)``
+                                       or ``Measurement(...)`` + ``.start()``)
+                                       but never references ``finalize`` —
+                                       buffers never drain, artifacts are
+                                       incomplete unless the atexit hook saves it.
+SP201     foreign-hook-install         ``sys.settrace`` / ``sys.setprofile`` /
+                                       ``threading.settrace`` with a non-None
+                                       tool, or ``sys.monitoring`` tool
+                                       registration — collides with the active
+                                       instrumenter (last writer wins, silently).
+SP202     thread-before-install        a thread is started lexically before the
+                                       instrumenter installs in the same scope —
+                                       per-thread hooks miss it forever.
+SP301     blocking-call-in-hot-region  a blocking call (sleep, subprocess,
+                                       blocking I/O) inside a ``with region(...)``
+                                       block classified hot (loop-nested or in a
+                                       hot function) — the wait time is charged
+                                       to the region and dilates every iteration.
+========  ===========================  =============================================
+
+Suppression pragmas (line- or file-scoped, by rule id or name)::
+
+    sys.setprofile(cb)  # repro-lint: allow=SP201
+    # repro-lint: allow-file=foreign-hook-install
+
+Diagnostics are ``file:line: id name: message`` — one line per violation,
+deterministic order.  The CLI (``analysis lint``) exits 1 when violations
+remain, 0 when clean, 2 on a bad path.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from .classify import classify_modules
+from .scanner import (
+    ScannedModule,
+    _FUNC_NODES,
+    dotted_name,
+    scan_paths,
+)
+
+#: Stable rule registry: id -> name.
+RULES = {
+    "SP101": "region-not-entered",
+    "SP102": "measurement-not-finalized",
+    "SP201": "foreign-hook-install",
+    "SP202": "thread-before-install",
+    "SP301": "blocking-call-in-hot-region",
+}
+
+_BLOCKING_CALLS = {
+    "time.sleep",
+    "sleep",
+    "subprocess.run",
+    "subprocess.call",
+    "subprocess.check_call",
+    "subprocess.check_output",
+    "subprocess.Popen",
+    "socket.create_connection",
+    "urllib.request.urlopen",
+    "requests.get",
+    "requests.post",
+    "requests.request",
+    "select.select",
+    "input",
+}
+
+_FOREIGN_HOOKS = {
+    ("sys", "settrace"),
+    ("sys", "setprofile"),
+    ("threading", "settrace"),
+    ("threading", "setprofile"),
+}
+_MONITORING_TOOLS = {
+    "use_tool_id",
+    "register_callback",
+    "set_events",
+    "set_local_events",
+}
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule_id: str
+    file: str
+    line: int
+    message: str
+
+    @property
+    def rule(self) -> str:
+        return RULES[self.rule_id]
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line}: {self.rule_id} {self.rule}: {self.message}"
+
+
+def lint_paths(paths: List[str]) -> List[Violation]:
+    """Lint files/directories; returns suppression-filtered violations in
+    ``(file, line, rule)`` order.  Raises :class:`MissingArtifact` for a
+    bad path (CLI exit 2)."""
+    modules = scan_paths(paths)
+    hot_functions = {
+        (c.info.file, c.info.qualname)
+        for c in classify_modules(modules)
+        if "hot" in c.classes
+    }
+    out: List[Violation] = []
+    for mod in modules:
+        if mod.tree is None:
+            continue  # parse errors are the planner's report, not lint rules
+        linter = _ModuleLinter(mod, hot_functions)
+        out.extend(linter.run())
+    return sorted(out, key=lambda v: (v.file, v.line, v.rule_id))
+
+
+class _ModuleLinter:
+    def __init__(self, mod: ScannedModule, hot_functions: Set[Tuple[str, str]]):
+        self.mod = mod
+        self.hot = hot_functions
+        self.violations: List[Violation] = []
+        #: module uses the measurement API at all (gates method-call rules
+        #: like ``m.region(...)`` so unrelated ``.region`` attrs stay quiet).
+        self.uses_api = bool(mod.api_aliases)
+
+    # -- entry -------------------------------------------------------------
+
+    def run(self) -> List[Violation]:
+        tree = self.mod.tree
+        self._lifecycle(tree)
+        scopes = [("<module>", tree.body, None)]
+        for fn in self.mod.functions:
+            if fn.node is not None:
+                scopes.append((fn.qualname, fn.node.body, fn))
+        for qualname, body, fn in scopes:
+            self._scope_rules(qualname, body, fn)
+        return self._suppress(self.violations)
+
+    def _suppress(self, violations: List[Violation]) -> List[Violation]:
+        out = []
+        for v in violations:
+            keys = {v.rule_id, v.rule}
+            if keys & self.mod.file_suppressions:
+                continue
+            if keys & self.mod.line_suppressions.get(v.line, set()):
+                continue
+            out.append(v)
+        return out
+
+    def _emit(self, rule_id: str, node: ast.AST, message: str) -> None:
+        self.violations.append(
+            Violation(
+                rule_id=rule_id,
+                file=self.mod.path,
+                line=getattr(node, "lineno", 0),
+                message=message,
+            )
+        )
+
+    # -- API-call resolution ----------------------------------------------
+
+    def _api_call(self, call: ast.Call) -> Optional[str]:
+        """Resolve a call to a measurement-API entry point name, if any."""
+        func = call.func
+        aliases = self.mod.api_aliases
+        if isinstance(func, ast.Name):
+            bound = aliases.get(func.id)
+            return bound if bound and bound != "<module>" else None
+        if isinstance(func, ast.Attribute):
+            base = func.value
+            if isinstance(base, ast.Name) and aliases.get(base.id) == "<module>":
+                return func.attr
+            # rmon bound as repro.core: ``repro.core.init(...)`` renders as
+            # Attribute chains; resolve through the dotted text.
+            text = dotted_name(func)
+            for prefix in ("repro.core.", "core."):
+                if text.startswith(prefix):
+                    return text[len(prefix):]
+        return None
+
+    # -- SP102: measurement lifecycle (module granularity) -----------------
+
+    def _lifecycle(self, tree: ast.Module) -> None:
+        starts: List[ast.Call] = []
+        has_constructor = False
+        has_start_method = False
+        references_finalize = False
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                api = self._api_call(node)
+                if api in ("init", "init_from_env"):
+                    starts.append(node)
+                elif api == "Measurement":
+                    has_constructor = True
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "start"):
+                    has_start_method = True
+            if isinstance(node, ast.Name) and node.id == "finalize":
+                references_finalize = True
+            elif isinstance(node, ast.Attribute) and node.attr == "finalize":
+                references_finalize = True
+            elif isinstance(node, _FUNC_NODES) and node.name == "finalize":
+                references_finalize = True
+        if has_constructor and has_start_method and not starts:
+            # Measurement(...) ... .start() — same lifecycle obligation.
+            for node in ast.walk(tree):
+                if (isinstance(node, ast.Call)
+                        and self._api_call(node) == "Measurement"):
+                    starts.append(node)
+                    break
+        if starts and not references_finalize:
+            self._emit(
+                "SP102",
+                starts[0],
+                "measurement is started here but the module never calls "
+                "finalize() — buffers only drain on interpreter exit",
+            )
+
+    # -- per-scope rules ---------------------------------------------------
+
+    def _scope_rules(self, qualname: str, body: List[ast.stmt], fn) -> None:
+        self._region_not_entered(body)
+        self._thread_before_install(body)
+        self._foreign_hooks(body)
+        self._blocking_in_hot_region(qualname, body, fn)
+
+    def _is_region_call(self, call: ast.Call) -> bool:
+        if self._api_call(call) == "region":
+            return True
+        func = call.func
+        return (
+            self.uses_api
+            and isinstance(func, ast.Attribute)
+            and func.attr == "region"
+        )
+
+    def _region_not_entered(self, body: List[ast.stmt]) -> None:
+        statements = list(_own_statements(body))
+        for stmt in statements:
+            if (isinstance(stmt, ast.Expr)
+                    and isinstance(stmt.value, ast.Call)
+                    and self._is_region_call(stmt.value)):
+                self._emit(
+                    "SP101",
+                    stmt,
+                    "region(...) is never entered — wrap it in a `with` "
+                    "block or the enter/exit pair never fires",
+                )
+            elif (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Call)
+                    and self._is_region_call(stmt.value)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                name = stmt.targets[0].id
+                used = any(
+                    isinstance(n, ast.Name) and n.id == name
+                    and n is not stmt.targets[0]
+                    for s in statements
+                    for n in ast.walk(s)
+                )
+                if not used:
+                    self._emit(
+                        "SP101",
+                        stmt,
+                        f"region handle {name!r} is assigned but never "
+                        f"entered (unused) — the region records nothing",
+                    )
+
+    def _thread_before_install(self, body: List[ast.stmt]) -> None:
+        install_line = None
+        thread_names: Set[str] = set()
+        thread_starts: List[ast.AST] = []
+        # Pass 1: install points + names bound to threading.Thread(...).
+        for node in _scope_walk(body):
+            if isinstance(node, ast.Assign):
+                if (isinstance(node.value, ast.Call)
+                        and dotted_name(node.value.func)
+                        in ("threading.Thread", "Thread")
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    thread_names.add(node.targets[0].id)
+            elif isinstance(node, ast.Call):
+                if self._api_call(node) in ("init", "init_from_env"):
+                    line = node.lineno
+                    install_line = min(install_line or line, line)
+        if install_line is None:
+            return
+        # Pass 2: .start() on a known thread name or an inline Thread(...).
+        for node in _scope_walk(body):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "start"):
+                continue
+            base = node.func.value
+            if isinstance(base, ast.Name) and base.id in thread_names:
+                thread_starts.append(node)
+            elif (isinstance(base, ast.Call)
+                  and dotted_name(base.func) in ("threading.Thread", "Thread")):
+                thread_starts.append(node)
+        for node in thread_starts:
+            if node.lineno < install_line:
+                self._emit(
+                    "SP202",
+                    node,
+                    "thread started before the instrumenter installs — "
+                    "per-thread hooks never cover it; move init() first",
+                )
+
+    def _foreign_hooks(self, body: List[ast.stmt]) -> None:
+        for node in _scope_walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if not isinstance(func, ast.Attribute):
+                continue
+            text = dotted_name(func)
+            parts = tuple(text.split("."))
+            if parts in _FOREIGN_HOOKS:
+                if node.args and _is_none(node.args[0]):
+                    continue  # clearing a hook is benign
+                self._emit(
+                    "SP201",
+                    node,
+                    f"{text}(...) replaces the active instrumenter's "
+                    f"hook (last writer wins, silently) — use the "
+                    f"measurement API instead",
+                )
+            elif (
+                len(parts) >= 3
+                and parts[0] == "sys"
+                and parts[1] == "monitoring"
+                and parts[-1] in _MONITORING_TOOLS
+            ):
+                self._emit(
+                    "SP201",
+                    node,
+                    f"{text}(...) registers a sys.monitoring tool that "
+                    f"collides with the PEP 669 instrumenters",
+                )
+
+    def _blocking_in_hot_region(self, qualname: str, body: List[ast.stmt],
+                                fn) -> None:
+        fn_is_hot = fn is not None and (fn.file, fn.qualname) in self.hot
+        for with_node, loop_nested in _region_withs(body, self._is_region_call):
+            if not (loop_nested or fn_is_hot):
+                continue
+            for stmt in with_node.body:
+                for node in _walk_no_defs(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    text = dotted_name(node.func)
+                    if text in _BLOCKING_CALLS:
+                        self._emit(
+                            "SP301",
+                            node,
+                            f"blocking call {text}(...) inside a hot region "
+                            f"— the wait is charged to the region and "
+                            f"dilates every iteration",
+                        )
+
+
+# ---------------------------------------------------------------------------
+# small AST walkers
+# ---------------------------------------------------------------------------
+
+
+def _is_none(node: ast.expr) -> bool:
+    return isinstance(node, ast.Constant) and node.value is None
+
+
+def _own_statements(body: List[ast.stmt]):
+    """All statements of a scope, not descending into nested defs."""
+    stack: List[ast.stmt] = list(body)
+    while stack:
+        stmt = stack.pop()
+        yield stmt
+        if isinstance(stmt, _FUNC_NODES + (ast.ClassDef,)):
+            continue
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                stack.append(child)
+            else:
+                for sub in ast.iter_child_nodes(child):
+                    if isinstance(sub, ast.stmt):
+                        stack.append(sub)
+
+
+def _scope_walk(body: List[ast.stmt]):
+    """Every node of a scope exactly once, not descending into nested
+    defs/classes (their bodies are linted as their own scopes).  The guard
+    is on the popped node, not its children: a def at the top of ``body``
+    must not be expanded either."""
+    stack: List[ast.AST] = list(body)
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, _FUNC_NODES + (ast.ClassDef,)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _walk_no_defs(node: ast.AST):
+    """ast.walk that does not descend into nested function definitions."""
+    stack: List[ast.AST] = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, _FUNC_NODES):
+                continue
+            stack.append(child)
+
+
+def _region_withs(body: List[ast.stmt], is_region_call):
+    """Yield ``(With, loop_nested)`` for region-with blocks in a scope."""
+    stack: List[Tuple[ast.stmt, bool]] = [(s, False) for s in body]
+    while stack:
+        stmt, in_loop = stack.pop()
+        if isinstance(stmt, _FUNC_NODES + (ast.ClassDef,)):
+            continue
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            if any(
+                isinstance(item.context_expr, ast.Call)
+                and is_region_call(item.context_expr)
+                for item in stmt.items
+            ):
+                yield stmt, in_loop
+        nested_loop = in_loop or isinstance(
+            stmt, (ast.For, ast.While, ast.AsyncFor)
+        )
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                stack.append((child, nested_loop))
+            else:
+                for sub in ast.iter_child_nodes(child):
+                    if isinstance(sub, ast.stmt):
+                        stack.append((sub, nested_loop))

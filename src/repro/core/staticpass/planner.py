@@ -1,0 +1,230 @@
+"""Static instrumentation plan — ``static_plan.json``.
+
+The planner turns the scanner + classifier output into the artifact the
+measurement stack consumes (see docs/ARTIFACTS.md):
+
+* a filter spec built from ``exclude!`` clauses only, so it round-trips
+  ``Filter.from_spec`` and merges into any user spec under the established
+  absolute-exclude precedence (it can only ever *remove* regions — an
+  include-only allow-list stays one);
+* every exclude pattern is emitted in both module forms — the dotted module
+  path (framed registration) and the file stem (frameless ``sys.monitoring``
+  registration) — so one plan works under every instrumenter family;
+* predicted offenders (the ``hot`` class, ranked by estimated rate) and
+  per-cost-class weights, which warm-start the governor's escalation ladder
+  (:mod:`.integrate`).
+
+Like every artifact, the plan is schema-stamped (``report_schema_version``)
+and :func:`load_plan` raises :class:`MissingArtifact` — CLI exit 2 — when
+missing or unreadable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from ..filtering import Filter
+from ..schema import MissingArtifact, stamp
+from .classify import COST_WEIGHTS, Classified, classify_modules
+from .scanner import ScannedModule, scan_paths
+
+ARTIFACT = "static_plan.json"
+
+#: Cap on predicted-offender rows kept in the plan document.
+_MAX_OFFENDERS = 50
+
+
+def _fnmatch_escape(name: str) -> str:
+    from ..governor import _fnmatch_escape as esc  # single escaping seam
+
+    return esc(name)
+
+
+def build_plan(paths: List[str]) -> Dict[str, Any]:
+    """Scan ``paths`` and build the plan document (schema-stamped dict)."""
+    modules = scan_paths(paths)
+    classified = classify_modules(modules)
+    return _assemble(paths, modules, classified)
+
+
+def _assemble(
+    paths: List[str],
+    modules: List[ScannedModule],
+    classified: List[Classified],
+) -> Dict[str, Any]:
+    records: List[Dict[str, Any]] = []
+    patterns: List[str] = []
+    seen_patterns = set()
+    verdict_counts = {"keep": 0, "exclude": 0, "sample": 0}
+    for c in classified:
+        fn = c.info
+        verdict_counts[c.verdict] = verdict_counts.get(c.verdict, 0) + 1
+        records.append(
+            {
+                "module": fn.module,
+                "frameless_module": fn.frameless_module,
+                "name": fn.qualname,
+                "file": fn.file,
+                "line": fn.line,
+                "classes": list(c.classes),
+                "cost_class": c.cost_class,
+                "cost_weight": COST_WEIGHTS.get(c.cost_class, 1.0),
+                "est_rate": round(c.est_rate, 3),
+                "verdict": c.verdict,
+            }
+        )
+        if c.verdict == "exclude":
+            for mod_name in {fn.module, fn.frameless_module}:
+                pat = f"{_fnmatch_escape(mod_name)}.{_fnmatch_escape(fn.qualname)}"
+                if pat not in seen_patterns:
+                    seen_patterns.add(pat)
+                    patterns.append(pat)
+    offenders = sorted(
+        (c for c in classified if "hot" in c.classes),
+        key=lambda c: -c.est_rate,
+    )[:_MAX_OFFENDERS]
+    errors = [
+        {"file": m.path, "error": m.parse_error}
+        for m in modules
+        if m.parse_error
+    ]
+    spec = Filter(runtime_exclude=list(patterns)).to_spec()
+    return stamp(
+        {
+            "generator": "repro.core.staticpass",
+            "roots": list(paths),
+            "files": len(modules),
+            "functions": len(records),
+            "verdicts": verdict_counts,
+            "records": records,
+            "filter": {"spec": spec, "patterns": patterns},
+            "predicted_offenders": [
+                {
+                    "region": f"{c.info.module}:{c.info.qualname}",
+                    "frameless_region": (
+                        f"{c.info.frameless_module}:{c.info.qualname}"
+                    ),
+                    "est_rate": round(c.est_rate, 3),
+                    "classes": list(c.classes),
+                    "verdict": c.verdict,
+                }
+                for c in offenders
+            ],
+            "calibration_seed": {"cost_weights": dict(COST_WEIGHTS)},
+            "errors": errors,
+        }
+    )
+
+
+# ---------------------------------------------------------------------------
+# persistence + consumers
+# ---------------------------------------------------------------------------
+
+
+def save_plan(plan: Dict[str, Any], path: str) -> str:
+    out_dir = os.path.dirname(os.path.abspath(path))
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(plan, fh, indent=1)
+    return path
+
+
+def load_plan(path: str) -> Dict[str, Any]:
+    """Read a plan; directory arguments resolve to ``static_plan.json``
+    inside.  Raises :class:`MissingArtifact` (CLI exit 2) when absent,
+    unreadable, or not a plan document."""
+    if os.path.isdir(path):
+        path = os.path.join(path, ARTIFACT)
+    if not os.path.exists(path):
+        raise MissingArtifact(
+            f"no static plan at {path or '.'} — generate one with "
+            f"`python -m repro.core.analysis plan <package>`"
+        )
+    try:
+        with open(path) as fh:
+            plan = json.load(fh)
+    except (OSError, ValueError) as exc:
+        raise MissingArtifact(f"unreadable static plan {path}: {exc}") from exc
+    if not isinstance(plan, dict) or "filter" not in plan:
+        raise MissingArtifact(
+            f"{path} is not a static plan (no filter section) — regenerate "
+            f"with `python -m repro.core.analysis plan`"
+        )
+    return plan
+
+
+def plan_exclude_patterns(plan: Dict[str, Any]) -> List[str]:
+    """The plan's absolute-exclude patterns (both module forms, deduped)."""
+    return list(plan.get("filter", {}).get("patterns", []))
+
+
+def predicted_offenders(plan: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Predicted offender rows, highest estimated rate first."""
+    return list(plan.get("predicted_offenders", []))
+
+
+def verify_plan(plan: Dict[str, Any]) -> None:
+    """Assert the plan's spec round-trips ``Filter.from_spec`` and its
+    verdicts survive the round trip (the ``analysis plan --smoke`` gate).
+
+    Self-suppressed modules (the measurement core drops its own regions
+    unconditionally) are skipped for keep-verdict checks — their verdict is
+    decided by the core filter, not the plan."""
+    spec = plan.get("filter", {}).get("spec", "")
+    flt = Filter.from_spec(spec)
+    assert flt.to_spec() == spec, "plan spec must round-trip Filter.to_spec"
+    # Either module form of any excluded record; a keep record colliding
+    # with one of these (same stem + function name in another package) is
+    # legitimately caught by the shared pattern, so it is not a verdict
+    # violation.
+    excluded_forms = {
+        (m, r["name"])
+        for r in plan.get("records", [])
+        if r["verdict"] == "exclude"
+        for m in (r["module"], r["frameless_module"])
+    }
+    for r in plan.get("records", []):
+        for mod_name in (r["module"], r["frameless_module"]):
+            verdict = flt.decide(mod_name, r["name"], r["file"])
+            if r["verdict"] == "exclude":
+                assert not verdict, (
+                    f"planned exclude not filtered: {mod_name}.{r['name']}"
+                )
+            elif (
+                (mod_name, r["name"]) not in excluded_forms
+                and not mod_name.startswith("repro.core")
+                and "repro/core/" not in r["file"].replace(os.sep, "/")
+            ):
+                assert verdict, (
+                    f"planned keep filtered out: {mod_name}.{r['name']}"
+                )
+
+
+def render_plan(plan: Dict[str, Any], top: int = 15) -> str:
+    """Human-readable plan summary (the ``analysis plan`` stdout)."""
+    v = plan.get("verdicts", {})
+    out = [
+        f"scanned {plan.get('files', 0)} files, "
+        f"{plan.get('functions', 0)} functions: "
+        f"{v.get('exclude', 0)} exclude, {v.get('sample', 0)} sample, "
+        f"{v.get('keep', 0)} keep"
+    ]
+    for err in plan.get("errors", []):
+        out.append(f"  ! {err['file']}: {err['error']}")
+    offenders = predicted_offenders(plan)
+    if offenders:
+        out.append(f"{'est_rate':>10s} {'verdict':>8s}  predicted offender")
+        for row in offenders[:top]:
+            out.append(
+                f"{row['est_rate']:10.1f} {row['verdict']:>8s}  "
+                f"{row['region']} [{','.join(row['classes'])}]"
+            )
+    spec = plan.get("filter", {}).get("spec", "")
+    if spec:
+        shown = spec if len(spec) <= 200 else spec[:200] + "…"
+        out.append(f"filter spec ({len(plan['filter']['patterns'])} patterns): {shown}")
+    else:
+        out.append("filter spec: (empty — nothing auto-excluded)")
+    return "\n".join(out)

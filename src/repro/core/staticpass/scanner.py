@@ -1,0 +1,513 @@
+"""Shared no-execution scanner: source + bytecode view of a package.
+
+One walk serves both the planner and the linter.  Per file it produces a
+:class:`ScannedModule` carrying the parsed AST, the compiled code objects
+(``compile`` + ``dis`` — still no execution: the module body is never run),
+per-function :class:`FunctionInfo` records, the measurement-API import
+aliases, and lint-suppression pragmas.
+
+Module naming must match what the live registry would record, or every plan
+verdict is a silent no-op (see ``tests/test_staticpass.py`` parity checks):
+
+* framed registration reads ``frame.f_globals["__name__"]`` — the dotted
+  module path.  :func:`module_name_for` reproduces it by walking up through
+  ``__init__.py`` package directories (which also handles ``src/`` layouts:
+  the climb stops at the first non-package directory) and, below an explicit
+  scan root, treating ``__init__``-less directories as namespace packages.
+* frameless registration (``sys.monitoring`` callbacks) falls back to
+  ``regions._module_from_filename`` — the file stem.  The scanner reuses
+  that exact function rather than reimplementing it.
+"""
+
+from __future__ import annotations
+
+import ast
+import dis
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from ..regions import _module_from_filename
+from ..schema import MissingArtifact
+
+#: Modules whose bindings count as "the measurement API" for alias tracking.
+_API_MODULES = ("repro.core", "repro.core.measurement", "repro")
+#: Names the API modules export that the linter cares about.
+_API_NAMES = (
+    "region",
+    "init",
+    "init_from_env",
+    "finalize",
+    "active",
+    "instrument",
+    "metric",
+    "Measurement",
+    "MeasurementConfig",
+)
+
+_PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*(allow|allow-file)\s*=\s*([\w\-, ]+)"
+)
+
+
+@dataclass
+class CallSite:
+    """One call expression inside a function (or module) body."""
+
+    callee: str  # dotted best-effort name, e.g. "self.flush", "np.zeros", "f"
+    line: int
+    loop_depth: int  # number of enclosing for/while loops within the scope
+
+
+@dataclass
+class FunctionInfo:
+    """Static facts about one function definition (no execution)."""
+
+    name: str  # bare name
+    qualname: str  # co_qualname-style: "Cls.meth", "f.<locals>.g"
+    module: str  # dotted module name (framed registration)
+    frameless_module: str  # file stem (sys.monitoring registration)
+    file: str
+    line: int
+    is_async: bool = False
+    is_generator: bool = False
+    is_dunder: bool = False
+    is_property: bool = False
+    decorators: List[str] = field(default_factory=list)
+    body_nodes: int = 0  # AST node count of the body (docstring excluded)
+    has_loop: bool = False
+    returns_value: bool = False
+    #: Body is a single return/expression with no calls — accessor shape.
+    simple_body: bool = False
+    #: Body is a single call to a name not defined in the scanned set
+    #: (presumed C/builtin) — sampler-friendly wrapper shape.
+    wrapped_call: Optional[str] = None
+    calls: List[CallSite] = field(default_factory=list)
+    #: From the matched code object: number of CALL* instructions.
+    bytecode_calls: int = 0
+    node: Any = None  # the ast.FunctionDef (linter walks bodies)
+
+
+@dataclass
+class ScannedModule:
+    """Everything the passes need to know about one source file."""
+
+    path: str
+    module: str
+    frameless_module: str
+    source: str
+    lines: List[str]
+    tree: Optional[ast.Module]
+    functions: List[FunctionInfo]
+    #: Module-body call sites (pseudo-caller for the rate estimate).
+    module_calls: List[CallSite]
+    #: local name -> API name for measurement-API bindings ("rmon" -> "<module>").
+    api_aliases: Dict[str, str]
+    #: rule names/ids suppressed for the whole file (# repro-lint: allow-file=...)
+    file_suppressions: Set[str]
+    #: line -> rule names/ids suppressed on that line (# repro-lint: allow=...)
+    line_suppressions: Dict[int, Set[str]]
+    parse_error: Optional[str] = None
+
+
+#: Directory names that are source containers, never package segments.
+_CONTAINER_DIRS = {
+    "src", "source", "lib", "libs", "site-packages", "dist-packages",
+    "test", "tests", "examples", "scripts", "tools", "bin", "python",
+}
+#: Files marking a project root — the climb never crosses one upward.
+_PROJECT_MARKERS = ("pyproject.toml", "setup.py", "setup.cfg", ".git")
+
+
+def module_name_for(path: str, root: Optional[str] = None) -> str:
+    """Dotted module name the live (framed) registry would record.
+
+    Climbs through package directories (``__init__.py`` present).  Two
+    extensions cover PEP 420 namespace packages, which have no
+    ``__init__.py`` to follow:
+
+    * below an explicit scan ``root``, every directory contributes a
+      segment (the caller asserted the root is the import boundary);
+    * above that, a single ``__init__``-less level is accepted when it
+      looks like a namespace package — an identifier name that is not a
+      conventional source container (``src``, ``lib``, …) and not a
+      project root (no ``pyproject.toml`` / ``.git``).  One level is the
+      common real-world shape (``src/<ns>/pkg/…``) and bounding it keeps
+      the climb from swallowing arbitrary parent directories.
+    """
+    apath = os.path.abspath(path)
+    base = os.path.basename(apath)
+    stem = base[:-3] if base.endswith(".py") else base
+    parts = [] if stem == "__init__" else [stem]
+    d = os.path.dirname(apath)
+    aroot = os.path.abspath(root) if root else None
+    if aroot is not None and os.path.isfile(aroot):
+        aroot = os.path.dirname(aroot)
+    namespace_budget = 0  # earned by climbing out of a real package level
+    while True:
+        name = os.path.basename(d)
+        has_init = os.path.isfile(os.path.join(d, "__init__.py"))
+        below_root = (
+            aroot is not None and d != aroot and d.startswith(aroot + os.sep)
+        )
+        namespace_like = (
+            namespace_budget > 0
+            and name.isidentifier()
+            and name not in _CONTAINER_DIRS
+            and not any(
+                os.path.exists(os.path.join(d, m)) for m in _PROJECT_MARKERS
+            )
+        )
+        if not (has_init or below_root or namespace_like):
+            break
+        if has_init or below_root:
+            namespace_budget = 1
+        else:
+            namespace_budget -= 1
+        parts.insert(0, name)
+        parent = os.path.dirname(d)
+        if parent == d:
+            break
+        d = parent
+    return ".".join(parts) if parts else stem
+
+
+def iter_python_files(paths: List[str]) -> List[Tuple[str, Optional[str]]]:
+    """Expand paths to ``(file, scan_root)`` pairs, deterministic order.
+
+    Raises :class:`MissingArtifact` (CLI exit 2) for a nonexistent path or
+    when the expansion finds no Python sources at all.
+    """
+    out: List[Tuple[str, Optional[str]]] = []
+    seen: Set[str] = set()
+    for p in paths:
+        if not os.path.exists(p):
+            raise MissingArtifact(
+                f"no such file or directory: {p} — `analysis plan/lint` take "
+                f"Python files or package directories"
+            )
+        if os.path.isfile(p):
+            ap = os.path.abspath(p)
+            if ap.endswith(".py") and ap not in seen:
+                seen.add(ap)
+                out.append((p, None))
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if not d.startswith(".") and d != "__pycache__"
+            )
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                ap = os.path.abspath(full)
+                if ap not in seen:
+                    seen.add(ap)
+                    out.append((full, p))
+    if not out:
+        raise MissingArtifact(
+            f"no Python sources under {', '.join(paths) or '.'}"
+        )
+    return out
+
+
+def scan_paths(paths: List[str]) -> List[ScannedModule]:
+    """Scan files/directories into :class:`ScannedModule` records.
+
+    Files that fail to parse are kept (with ``parse_error`` set) so the
+    caller can report them without aborting the whole pass.
+    """
+    return [_scan_file(f, root) for f, root in iter_python_files(paths)]
+
+
+# ---------------------------------------------------------------------------
+# per-file scan
+# ---------------------------------------------------------------------------
+
+
+def _scan_file(path: str, root: Optional[str]) -> ScannedModule:
+    module = module_name_for(path, root)
+    frameless = _module_from_filename(path)
+    try:
+        with open(path, encoding="utf-8", errors="replace") as fh:
+            source = fh.read()
+    except OSError as exc:
+        raise MissingArtifact(f"unreadable source {path}: {exc}") from exc
+    lines = source.splitlines()
+    mod = ScannedModule(
+        path=path,
+        module=module,
+        frameless_module=frameless,
+        source=source,
+        lines=lines,
+        tree=None,
+        functions=[],
+        module_calls=[],
+        api_aliases={},
+        file_suppressions=set(),
+        line_suppressions={},
+    )
+    _collect_pragmas(mod)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        mod.parse_error = f"{type(exc).__name__}: {exc.msg} (line {exc.lineno})"
+        return mod
+    mod.tree = tree
+    mod.api_aliases = _collect_api_aliases(tree)
+    bytecode_index = _index_code_objects(source, path)
+    walker = _FunctionWalker(mod, bytecode_index)
+    walker.walk(tree)
+    return mod
+
+
+def _collect_pragmas(mod: ScannedModule) -> None:
+    for lineno, line in enumerate(mod.lines, start=1):
+        m = _PRAGMA_RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
+        if m.group(1) == "allow-file":
+            mod.file_suppressions |= rules
+        else:
+            mod.line_suppressions.setdefault(lineno, set()).update(rules)
+
+
+def _collect_api_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Map local names to the measurement-API entity they bind.
+
+    ``import repro.core as rmon`` -> ``{"rmon": "<module>"}``;
+    ``from repro.core import region, init`` -> ``{"region": "region", ...}``.
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in _API_MODULES:
+                    aliases[(a.asname or a.name).split(".")[0]] = "<module>"
+        elif isinstance(node, ast.ImportFrom):
+            if node.module in _API_MODULES:
+                for a in node.names:
+                    if a.name in _API_NAMES:
+                        aliases[a.asname or a.name] = a.name
+            elif node.module == "repro" and node.level == 0:
+                for a in node.names:
+                    if a.name == "core":
+                        aliases[a.asname or "core"] = "<module>"
+    return aliases
+
+
+def _index_code_objects(source: str, path: str) -> Dict[Tuple[str, int], Any]:
+    """Compile (not execute) the module and index nested code objects.
+
+    Keyed by ``(co_name, co_firstlineno)`` so AST function defs can be
+    matched to their bytecode for ``dis``-level facts (call instruction
+    counts, generator/coroutine flags).  Compilation failure is tolerated —
+    the AST walk already captured structure.
+    """
+    index: Dict[Tuple[str, int], Any] = {}
+    try:
+        top = compile(source, path, "exec")
+    except (SyntaxError, ValueError):
+        return index
+    stack = [top]
+    while stack:
+        code = stack.pop()
+        index.setdefault((code.co_name, code.co_firstlineno), code)
+        for const in code.co_consts:
+            if isinstance(const, type(top)):
+                stack.append(const)
+    return index
+
+
+_LOOP_NODES = (ast.For, ast.While, ast.AsyncFor)
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted rendering of a call target expression."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func) + "()"
+    return ""
+
+
+class _FunctionWalker:
+    """AST walk building qualnames, call sites, and shape classification."""
+
+    def __init__(self, mod: ScannedModule, bytecode_index: Dict[Tuple[str, int], Any]):
+        self.mod = mod
+        self.bytecode = bytecode_index
+
+    def walk(self, tree: ast.Module) -> None:
+        self._scope(tree.body, qual_prefix="", loop_depth=0,
+                    sink=self.mod.module_calls)
+
+    def _scope(self, body: List[ast.stmt], qual_prefix: str, loop_depth: int,
+               sink: List[CallSite]) -> None:
+        for stmt in body:
+            self._stmt(stmt, qual_prefix, loop_depth, sink)
+
+    def _stmt(self, stmt: ast.stmt, qual_prefix: str, loop_depth: int,
+              sink: List[CallSite]) -> None:
+        if isinstance(stmt, _FUNC_NODES):
+            self._function(stmt, qual_prefix)
+            return
+        if isinstance(stmt, ast.ClassDef):
+            prefix = f"{qual_prefix}{stmt.name}."
+            self._scope(stmt.body, prefix, loop_depth, sink)
+            return
+        if isinstance(stmt, _LOOP_NODES):
+            for expr_field in ("iter", "test"):
+                sub = getattr(stmt, expr_field, None)
+                if sub is not None:
+                    self._calls_in(sub, loop_depth, sink)
+            self._scope(stmt.body, qual_prefix, loop_depth + 1, sink)
+            self._scope(stmt.orelse, qual_prefix, loop_depth, sink)
+            return
+        # Generic statement: collect calls at this depth, recurse into any
+        # nested statement lists (if/with/try bodies stay at the same depth).
+        for field_name, value in ast.iter_fields(stmt):
+            if isinstance(value, list) and value and isinstance(value[0], ast.stmt):
+                self._scope(value, qual_prefix, loop_depth, sink)
+            elif isinstance(value, ast.expr):
+                self._calls_in(value, loop_depth, sink)
+            elif isinstance(value, list):
+                for item in value:
+                    if isinstance(item, ast.stmt):
+                        self._scope([item], qual_prefix, loop_depth, sink)
+                    elif isinstance(item, ast.expr):
+                        self._calls_in(item, loop_depth, sink)
+                    elif isinstance(item, (ast.withitem, ast.excepthandler)):
+                        self._handler_like(item, qual_prefix, loop_depth, sink)
+
+    def _handler_like(self, item: Any, qual_prefix: str, loop_depth: int,
+                      sink: List[CallSite]) -> None:
+        if isinstance(item, ast.withitem):
+            self._calls_in(item.context_expr, loop_depth, sink)
+        elif isinstance(item, ast.excepthandler):
+            self._scope(item.body, qual_prefix, loop_depth, sink)
+
+    def _calls_in(self, expr: ast.expr, loop_depth: int,
+                  sink: List[CallSite]) -> None:
+        stack: List[Tuple[ast.AST, int]] = [(expr, loop_depth)]
+        while stack:
+            node, depth = stack.pop()
+            if isinstance(node, ast.Lambda):
+                continue  # the lambda body does not run at this site
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name:
+                    sink.append(CallSite(
+                        callee=name,
+                        line=getattr(node, "lineno", 0),
+                        loop_depth=depth,
+                    ))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                # Comprehension bodies iterate: calls inside run per element.
+                depth += 1
+            for child in ast.iter_child_nodes(node):
+                stack.append((child, depth))
+
+    # -- one function def --------------------------------------------------
+
+    def _function(self, node: ast.stmt, qual_prefix: str) -> None:
+        qualname = f"{qual_prefix}{node.name}"
+        info = FunctionInfo(
+            name=node.name,
+            qualname=qualname,
+            module=self.mod.module,
+            frameless_module=self.mod.frameless_module,
+            file=self.mod.path,
+            line=node.lineno,
+            is_async=isinstance(node, ast.AsyncFunctionDef),
+            decorators=[dotted_name(d) for d in node.decorator_list],
+            node=node,
+        )
+        info.is_dunder = (
+            node.name.startswith("__") and node.name.endswith("__")
+        )
+        info.is_property = any(
+            d in ("property", "cached_property", "functools.cached_property")
+            or d.endswith(".setter") or d.endswith(".getter")
+            for d in info.decorators
+        )
+
+        body = node.body
+        if (body and isinstance(body[0], ast.Expr)
+                and isinstance(body[0].value, ast.Constant)
+                and isinstance(body[0].value.value, str)):
+            body = body[1:]  # docstring is not behavior
+
+        info.body_nodes = sum(1 for _ in _walk_own(body))
+
+        # Generator / loop / return facts — nested defs excluded.
+        for sub in _walk_own(body):
+            if isinstance(sub, (ast.Yield, ast.YieldFrom)):
+                info.is_generator = True
+            elif isinstance(sub, _LOOP_NODES):
+                info.has_loop = True
+            elif isinstance(sub, ast.Return) and sub.value is not None:
+                info.returns_value = True
+
+        # Call sites, with loop depth relative to this function's body.
+        self._scope(body, f"{qualname}.<locals>.", 0, info.calls)
+
+        # Shape classification of the (docstring-stripped) body.
+        if len(body) == 1:
+            stmt = body[0]
+            expr = None
+            if isinstance(stmt, ast.Return):
+                expr = stmt.value
+            elif isinstance(stmt, ast.Expr):
+                expr = stmt.value
+            elif isinstance(stmt, ast.Pass):
+                info.simple_body = True
+            if expr is not None:
+                calls = [n for n in ast.walk(expr) if isinstance(n, ast.Call)]
+                if not calls and info.body_nodes <= 12:
+                    info.simple_body = True
+                elif (len(calls) == 1 and isinstance(expr, ast.Call)
+                      and expr is calls[0]):
+                    info.wrapped_call = dotted_name(expr.func)
+
+        code = self.bytecode.get((node.name, node.lineno))
+        if code is None:
+            # Decorated defs: co_firstlineno may point at the first decorator.
+            for deco in node.decorator_list:
+                code = self.bytecode.get((node.name, deco.lineno))
+                if code is not None:
+                    break
+        if code is not None:
+            info.bytecode_calls = sum(
+                1 for ins in dis.get_instructions(code)
+                if ins.opname.startswith("CALL")
+            )
+            flags = code.co_flags
+            if flags & 0x20 or flags & 0x200:  # CO_GENERATOR | CO_ASYNC_GENERATOR
+                info.is_generator = True
+            if flags & 0x80:  # CO_COROUTINE
+                info.is_async = True
+
+        self.mod.functions.append(info)
+        # Module-level fan-in: a def statement itself is not a call; nested
+        # defs are reached through the recursion above.
+
+
+def _walk_own(body: List[ast.stmt]):
+    """Walk statements, not descending into nested function definitions."""
+    stack: List[ast.AST] = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FUNC_NODES):
+                continue
+            stack.append(child)

@@ -103,6 +103,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="emit report.html at finalize: flips the active "
                         "measurement's report flag when launched under "
                         "repro.scorep, else starts a measurement of its own")
+    p.add_argument("--static-plan", dest="static_plan", default="",
+                   help="static_plan.json from `analysis plan`: applied to "
+                        "the active measurement (or the one --report starts)")
     return p
 
 
@@ -115,8 +118,15 @@ def main(argv=None) -> int:
             m.config.report = True
         else:
             rmon.init(experiment="serve", report=True,
+                      static_plan=ns.static_plan,
                       substrates=("profiling", "tracing", "metrics", "memory"))
             owns_measurement = True
+    if ns.static_plan and not owns_measurement:
+        m = rmon.active()
+        if m is not None:
+            from repro.core.staticpass import apply_plan, load_plan
+
+            apply_plan(m, load_plan(ns.static_plan))
     cfg = get_smoke_config(ns.arch) if ns.smoke else get_config(ns.arch)
     result = serve(cfg, batch=ns.batch, prompt_len=ns.prompt_len, gen=ns.gen,
                    use_mesh=ns.mesh)

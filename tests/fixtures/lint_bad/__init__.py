@@ -1,0 +1,6 @@
+"""Fixture package for the measurement-API linter tests.
+
+Every module here is deliberately wrong; tests/test_staticpass.py asserts
+each lint rule fires exactly once over this package.  Never import this
+package — it is scanned, not executed.
+"""

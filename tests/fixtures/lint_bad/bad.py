@@ -1,0 +1,31 @@
+"""Deliberate measurement-API misuse — one violation per lint rule.
+
+The line of each violation is asserted in tests/test_staticpass.py; keep
+one rule per function and do not add calls that would double-fire a rule.
+"""
+
+import sys
+import threading
+import time
+
+import repro.core as rmon
+
+
+def leaked_region():
+    rmon.region("leaked")  # SP101: created but never entered
+
+
+def early_worker():
+    t = threading.Thread(target=print)
+    t.start()  # SP202: started before the instrumenter installs
+    rmon.init(instrumenter="profile")  # SP102: module never finalizes
+
+
+def foreign_hook():
+    sys.setprofile(print)  # SP201: collides with the active instrumenter
+
+
+def hot_poll(n):
+    for _ in range(n):
+        with rmon.region("poll"):
+            time.sleep(0.01)  # SP301: blocking call charged to a hot region

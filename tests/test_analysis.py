@@ -79,10 +79,54 @@ def test_missing_artifact_exit_codes_are_uniform(tmp_path, capsys):
         ["merge-summary", str(empty / "nope.json")],
         ["merge-summary", str(empty)],  # dir form: no summary inside
         ["report", str(empty)],
+        ["plan", str(empty / "nope")],  # bad path: no such file
+        ["plan", str(empty)],  # dir form: no Python sources inside
+        ["lint", str(empty / "nope")],
+        ["lint", str(empty)],
     ):
         assert main(argv) == 2, argv
         err = capsys.readouterr().err
         assert err.startswith("error:"), (argv, err)
+
+
+def test_lint_exit_codes(tmp_path, capsys):
+    """`analysis lint` follows the linter convention: 1 with violations,
+    0 when clean (on top of the uniform exit-2 for bad paths)."""
+    from repro.core.analysis import main
+
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f():\n    return 1\n")
+    assert main(["lint", str(clean)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("import sys\nsys.setprofile(print)\n")
+    assert main(["lint", str(bad)]) == 1
+    captured = capsys.readouterr()
+    assert "SP201" in captured.out
+    assert "violation" in captured.err
+
+
+def test_plan_cli_writes_artifact(tmp_path, capsys):
+    from repro.core.analysis import main
+
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "__init__.py").write_text("")
+    (pkg / "mod.py").write_text(
+        "def tiny(x):\n    return x + 1\n"
+        "def loop(n):\n    s = 0\n"
+        "    for i in range(n):\n        s += tiny(i)\n    return s\n"
+    )
+    out = tmp_path / "static_plan.json"
+    assert main(["plan", str(pkg), "--out", str(out)]) == 0
+    assert "plan written to" in capsys.readouterr().out
+    plan = json.loads(out.read_text())
+    assert plan["functions"] == 2
+    assert any("tiny" in p for p in plan["filter"]["patterns"])
+    # --smoke without --out verifies the round-trip and writes nothing
+    assert main(["plan", str(pkg), "--smoke"]) == 0
+    assert "plan smoke OK" in capsys.readouterr().out
 
 
 def test_merge_summary_accepts_directory(tmp_path, capsys):

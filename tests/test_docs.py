@@ -101,6 +101,7 @@ def test_artifacts_md_documents_every_artifact():
         "meta.json",
         "defs.json",
         "merged_trace_summary.json",
+        "static_plan.json",
         "report.html",
         "report_schema_version",
     ):

@@ -103,3 +103,67 @@ def test_columns_roundtrip(events):
         assert int(cols["region"][i]) == r
         assert int(cols["t"][i]) == t
         assert int(cols["aux"][i]) == a
+
+
+# ---------------------------------------------------------------------------
+# filter spec round-trip (repro.core.filtering + staticpass plan merging)
+# ---------------------------------------------------------------------------
+
+# Pattern alphabet avoids the spec grammar's separators (';' between
+# clauses, ',' between patterns, ':' after the clause keyword) but keeps
+# fnmatch metacharacters — globs must survive the round trip too.
+_pattern = st.text(
+    alphabet="abcdefgzXY019._*?", min_size=1, max_size=12
+).filter(lambda s: s.strip())
+_name = st.text(alphabet="abcdefgz019_", min_size=1, max_size=8)
+_module = st.lists(_name, min_size=1, max_size=3).map(".".join)
+
+
+@given(
+    st.lists(_pattern, max_size=4),
+    st.lists(_pattern, max_size=4),
+    st.lists(_pattern, max_size=4),
+    st.lists(st.tuples(_module, _name), min_size=1, max_size=8),
+)
+@settings(max_examples=200, deadline=None)
+def test_filter_spec_round_trip_preserves_verdicts(inc, exc, rexc, probes):
+    """``Filter.from_spec(f.to_spec())`` preserves every decide() verdict —
+    including absolute ``exclude!`` rules (governor/static-plan channel),
+    across all rule-combination semantics (allow-list, mixed, exclude-only).
+    This is the contract that makes static_plan.json filter specs and
+    governor suggested filters safe to paste into ``--filter``."""
+    from repro.core.filtering import Filter
+
+    f = Filter(include=inc, exclude=exc, runtime_exclude=rexc)
+    g = Filter.from_spec(f.to_spec())
+    assert g.to_spec() == f.to_spec()  # idempotent serialization
+    for module, func in probes:
+        file = module.replace(".", "/") + ".py"
+        assert f.decide(module, func, file) == g.decide(module, func, file), (
+            f.to_spec(), module, func,
+        )
+
+
+@given(
+    st.lists(_pattern, max_size=3),
+    st.lists(_pattern, max_size=3),
+    st.lists(_pattern, min_size=1, max_size=4),
+    st.lists(st.tuples(_module, _name), min_size=1, max_size=8),
+)
+@settings(max_examples=200, deadline=None)
+def test_plan_merged_filter_only_tightens_and_round_trips(inc, exc, plan_pats, probes):
+    """Merging plan patterns via add_runtime_excludes can only remove
+    regions (never re-admit), and the merged filter still round-trips."""
+    from repro.core.filtering import Filter
+
+    base = Filter(include=list(inc), exclude=list(exc))
+    merged = Filter(include=list(inc), exclude=list(exc))
+    merged.add_runtime_excludes(plan_pats)
+    g = Filter.from_spec(merged.to_spec())
+    for module, func in probes:
+        file = module.replace(".", "/") + ".py"
+        before = base.decide(module, func, file)
+        after = merged.decide(module, func, file)
+        assert after == g.decide(module, func, file)
+        if not before:
+            assert not after  # merging never re-admits

@@ -1,0 +1,452 @@
+"""Static-analysis subsystem tests (repro.core.staticpass).
+
+Covers the scanner's module-naming parity with the live registry, the
+classifier's verdicts, the plan artifact contract (round-trip, exit-2
+errors), the linter's rule set against the tests/fixtures/lint_bad fixture
+(each rule exactly once) and against this repo itself (zero violations),
+and the plan -> measurement -> governor -> report integration.
+"""
+
+import json
+import os
+
+import pytest
+
+import repro.core as rmon
+from repro.core.filtering import Filter
+from repro.core.measurement import Measurement, MeasurementConfig
+from repro.core.schema import MissingArtifact
+from repro.core.staticpass import (
+    RULES,
+    apply_plan,
+    build_plan,
+    lint_paths,
+    load_plan,
+    module_name_for,
+    plan_exclude_patterns,
+    plan_vs_observed,
+    save_plan,
+    scan_paths,
+    verify_plan,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_REPRO = os.path.join(REPO, "src", "repro")
+LINT_BAD = os.path.join(REPO, "tests", "fixtures", "lint_bad")
+
+
+# ---------------------------------------------------------------------------
+# scanner: module naming
+# ---------------------------------------------------------------------------
+
+
+def test_module_name_matches_package_layout():
+    """Dotted module names climb packages — including the repro namespace
+    package (src/repro has no __init__.py) — and stop at project roots."""
+    cases = {
+        os.path.join(SRC_REPRO, "data", "synthetic.py"): "repro.data.synthetic",
+        os.path.join(SRC_REPRO, "core", "filtering.py"): "repro.core.filtering",
+        os.path.join(SRC_REPRO, "data", "__init__.py"): "repro.data",
+    }
+    for path, expected in cases.items():
+        assert module_name_for(path) == expected, path
+
+
+def test_module_name_bare_script(tmp_path):
+    """A packageless script keeps its stem — no namespace hop is invented
+    for a file that never sat inside a real package."""
+    script = tmp_path / "kernel.py"
+    script.write_text("x = 1\n")
+    assert module_name_for(str(script)) == "kernel"
+
+
+def test_module_naming_parity_with_live_registry(tmp_path):
+    """The satellite cross-check: for repro.data, the planner's dotted
+    module names must be exactly what a live RegionRegistry records when
+    the same functions actually run under the profile instrumenter."""
+    plan = build_plan([os.path.join(SRC_REPRO, "data")])
+    planned = {(r["module"], r["name"]) for r in plan["records"]}
+
+    # Import before start(): class-body code objects execute at import time
+    # and would register as regions, but the planner deliberately records
+    # functions only.
+    from repro.data.synthetic import DataConfig, SyntheticLM, _mix
+    import numpy as np
+
+    m = Measurement(MeasurementConfig(
+        instrumenter="profile", substrates=("profiling",),
+        run_dir=str(tmp_path / "parity-run"),
+    ))
+    m.start()
+    try:
+        lm = SyntheticLM(DataConfig(vocab=64, seq_len=8, global_batch=2))
+        lm.batch(0)
+        _mix(np.arange(4, dtype=np.uint64), 3)
+    finally:
+        m.finalize()
+
+    data_dir = os.path.join(SRC_REPRO, "data")
+    observed = {
+        (row["module"], row["name"])
+        for row in m.regions.snapshot()
+        if row.get("file", "").startswith(data_dir) and "<" not in row["name"]
+    }
+    assert observed, "live run registered no repro.data regions"
+    missing = observed - planned
+    assert not missing, f"live registry names the plan missed: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# classifier
+# ---------------------------------------------------------------------------
+
+
+def _classify(tmp_path, source):
+    path = tmp_path / "mod.py"
+    path.write_text(source)
+    from repro.core.staticpass.classify import classify_modules
+
+    out = classify_modules(scan_paths([str(path)]))
+    return {c.info.qualname: c for c in out}
+
+
+def test_classifier_trivial_hot_exclude(tmp_path):
+    by_name = _classify(tmp_path, (
+        "def tiny(x):\n    return x + 1\n"
+        "def loop(n):\n    s = 0\n"
+        "    for i in range(n):\n        s += tiny(i)\n    return s\n"
+    ))
+    tiny = by_name["tiny"]
+    assert "trivial" in tiny.classes and "hot" in tiny.classes
+    assert tiny.verdict == "exclude"
+    assert tiny.est_rate > by_name["loop"].est_rate
+    assert by_name["loop"].verdict == "keep"
+
+
+def test_classifier_generator_async_cost_class(tmp_path):
+    by_name = _classify(tmp_path, (
+        "def gen():\n    yield 1\n"
+        "async def coro():\n    return 1\n"
+    ))
+    assert by_name["gen"].cost_class == "yield"
+    assert "generator" in by_name["gen"].classes
+    assert by_name["coro"].cost_class == "yield"
+    assert "async" in by_name["coro"].classes
+
+
+def test_classifier_recursive_and_cwrapper(tmp_path):
+    by_name = _classify(tmp_path, (
+        "import math\n"
+        "def fact(n):\n    return 1 if n < 2 else n * fact(n - 1)\n"
+        "def wrap(x):\n    return math.sqrt(x)\n"
+    ))
+    assert "recursive" in by_name["fact"].classes
+    assert "hot" in by_name["fact"].classes
+    assert "cwrapper" in by_name["wrap"].classes
+    assert by_name["wrap"].verdict == "sample"
+
+
+# ---------------------------------------------------------------------------
+# plan artifact contract
+# ---------------------------------------------------------------------------
+
+
+def test_plan_round_trip_and_both_module_forms(tmp_path):
+    # The project marker pins the import root: without it the namespace
+    # heuristic may climb one level past the package (pytest tmp dirs are
+    # anonymous; real checkouts have pyproject/setup/.git at the root).
+    (tmp_path / "pyproject.toml").write_text("")
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "__init__.py").write_text("")
+    (pkg / "mod.py").write_text(
+        "def tiny(x):\n    return x + 1\n"
+        "def drive(n):\n    return [tiny(i) for i in range(n)]\n"
+    )
+    plan = build_plan([str(pkg)])
+    verify_plan(plan)
+    assert plan["report_schema_version"] >= 1
+    patterns = plan_exclude_patterns(plan)
+    # both the dotted (framed) and the stem (frameless) module form
+    assert "pkg.mod.tiny" in patterns and "mod.tiny" in patterns
+    spec = plan["filter"]["spec"]
+    assert Filter.from_spec(spec).to_spec() == spec
+    flt = Filter.from_spec(spec)
+    assert not flt.decide("pkg.mod", "tiny", str(pkg / "mod.py"))
+    assert not flt.decide("mod", "tiny", str(pkg / "mod.py"))
+    assert flt.decide("pkg.mod", "drive", str(pkg / "mod.py"))
+
+
+def test_plan_save_load_and_exit2_errors(tmp_path):
+    (tmp_path / "m.py").write_text("def f():\n    return 1\n")
+    plan = build_plan([str(tmp_path / "m.py")])
+    path = save_plan(plan, str(tmp_path / "static_plan.json"))
+    loaded = load_plan(path)
+    assert loaded["functions"] == plan["functions"]
+    # directory form resolves to static_plan.json inside
+    assert load_plan(str(tmp_path))["functions"] == plan["functions"]
+
+    with pytest.raises(MissingArtifact):
+        load_plan(str(tmp_path / "nope.json"))
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{truncated")
+    with pytest.raises(MissingArtifact):
+        load_plan(str(corrupt))
+    not_a_plan = tmp_path / "other.json"
+    not_a_plan.write_text(json.dumps({"foo": 1}))
+    with pytest.raises(MissingArtifact):
+        load_plan(str(not_a_plan))
+
+
+def test_scan_bad_path_raises_missing_artifact(tmp_path):
+    with pytest.raises(MissingArtifact):
+        scan_paths([str(tmp_path / "nope")])
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(MissingArtifact):
+        scan_paths([str(empty)])
+
+
+def test_plan_records_syntax_errors_without_dying(tmp_path):
+    (tmp_path / "ok.py").write_text("def f():\n    return 1\n")
+    (tmp_path / "broken.py").write_text("def oops(:\n")
+    plan = build_plan([str(tmp_path)])
+    assert any("broken.py" in e["file"] for e in plan["errors"])
+    assert plan["functions"] >= 1  # the parsable file still contributes
+
+
+# ---------------------------------------------------------------------------
+# linter
+# ---------------------------------------------------------------------------
+
+
+def test_lint_fixture_each_rule_fires_exactly_once():
+    violations = lint_paths([LINT_BAD])
+    by_rule = {}
+    for v in violations:
+        by_rule.setdefault(v.rule_id, []).append(v)
+    for rule_id in RULES:
+        assert len(by_rule.get(rule_id, [])) == 1, (
+            f"{rule_id} fired {len(by_rule.get(rule_id, []))}x: "
+            f"{[v.format() for v in by_rule.get(rule_id, [])]}"
+        )
+    assert len(violations) == len(RULES)
+    # diagnostics carry file:line and the stable id + name
+    v = by_rule["SP101"][0]
+    assert v.format().startswith(f"{v.file}:{v.line}: SP101 region-not-entered")
+
+
+def test_lint_self_clean_over_repo():
+    """The CI gate, as a test: our own sources, examples, and benchmarks
+    hold zero measurement-API violations (instrumenter modules carry
+    explicit allow-file pragmas — installing hooks is their job)."""
+    violations = lint_paths([
+        SRC_REPRO,
+        os.path.join(REPO, "examples"),
+        os.path.join(REPO, "benchmarks"),
+    ])
+    assert violations == [], [v.format() for v in violations]
+
+
+def test_lint_suppression_pragmas(tmp_path):
+    line = tmp_path / "line.py"
+    line.write_text(
+        "import sys\n"
+        "sys.setprofile(print)  # repro-lint: allow=SP201\n"
+        "sys.settrace(print)\n"
+    )
+    vs = lint_paths([str(line)])
+    assert [v.line for v in vs] == [3]  # only the unsuppressed one
+
+    file_scoped = tmp_path / "file.py"
+    file_scoped.write_text(
+        "# repro-lint: allow-file=foreign-hook-install\n"
+        "import sys\n"
+        "sys.setprofile(print)\n"
+        "sys.settrace(print)\n"
+    )
+    assert lint_paths([str(file_scoped)]) == []
+
+
+# ---------------------------------------------------------------------------
+# integration: plan -> measurement -> governor -> report
+# ---------------------------------------------------------------------------
+
+KERNEL_SRC = (
+    "def add(val):\n"
+    "    return val + 1\n"
+    "def main(n):\n"
+    "    total = 0\n"
+    "    for i in range(n):\n"
+    "        total = add(total)\n"
+    "    return total\n"
+)
+
+
+def _kernel_plan(tmp_path):
+    kpath = tmp_path / "case2_kernel.py"
+    kpath.write_text(KERNEL_SRC)
+    plan = build_plan([str(kpath)])
+    return str(kpath), save_plan(plan, str(tmp_path / "static_plan.json"))
+
+
+def test_static_plan_env_round_trip(tmp_path):
+    _, plan_path = _kernel_plan(tmp_path)
+    cfg = MeasurementConfig(static_plan=plan_path)
+    env = dict(os.environ)
+    env.update(cfg.to_env())
+    assert MeasurementConfig.from_env(env).static_plan == plan_path
+    # unset stays unset (no empty-string key leaks into the child env)
+    assert "REPRO_MONITOR_STATIC_PLAN" not in MeasurementConfig().to_env()
+
+
+def test_measurement_applies_plan_and_copies_artifact(tmp_path):
+    kpath, plan_path = _kernel_plan(tmp_path)
+    m = Measurement(MeasurementConfig(
+        run_dir=str(tmp_path / "run"), static_plan=plan_path,
+        substrates=("profiling",),
+    ))
+    assert "case2_kernel.add" in m.filter.runtime_exclude
+    m.start()
+    try:
+        g = {"__name__": "case2_kernel", "__file__": kpath}
+        exec(compile(KERNEL_SRC, kpath, "exec"), g)
+        g["main"](5000)
+    finally:
+        m.finalize()
+    # provenance copy lands in the run dir and loads as a plan
+    copied = load_plan(m.run_dir)
+    assert copied["filter"]["patterns"] == plan_exclude_patterns(copied)
+    flat = json.load(open(os.path.join(m.run_dir, "profile.json")))["flat"]
+    assert not any(k.endswith(":add") for k in flat), list(flat)
+    assert any("main" in k for k in flat)
+
+
+def test_bad_plan_path_fails_at_construction(tmp_path):
+    with pytest.raises(MissingArtifact):
+        Measurement(MeasurementConfig(
+            run_dir=str(tmp_path / "run"),
+            static_plan=str(tmp_path / "nope.json"),
+        ))
+
+
+def test_plan_merges_under_exclude_precedence(tmp_path):
+    """Plan excludes ride the runtime-exclude (exclude!) channel: they
+    tighten an include-only allow-list instead of flipping it, and survive
+    a to_spec/from_spec round trip alongside user rules."""
+    _, plan_path = _kernel_plan(tmp_path)
+    m = Measurement(MeasurementConfig(
+        run_dir=str(tmp_path / "run"),
+        filter_spec="include:case2_kernel.*",
+        static_plan=plan_path,
+    ))
+    flt = m.filter
+    assert flt.decide("case2_kernel", "main", "case2_kernel.py")
+    assert not flt.decide("case2_kernel", "add", "case2_kernel.py")
+    assert not flt.decide("elsewhere", "anything", "elsewhere.py")  # allow-list held
+    round_tripped = Filter.from_spec(flt.to_spec())
+    assert not round_tripped.decide("case2_kernel", "add", "case2_kernel.py")
+    assert round_tripped.decide("case2_kernel", "main", "case2_kernel.py")
+
+
+def test_governor_seeded_and_documented(tmp_path):
+    kpath, plan_path = _kernel_plan(tmp_path)
+    m = Measurement(MeasurementConfig(
+        run_dir=str(tmp_path / "run"), static_plan=plan_path,
+        substrates=(), budget=0.05,
+    ))
+    assert m.governor is not None
+    assert "case2_kernel:add" in m.governor._plan_offenders
+    m.start()
+    try:
+        g = {"__name__": "case2_kernel", "__file__": kpath}
+        exec(compile(KERNEL_SRC, kpath, "exec"), g)
+        g["main"](2000)
+    finally:
+        m.finalize()
+    doc = json.load(open(os.path.join(m.run_dir, "governor.json")))
+    assert doc["static_plan"]["predicted_offenders"] >= 1
+    assert doc["static_plan"]["patterns"] >= 1
+
+
+def test_apply_plan_to_live_measurement(tmp_path):
+    """apply_plan works mid-run too: runtime excludes tighten and cached
+    region verdicts are refiltered (launch --static-plan path)."""
+    kpath, plan_path = _kernel_plan(tmp_path)
+    m = Measurement(MeasurementConfig(
+        run_dir=str(tmp_path / "run"), substrates=("profiling",),
+    ))
+    m.start()
+    try:
+        g = {"__name__": "case2_kernel", "__file__": kpath}
+        exec(compile(KERNEL_SRC, kpath, "exec"), g)
+        g["main"](100)  # registers case2_kernel:add with a keep verdict
+        added = apply_plan(m, load_plan(plan_path))
+        assert "case2_kernel.add" in added
+        g["main"](5000)  # post-plan traffic must not record add
+    finally:
+        m.finalize()
+    flat = json.load(open(os.path.join(m.run_dir, "profile.json")))["flat"]
+    add_rows = {k: v for k, v in flat.items() if k.endswith(":add")}
+    # at most the 100 pre-plan visits survive; the 5000 post-plan do not
+    assert all(v["visits"] <= 100 for v in add_rows.values()), add_rows
+
+
+def test_plan_vs_observed_buckets():
+    plan = {
+        "predicted_offenders": [
+            {"region": "m:pre", "frameless_region": "m:pre", "verdict": "exclude"},
+            {"region": "m:conf", "frameless_region": "m:conf", "verdict": "sample"},
+            {"region": "m:unconf", "frameless_region": "m:unconf", "verdict": "sample"},
+        ],
+    }
+    gov = {
+        "regions": [
+            {"region": "m:conf", "excluded": True},
+            {"region": "m:unconf", "excluded": False},
+            {"region": "m:surprise", "excluded": True},
+        ],
+        "actions": [],
+    }
+    vs = plan_vs_observed(plan, gov)
+    assert vs["pre_excluded"] == ["m:pre"]
+    assert vs["confirmed"] == ["m:conf"]
+    assert vs["unconfirmed"] == ["m:unconf"]
+    assert vs["unpredicted"] == ["m:surprise"]
+    assert vs["governed"] is True
+    ungoverned = plan_vs_observed(plan, None)
+    assert ungoverned["governed"] is False and ungoverned["confirmed"] == []
+
+
+def test_report_renders_plan_section(tmp_path):
+    kpath, plan_path = _kernel_plan(tmp_path)
+    m = Measurement(MeasurementConfig(
+        run_dir=str(tmp_path / "run"), static_plan=plan_path,
+        substrates=("profiling",), budget=0.05,
+    ))
+    m.start()
+    try:
+        g = {"__name__": "case2_kernel", "__file__": kpath}
+        exec(compile(KERNEL_SRC, kpath, "exec"), g)
+        g["main"](2000)
+    finally:
+        m.finalize()
+    from repro.core.report import build_report, render_report
+
+    doc = build_report(m.run_dir)
+    assert doc["plan"] is not None
+    assert doc["plan"]["vs_observed"]["governed"] is True
+    assert "case2_kernel:add" in doc["plan"]["vs_observed"]["pre_excluded"]
+    assert "Static plan vs observed" in render_report(doc)
+
+
+def test_scorep_cli_carries_static_plan(tmp_path):
+    """repro.scorep --static-plan lands in the composed child environment."""
+    from repro.core.bootstrap import build_parser, compose_environment
+
+    _, plan_path = _kernel_plan(tmp_path)
+    ns = build_parser().parse_args(
+        ["--static-plan", plan_path, "target.py"]
+    )
+    env = compose_environment(ns, {})
+    assert env["REPRO_MONITOR_STATIC_PLAN"] == plan_path
