@@ -1,0 +1,265 @@
+"""Live-agent overhead — what continuous monitoring costs the measured
+process.
+
+Three measurements:
+
+1. **Ring throughput** — vectorized publish/drain rate of the shared-memory
+   ring (records/s) with a live reader, plus the drop rate under a reader
+   that stops draining (the never-block contract: the writer keeps its pace
+   and counts whole-batch drops instead of stalling the measured process).
+2. **Publish-path dilation** — the same measured workload with the agent on
+   vs off; the agent's own cost accounting (``publish_ns`` vs wall time)
+   gives the publish fraction the governor charges against the budget.
+3. **Governed publish fraction** — with the governor enabled, assert the
+   publish path stays under its budget share (the <1% claim ``--smoke``
+   gates in CI) with zero ring drops while a live reader follows.
+
+    PYTHONPATH=src python benchmarks/agent_overhead.py           # full
+    PYTHONPATH=src python benchmarks/agent_overhead.py --smoke   # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.agent.ringbus import (
+    RingReader,
+    RingWriter,
+    decode_records,
+    encode_columns,
+)
+from repro.core.buffer import COLUMNS, EV_ENTER, EV_EXIT
+
+#: --smoke gates: publish fraction of wall time (the <1% claim) and the
+#: minimum acceptable ring transport rate (very conservative floor).
+SMOKE_MAX_PUBLISH_FRACTION = 0.01
+SMOKE_MIN_RECORDS_PER_S = 1e5
+
+
+def _batch(n_pairs: int) -> np.ndarray:
+    kinds = np.tile(np.array([EV_ENTER, EV_EXIT], dtype=COLUMNS[0][1]), n_pairs)
+    regions = np.zeros(2 * n_pairs, dtype=COLUMNS[1][1])
+    t = np.arange(2 * n_pairs, dtype=COLUMNS[2][1])
+    aux = np.zeros(2 * n_pairs, dtype=COLUMNS[3][1])
+    return encode_columns({"kind": kinds, "region": regions, "t": t, "aux": aux})
+
+
+def bench_ring_throughput(batches: int, pairs_per_batch: int) -> Dict[str, float]:
+    """Publish/drain rate with a reader keeping pace, in-process."""
+    with tempfile.TemporaryDirectory(prefix="repro-agent-bench-") as d:
+        ring = os.path.join(d, "agent.ring")
+        rec = _batch(pairs_per_batch)
+        w = RingWriter(ring, capacity=max(4 * len(rec), 1 << 12))
+        r = RingReader(ring)
+        drained = 0
+        t0 = time.perf_counter()
+        for _ in range(batches):
+            w.publish(rec)
+            drained += len(r.poll())
+        dt = time.perf_counter() - t0
+        published = batches * len(rec)
+        w.close()
+        r.close()
+    rate = published / dt
+    print(f"ring throughput: {rate / 1e6:7.2f} M records/s "
+          f"({batches} batches x {len(rec)} records, drained {drained})")
+    return {
+        "records_per_s": rate,
+        "published": published,
+        "drained": drained,
+        "drop_rate": 0.0 if drained == published else 1 - drained / published,
+    }
+
+
+def bench_slow_reader_drops(batches: int, pairs_per_batch: int) -> Dict[str, float]:
+    """A reader that stops draining: the writer never blocks, drops whole
+    batches, and counts every lost record."""
+    with tempfile.TemporaryDirectory(prefix="repro-agent-bench-") as d:
+        ring = os.path.join(d, "agent.ring")
+        rec = _batch(pairs_per_batch)
+        w = RingWriter(ring, capacity=2 * len(rec) + 8)
+        r = RingReader(ring)  # attached, then stops draining
+        t0 = time.perf_counter()
+        accepted = sum(1 for _ in range(batches) if w.publish(rec))
+        dt = time.perf_counter() - t0
+        drops = w.drops
+        survivors = len(decode_records(r.poll())[0])
+        w.close()
+        r.close()
+    assert drops == (batches - accepted) * len(rec), "drop accounting drifted"
+    print(f"slow reader: {accepted}/{batches} batches accepted, "
+          f"{drops} records dropped whole-batch in {dt * 1e3:.1f} ms "
+          f"({survivors} intact batches readable)")
+    return {
+        "batches": batches,
+        "accepted_batches": accepted,
+        "dropped_records": int(drops),
+        "drop_rate": drops / (batches * len(rec)),
+        "readable_batches": survivors,
+    }
+
+
+def _workload(m, iters: int, flush_threshold: int) -> float:
+    """Tight region loop; returns wall seconds."""
+    t0 = time.perf_counter()
+    ctx = m.region("hot")
+    for _ in range(iters):
+        with ctx:
+            pass
+    m.thread_buffer().flush()
+    return time.perf_counter() - t0
+
+
+def bench_publish_dilation(iters: int, flush_threshold: int) -> Dict[str, object]:
+    """End-to-end: same workload, agent off vs on (governed), comparing wall
+    time and reading the publisher's own cost ledger.
+
+    The workload is the instrumentation worst case — empty user regions at
+    ~1 us/visit, every event published — so the raw (ungoverned cold-start)
+    publish fraction here is an upper bound, not the steady state the smoke
+    gates on (see :func:`bench_governed_fraction`)."""
+    from repro.core.measurement import Measurement, MeasurementConfig
+
+    out: Dict[str, object] = {}
+    walls = {}
+    for label, agent in (("agent_off", False), ("agent_on", True)):
+        d = tempfile.mkdtemp(prefix=f"repro-agent-dilation-{label}-")
+        cfg = MeasurementConfig(
+            instrumenter="none", substrates=("profiling",), run_dir=d,
+            flush_threshold=flush_threshold, agent=agent, budget=0.05,
+        )
+        m = Measurement(cfg)
+        m.start()
+        try:
+            walls[label] = _workload(m, iters, flush_threshold)
+            if agent:
+                desc = m.agent.describe()
+                wall_ns = walls[label] * 1e9
+                out["publish_ns"] = desc["publish_ns"]
+                out["cold_publish_fraction"] = desc["publish_ns"] / wall_ns
+                out["ring_drops"] = desc["drops"]
+        finally:
+            m.finalize()
+        print(f"{label:10s}: {walls[label] * 1e3:8.1f} ms")
+    out["wall_s"] = walls
+    out["dilation"] = walls["agent_on"] / walls["agent_off"]
+    print(f"cold publish fraction: {out['cold_publish_fraction'] * 100:.3f}% "
+          f"of wall (worst case; dilation {out['dilation']:.3f}x, "
+          f"drops {out['ring_drops']})")
+    return out
+
+
+def bench_governed_fraction(
+    flush_threshold: int, warm_s: float = 1.5, measure_s: float = 1.0
+) -> Dict[str, object]:
+    """Governed steady state: run the worst-case workload long enough for
+    the publisher's stride controller to settle, then measure the publish
+    fraction over a clean window — the fraction the <1% smoke gate holds."""
+    from repro.core.measurement import Measurement, MeasurementConfig
+
+    d = tempfile.mkdtemp(prefix="repro-agent-governed-")
+    cfg = MeasurementConfig(
+        instrumenter="none", substrates=("profiling",), run_dir=d,
+        flush_threshold=flush_threshold, agent=True, budget=0.02,
+    )
+    m = Measurement(cfg)
+    m.start()
+    try:
+        pub = m.agent.publisher
+        pub.adjust_period_ns = int(0.25e9)  # settle fast; same controller
+        ctx = m.region("hot")
+
+        def spin(seconds: float) -> float:
+            end = time.perf_counter() + seconds
+            while time.perf_counter() < end:
+                for _ in range(2000):
+                    with ctx:
+                        pass
+            m.thread_buffer().flush()
+            return time.perf_counter()
+
+        spin(warm_s)
+        p0, t0 = pub.publish_ns, time.perf_counter_ns()
+        d0 = pub.writer.drops  # cold-start ramp (stride 1) may legitimately drop
+        spin(measure_s)
+        fraction = (pub.publish_ns - p0) / (time.perf_counter_ns() - t0)
+        desc = m.agent.describe()
+        window_drops = pub.writer.drops - d0
+    finally:
+        m.finalize()
+    out = {
+        "publish_fraction": fraction,
+        "budget": cfg.budget,
+        "stride": desc["stride"],
+        "thinned_batches": desc["thinned_batches"],
+        "thinned_records": desc["thinned_records"],
+        "ring_drops": desc["drops"],
+        "window_ring_drops": int(window_drops),
+    }
+    print(f"governed steady state: publish fraction {fraction * 100:.3f}% "
+          f"(stride {desc['stride']}, {desc['thinned_batches']} batches "
+          f"thinned, window drops {window_drops}, "
+          f"total incl. cold ramp {desc['drops']})")
+    return out
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="small sizes + assert the <1%% governed publish "
+                        "overhead and ring-throughput floors (CI)")
+    p.add_argument("--iters", type=int, default=None,
+                   help="workload region iterations")
+    p.add_argument("--batches", type=int, default=None,
+                   help="ring benchmark batch count")
+    p.add_argument("--flush-events", type=int, default=4096)
+    p.add_argument("--out", default="benchmarks/artifacts/agent_overhead.json")
+    ns = p.parse_args(argv)
+
+    iters = ns.iters or (60_000 if ns.smoke else 400_000)
+    batches = ns.batches or (2_000 if ns.smoke else 20_000)
+
+    doc: Dict[str, object] = {"smoke": ns.smoke, "iters": iters, "batches": batches}
+    doc["ring"] = bench_ring_throughput(batches, pairs_per_batch=256)
+    doc["slow_reader"] = bench_slow_reader_drops(200, pairs_per_batch=256)
+    doc["dilation"] = bench_publish_dilation(iters, ns.flush_events)
+    doc["governed"] = bench_governed_fraction(ns.flush_events)
+
+    if ns.smoke:
+        ring = doc["ring"]
+        gov = doc["governed"]
+        assert ring["records_per_s"] > SMOKE_MIN_RECORDS_PER_S, (
+            f"ring throughput collapsed: {ring['records_per_s']:.0f} records/s"
+        )
+        assert ring["drop_rate"] == 0.0, "drops with a reader keeping pace"
+        assert doc["slow_reader"]["dropped_records"] > 0, (
+            "slow-reader scenario produced no drops — overrun path untested"
+        )
+        assert gov["publish_fraction"] < SMOKE_MAX_PUBLISH_FRACTION, (
+            f"governed publish path costs {gov['publish_fraction'] * 100:.2f}% "
+            f"of wall time (gate: {SMOKE_MAX_PUBLISH_FRACTION * 100:.0f}%)"
+        )
+        assert gov["window_ring_drops"] == 0, (
+            f"live reader lost {gov['window_ring_drops']} records in the "
+            "governed steady-state window"
+        )
+        print("smoke gates passed: governed publish fraction "
+              f"{gov['publish_fraction'] * 100:.3f}% < "
+              f"{SMOKE_MAX_PUBLISH_FRACTION * 100:.0f}%, zero drops")
+
+    os.makedirs(os.path.dirname(ns.out), exist_ok=True)
+    with open(ns.out, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    print(f"wrote {ns.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

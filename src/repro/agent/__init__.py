@@ -1,0 +1,46 @@
+"""Live continuous-monitoring agent.
+
+A measured process with ``MeasurementConfig.agent`` set publishes its flush
+batches and metric samples into a lock-free shared-memory ring
+(:mod:`repro.agent.ringbus`) at a cost the governor accounts against the
+overhead budget.  A sidecar (in-process on rank 0, or an external
+``python -m repro.agent attach``) tails the ring(s), maintains rolling
+-window per-region statistics (:mod:`repro.agent.aggregator`), and serves
+``/report`` (live HTML), ``/stats.json`` (schema-stamped window payload)
+and ``/healthz`` (ring lag / drops) over loopback HTTP
+(:mod:`repro.agent.serve`).
+
+See ARCHITECTURE.md ("Live monitoring agent") for the ring layout, window
+semantics and the degradation ladder.
+"""
+
+from .aggregator import Aggregator, RingTail
+from .publisher import AgentPublisher
+from .ringbus import (
+    DEFS_FILENAME,
+    RING_FILENAME,
+    RingError,
+    RingReader,
+    RingWriter,
+    decode_records,
+    encode_columns,
+    encode_metric,
+)
+from .runtime import AgentRuntime
+from .serve import AgentServer
+
+__all__ = [
+    "Aggregator",
+    "AgentPublisher",
+    "AgentRuntime",
+    "AgentServer",
+    "DEFS_FILENAME",
+    "RING_FILENAME",
+    "RingError",
+    "RingReader",
+    "RingTail",
+    "RingWriter",
+    "decode_records",
+    "encode_columns",
+    "encode_metric",
+]

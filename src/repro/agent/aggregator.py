@@ -1,0 +1,593 @@
+"""Sidecar aggregator — rolling-window stats over one or more rings.
+
+The aggregator tails :class:`~repro.agent.ringbus.RingReader` streams and
+maintains a *rolling window* (default 60 s, split into 12 time buckets that
+expire as wall time advances) of per-region statistics:
+
+* **visit counts** — enters per region, vectorized per drained batch;
+* **exclusive-time streaming moments** — sum / sum-of-squares / min / max of
+  *leaf* enter→exit pair durations (the same vectorizable leaf-pair
+  exclusive-time estimate the governor uses: the hot, short regions a live
+  view is watching for are exactly leaf pairs);
+* **reservoir-sampled durations** — a bounded per-region/per-bucket sample
+  of leaf durations, merged at snapshot time into window percentiles
+  (p50/p95) without ever storing the full stream;
+
+plus the latest ``mem.*`` / metric series points (bounded, window-pruned).
+
+Multi-rank fan-in follows ``merge_runs`` semantics: the aggregator ingests N
+rings from sibling rank run dirs (periodic rescan of a root directory picks
+up late-starting ranks), aligns each ring's ``perf_counter`` timestamps onto
+the shared wall clock via its header epoch pair (``offset_ns = epoch_time_ns
+- epoch_perf_ns``), and when two rings claim the same rank keeps the one
+with the newest epoch, dropping the stale duplicate (restarted process wins,
+exactly like ``merge._dedupe_ranks``).
+
+:meth:`Aggregator.snapshot` emits the *report model* document shape
+(``build_report``'s layout, schema-stamped) so ``core/report``'s renderer
+serves the live window unchanged; the extra ``window`` section carries ring
+health (lag, drops, heartbeat age) and windowing parameters, and doubles as
+the ``/healthz`` payload.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import random
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.buffer import EV_C_ENTER, EV_ENTER
+from repro.core.report.model import decimate
+from repro.core.schema import stamp
+
+from .ringbus import (
+    RING_FILENAME,
+    RingError,
+    RingReader,
+    decode_records,
+    defs_path_for,
+    read_defs,
+)
+
+DEFAULT_WINDOW_S = 60.0
+DEFAULT_BUCKETS = 12
+
+#: Reservoir capacity per (bucket, rank, region).
+RESERVOIR_K = 32
+
+#: Ring-health thresholds for the /healthz status verdict.
+STALE_HEARTBEAT_S = 30.0
+
+#: Per-series point cap while accumulating (pruned to the window anyway).
+MAX_SERIES_POINTS = 4096
+
+
+class RingTail:
+    """One ring + its definitions sidecar, with id -> name resolution."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.reader = RingReader(path)
+        self._regions: Dict[int, Tuple[str, Optional[str]]] = {}
+        self._metrics: Dict[int, str] = {}
+        self.meta: Dict[str, Any] = {}
+        self.events = 0
+        self.batches = 0
+        self._reload_t = 0.0
+        self._load_defs()
+
+    def _load_defs(self) -> None:
+        doc = read_defs(defs_path_for(self.path))
+        if not doc:
+            return
+        self.meta = doc.get("meta") or {}
+        for row in doc.get("regions") or []:
+            self._regions[int(row[0])] = (str(row[1]), row[2])
+        for name, mid in (doc.get("metrics") or {}).items():
+            self._metrics[int(mid)] = str(name)
+
+    @property
+    def rank(self) -> int:
+        return int(self.meta.get("rank", self.reader.rank))
+
+    @property
+    def epoch_time_ns(self) -> int:
+        return self.reader.epoch_time_ns
+
+    @property
+    def offset_ns(self) -> int:
+        """perf-clock -> wall-clock alignment, as in ``merge_runs``."""
+        return self.reader.epoch_time_ns - self.reader.epoch_perf_ns
+
+    def _maybe_reload(self) -> None:
+        # The writer rewrites the sidecar (throttled) as its tables grow, so
+        # an unknown id usually means "defs are momentarily behind" — reload,
+        # but never cache the placeholder: the next reload heals the name.
+        now = time.monotonic()
+        if now - self._reload_t >= 0.25:
+            self._reload_t = now
+            self._load_defs()
+
+    def region_name(self, rid: int) -> Tuple[str, Optional[str]]:
+        entry = self._regions.get(rid)
+        if entry is None:
+            self._maybe_reload()
+            entry = self._regions.get(rid)
+        return entry or (f"region#{rid}", None)
+
+    def metric_name(self, mid: int) -> str:
+        name = self._metrics.get(mid)
+        if name is None:
+            self._maybe_reload()
+            name = self._metrics.get(mid)
+        return name or f"metric#{mid}"
+
+    def health(self) -> Dict[str, Any]:
+        r = self.reader
+        return {
+            "ring": self.path,
+            "rank": self.rank,
+            "lag": r.lag,
+            "drops": r.drops,
+            "write_seq": r.write_seq,
+            "heartbeat_age_s": round(r.heartbeat_age_s, 3),
+            "writer_closed": r.writer_closed,
+            "events": self.events,
+            "batches": self.batches,
+        }
+
+    def close(self) -> None:
+        self.reader.close()
+
+
+def _new_stat(kind: Optional[str]) -> Dict[str, Any]:
+    return {
+        "kind": kind,
+        "visits": 0,
+        "n": 0,
+        "sum": 0.0,
+        "sum2": 0.0,
+        "min": math.inf,
+        "max": 0.0,
+        "seen": 0,
+        "res": [],
+    }
+
+
+def _reservoir_merge(stat: Dict[str, Any], dur: np.ndarray, k: int) -> None:
+    """Fold a batch of durations into the bounded reservoir.
+
+    Two-level approximation of Algorithm R (documented, deliberate): large
+    batches are first down-sampled to ``k`` candidates, then each candidate
+    displaces a random slot with probability ``m / (seen + m)``.  Work per
+    batch is O(k), independent of the batch size.
+    """
+    m = int(dur.size)
+    if m == 0:
+        return
+    if m > k:
+        cand = dur[np.random.choice(m, size=k, replace=False)]
+    else:
+        cand = dur
+    res = stat["res"]
+    seen = stat["seen"]
+    p = m / max(seen + m, 1)
+    for v in cand.tolist():
+        if len(res) < k:
+            res.append(v)
+        elif random.random() < p:
+            res[random.randrange(k)] = v
+    stat["seen"] = seen + m
+
+
+class Aggregator:
+    """Rolling-window fan-in over N rings; snapshot = live report doc."""
+
+    def __init__(
+        self,
+        paths: Tuple[str, ...] = (),
+        *,
+        root: Optional[str] = None,
+        experiment: Optional[str] = None,
+        window_s: float = DEFAULT_WINDOW_S,
+        buckets: int = DEFAULT_BUCKETS,
+        rescan_s: float = 2.0,
+        reservoir_k: int = RESERVOIR_K,
+    ):
+        self.window_s = float(window_s)
+        self.n_buckets = max(int(buckets), 1)
+        self._bucket_ns = int(self.window_s / self.n_buckets * 1e9)
+        self.root = root
+        self.experiment = experiment
+        self.rescan_s = float(rescan_s)
+        self.reservoir_k = int(reservoir_k)
+        self._lock = threading.RLock()
+        self._tails: Dict[str, RingTail] = {}
+        self._dropped_rings: List[Dict[str, Any]] = []
+        self._seen_paths: set = set()
+        #: time buckets, oldest first: {"t0": wall_ns, "stats": {(rank, name): stat}}
+        self._buckets: List[Dict[str, Any]] = []
+        #: metric series keyed (rank, metric id) -> [[wall_ns, value], ...]
+        self._series: Dict[Tuple[int, int], List[List[float]]] = {}
+        self._last_scan = 0.0
+        self.total_events = 0
+        self.total_batches = 0
+        for p in paths:
+            self._attach(p)  # explicit paths must be valid: raises RingError
+        if root is not None:
+            self._scan()
+        if not self._tails and root is None:
+            raise RingError("aggregator needs at least one ring path or a root")
+
+    # -- ring set management (merge_runs semantics) --------------------------
+
+    def _attach(self, path: str) -> None:
+        path = os.path.abspath(path)
+        if path in self._seen_paths:
+            return
+        tail = RingTail(path)
+        self._seen_paths.add(path)
+        for other_path, other in list(self._tails.items()):
+            if other.rank == tail.rank:
+                # Same rank twice: the newest epoch wins (a restarted rank
+                # supersedes its stale ring), mirroring merge._dedupe_ranks.
+                if tail.epoch_time_ns >= other.epoch_time_ns:
+                    self._dropped_rings.append(
+                        {"run_dir": os.path.dirname(other_path), "rank": other.rank}
+                    )
+                    other.close()
+                    del self._tails[other_path]
+                else:
+                    self._dropped_rings.append(
+                        {"run_dir": os.path.dirname(path), "rank": tail.rank}
+                    )
+                    tail.close()
+                    return
+        self._tails[path] = tail
+
+    def _scan(self) -> None:
+        root = self.root
+        if root is None or not os.path.isdir(root):
+            return
+        candidates = [os.path.join(root, RING_FILENAME)]
+        try:
+            entries = sorted(os.scandir(root), key=lambda e: e.name)
+        except OSError:
+            entries = []
+        for entry in entries:
+            if not entry.is_dir():
+                continue
+            name = entry.name
+            if self.experiment is not None and not (
+                name == self.experiment or name.startswith(self.experiment + "-")
+            ):
+                continue
+            candidates.append(os.path.join(entry.path, RING_FILENAME))
+        for ring in candidates:
+            if ring not in self._seen_paths and os.path.exists(ring):
+                try:
+                    self._attach(ring)
+                except RingError:
+                    pass  # mid-creation or foreign file; next rescan retries
+
+    # -- ingestion -----------------------------------------------------------
+
+    def drain_once(self) -> int:
+        """Poll every ring once, folding everything new into the window."""
+        with self._lock:
+            now = time.monotonic()
+            if self.root is not None and now - self._last_scan >= self.rescan_s:
+                self._last_scan = now
+                self._scan()
+            drained = 0
+            for tail in self._tails.values():
+                rec = tail.reader.poll()
+                if not len(rec):
+                    continue
+                drained += len(rec)
+                batches, metrics = decode_records(rec)
+                wall = time.time_ns()
+                stats = self._bucket(wall)["stats"]
+                for _stream, columns in batches:
+                    self._ingest_batch(tail, columns, stats)
+                for mid, t_ns, value in metrics:
+                    self._ingest_metric(tail, mid, t_ns, value)
+            return drained
+
+    def _bucket(self, wall_ns: int) -> Dict[str, Any]:
+        buckets = self._buckets
+        if not buckets or wall_ns - buckets[-1]["t0"] >= self._bucket_ns:
+            buckets.append({"t0": wall_ns, "stats": {}})
+            self._prune(wall_ns)
+        return buckets[-1]
+
+    def _prune(self, wall_ns: int) -> None:
+        horizon = wall_ns - int(self.window_s * 1e9) - self._bucket_ns
+        while self._buckets and self._buckets[0]["t0"] < horizon:
+            self._buckets.pop(0)
+        cutoff = wall_ns - int(self.window_s * 1e9)
+        for name, pts in list(self._series.items()):
+            if len(pts) > MAX_SERIES_POINTS or (pts and pts[0][0] < cutoff):
+                self._series[name] = [p for p in pts if p[0] >= cutoff][
+                    -MAX_SERIES_POINTS:
+                ]
+
+    def _ingest_batch(
+        self, tail: RingTail, columns: Dict[str, np.ndarray], stats: Dict
+    ) -> None:
+        kind = columns["kind"]
+        region = columns["region"]
+        t = columns["t"]
+        n = int(kind.size)
+        if not n:
+            return
+        tail.events += n
+        tail.batches += 1
+        self.total_events += n
+        self.total_batches += 1
+        rank = tail.rank
+        enter_mask = (kind == EV_ENTER) | (kind == EV_C_ENTER)
+        enters = region[enter_mask]
+        if enters.size:
+            ids, counts = np.unique(enters, return_counts=True)
+            for rid, c in zip(ids.tolist(), counts.tolist()):
+                # Stats are keyed by raw region id; names resolve lazily at
+                # snapshot time, after the writer's defs sidecar caught up.
+                key = (rank, int(rid))
+                stat = stats.get(key)
+                if stat is None:
+                    stat = stats[key] = _new_stat(None)
+                stat["visits"] += int(c)
+        if n > 1:
+            # Leaf pairs (enter immediately followed by its matching exit):
+            # pure exclusive time, vectorizable — same estimate the governor
+            # accounts with; pairs spanning a flush boundary are lost (the
+            # documented approximation).
+            leaf = (
+                enter_mask[:-1]
+                & (kind[1:] == kind[:-1] + 1)
+                & (region[1:] == region[:-1])
+            )
+            if leaf.any():
+                dur = (t[1:][leaf] - t[:-1][leaf]).astype(np.float64)
+                leaf_regs = region[:-1][leaf]
+                for rid in np.unique(leaf_regs).tolist():
+                    d = dur[leaf_regs == rid]
+                    key = (rank, int(rid))
+                    stat = stats.get(key)
+                    if stat is None:
+                        stat = stats[key] = _new_stat(None)
+                    stat["n"] += int(d.size)
+                    stat["sum"] += float(d.sum())
+                    stat["sum2"] += float(np.dot(d, d))
+                    stat["min"] = min(stat["min"], float(d.min()))
+                    stat["max"] = max(stat["max"], float(d.max()))
+                    _reservoir_merge(stat, d, self.reservoir_k)
+
+    def _ingest_metric(self, tail: RingTail, mid: int, t_ns: int, value: float) -> None:
+        # Keyed by (rank, metric id) — like region stats, names resolve at
+        # snapshot time so early samples aren't stuck under a placeholder.
+        wall = tail.offset_ns + t_ns
+        self._series.setdefault((tail.rank, mid), []).append([wall, value])
+
+    # -- snapshots -----------------------------------------------------------
+
+    @staticmethod
+    def _merge_into(acc: Dict[str, Any], stat: Dict[str, Any]) -> None:
+        acc["kind"] = acc["kind"] or stat["kind"]
+        acc["visits"] += stat["visits"]
+        acc["n"] += stat["n"]
+        acc["sum"] += stat["sum"]
+        acc["sum2"] += stat["sum2"]
+        acc["min"] = min(acc["min"], stat["min"])
+        acc["max"] = max(acc["max"], stat["max"])
+        acc["seen"] += stat["seen"]
+        acc["res"].extend(stat["res"])
+
+    def _merged_stats(self) -> Dict[Tuple[int, str], Dict[str, Any]]:
+        """Window stats merged across buckets, then resolved to names:
+        (rank, region_id) accumulators become (rank, region_name)."""
+        by_id: Dict[Tuple[int, int], Dict[str, Any]] = {}
+        for bucket in self._buckets:
+            for key, stat in bucket["stats"].items():
+                acc = by_id.get(key)
+                if acc is None:
+                    acc = by_id[key] = _new_stat(stat["kind"])
+                self._merge_into(acc, stat)
+        rank_tails = {t.rank: t for t in self._tails.values()}
+        merged: Dict[Tuple[int, str], Dict[str, Any]] = {}
+        for (rank, rid), stat in by_id.items():
+            tail = rank_tails.get(rank)
+            if tail is not None:
+                name, rkind = tail.region_name(rid)
+            else:  # tail replaced/dropped mid-window: keep the stats visible
+                name, rkind = f"region#{rid}", None
+            stat["kind"] = stat["kind"] or rkind
+            acc = merged.get((rank, name))
+            if acc is None:
+                merged[(rank, name)] = stat
+            else:
+                self._merge_into(acc, stat)
+        return merged
+
+    def snapshot(self) -> Dict[str, Any]:
+        """The live window as a schema-stamped report-model document."""
+        with self._lock:
+            now_wall = time.time_ns()
+            self._prune(now_wall)
+            per_rank = self._merged_stats()
+            # Collapse ranks into the unified per-region table.
+            regions: Dict[str, Dict[str, Any]] = {}
+            for (rank, name), stat in per_rank.items():
+                acc = regions.get(name)
+                if acc is None:
+                    acc = regions[name] = _new_stat(stat["kind"])
+                acc["kind"] = acc["kind"] or stat["kind"]
+                for field in ("visits", "n", "sum", "sum2", "seen"):
+                    acc[field] += stat[field]
+                acc["min"] = min(acc["min"], stat["min"])
+                acc["max"] = max(acc["max"], stat["max"])
+                acc["res"].extend(stat["res"])
+            rows = []
+            for name, acc in regions.items():
+                excl = int(acc["sum"])
+                visits = int(acc["visits"])
+                n = int(acc["n"])
+                mean = acc["sum"] / n if n else 0.0
+                var = max(acc["sum2"] / n - mean * mean, 0.0) if n else 0.0
+                res = sorted(acc["res"])
+                rows.append(
+                    {
+                        "region": name,
+                        "kind": acc["kind"],
+                        "visits": visits,
+                        # Live window: inclusive time is not tracked (no
+                        # shadow-stack replay online); the leaf-pair
+                        # exclusive estimate stands in for both columns.
+                        "incl_ns": excl,
+                        "excl_ns": excl,
+                        "mean_ns": round(excl / visits, 1) if visits else None,
+                        "alloc_bytes": None,
+                        "net_bytes": None,
+                        "alloc_blocks": None,
+                        "governor_excluded": None,
+                        "est_cost_ns": None,
+                        "leaf_pairs": n,
+                        "std_ns": round(math.sqrt(var), 1),
+                        "min_ns": int(acc["min"]) if n else None,
+                        "max_ns": int(acc["max"]) if n else None,
+                        "p50_ns": int(res[len(res) // 2]) if res else None,
+                        "p95_ns": int(res[int(len(res) * 0.95)]) if res else None,
+                        "rate_per_s": round(visits / self.window_s, 2),
+                    }
+                )
+            rows.sort(key=lambda r: -r["excl_ns"])
+            cutoff = now_wall - int(self.window_s * 1e9)
+            rank_tails = {t.rank: t for t in self._tails.values()}
+            named_series: Dict[str, List[List[float]]] = {}
+            for (rank, mid), pts in self._series.items():
+                tail = rank_tails.get(rank)
+                name = tail.metric_name(mid) if tail is not None else f"metric#{mid}"
+                named_series.setdefault(name, []).extend(pts)
+            timelines = {}
+            metrics = {}
+            for name, pts in sorted(named_series.items()):
+                pts.sort(key=lambda p: p[0])
+                live = [p for p in pts if p[0] >= cutoff]
+                if not live:
+                    continue
+                timelines[name] = decimate(live)
+                vals = [v for _, v in live if v is not None and math.isfinite(v)]
+                if vals:
+                    metrics[name] = {
+                        "count": len(vals),
+                        "mean": sum(vals) / len(vals),
+                        "min": min(vals),
+                        "max": max(vals),
+                        "last": vals[-1],
+                    }
+            tails = sorted(self._tails.values(), key=lambda t: t.rank)
+            meta = dict(tails[0].meta) if tails else {}
+            meta.update(
+                {
+                    "live": True,
+                    "window_s": self.window_s,
+                    "world_size": len(tails) or 1,
+                }
+            )
+            doc = {
+                "run_dir": self.root
+                or (os.path.dirname(tails[0].path) if tails else ""),
+                "generated_time_ns": now_wall,
+                "meta": meta,
+                "regions": rows,
+                "memory": None,
+                "metrics": metrics or None,
+                "timelines": timelines,
+                "governor": None,
+                "merge": self._merge_section(per_rank, tails),
+                "plan": None,
+                "diff": None,
+                "window": self.healthz(),
+            }
+            return stamp(doc)
+
+    def _merge_section(
+        self, per_rank: Dict, tails: List[RingTail]
+    ) -> Optional[Dict[str, Any]]:
+        """Cross-rank view in merged_trace_summary.json's shape (rendered by
+        the existing report renderer's heatmap) — only for real fan-in."""
+        if len(tails) < 2:
+            return None
+        ranks = sorted({t.rank for t in tails})
+        names = sorted(
+            {name for (_r, name) in per_rank},
+            key=lambda nm: -sum(
+                per_rank.get((r, nm), {"sum": 0.0})["sum"] for r in ranks
+            ),
+        )[:20]
+        excl = [
+            [float(per_rank.get((r, nm), {"sum": 0.0})["sum"]) for r in ranks]
+            for nm in names
+        ]
+        imbalance = {}
+        for nm, row in zip(names, excl):
+            mean = sum(row) / len(row)
+            if mean > 0:
+                imbalance[nm] = round(max(row) / mean, 3)
+        return {
+            "world_size": len(tails),
+            "total_events": self.total_events,
+            "ranks": [
+                {
+                    "rank": t.rank,
+                    "events": t.events,
+                    "run_dir": os.path.dirname(t.path),
+                    "offset_ns": t.offset_ns,
+                }
+                for t in tails
+            ],
+            "dropped_runs": list(self._dropped_rings),
+            "profile": {
+                "ranks": ranks,
+                "regions": names,
+                "excl_ns": excl,
+                "imbalance": imbalance,
+            },
+        }
+
+    def healthz(self) -> Dict[str, Any]:
+        with self._lock:
+            rings = [t.health() for t in sorted(self._tails.values(), key=lambda t: t.rank)]
+            drops = sum(r["drops"] for r in rings)
+            lag = sum(r["lag"] for r in rings)
+            live = [r for r in rings if not r["writer_closed"]]
+            stale = [r for r in live if r["heartbeat_age_s"] > STALE_HEARTBEAT_S]
+            status = "ok"
+            if not rings or stale:
+                status = "stale"
+            elif drops:
+                status = "degraded"
+            return {
+                "status": status,
+                "time_ns": time.time_ns(),
+                "window_s": self.window_s,
+                "buckets": self.n_buckets,
+                "events": self.total_events,
+                "batches": self.total_batches,
+                "drops": drops,
+                "lag": lag,
+                "rings": rings,
+                "dropped_rings": list(self._dropped_rings),
+            }
+
+    def close(self) -> None:
+        with self._lock:
+            for tail in self._tails.values():
+                tail.close()
+            self._tails.clear()

@@ -1,0 +1,267 @@
+"""Agent CLI — ``python -m repro.agent {attach,smoke}``.
+
+``attach`` spectates a live measured process from outside: point it at an
+``agent.ring`` file, a run dir containing one, or a root of per-rank run
+dirs, and it tails the ring(s) and serves the same ``/report`` /
+``/stats.json`` / ``/healthz`` endpoints the in-process sidecar serves.
+Exit codes follow the ``analysis`` convention: 0 on success, 2 with a
+one-line ``error:`` on a missing or corrupt ring.
+
+``smoke`` is the CI live-path gate: it launches ``repro.launch.serve
+--agent`` as a subprocess, polls ``/healthz`` until the endpoint is up,
+fetches ``/report`` and ``/stats.json``, and asserts the end-to-end claims
+(self-contained HTML, schema-stamped payload with populated window rows,
+zero ring drops) before shutting the child down.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+from typing import List, Optional
+
+from repro.core.schema import REPORT_SCHEMA_VERSION, MissingArtifact, SCHEMA_KEY
+
+from .ringbus import RING_FILENAME, RingError
+
+#: Needles whose presence would mean the live page pulls remote assets
+#: (same self-containment gate as `analysis report --smoke`).
+_CDN_NEEDLES = ("https://", "http://", "cdn.", "@import", 'src="//')
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.agent",
+        description="Live monitoring agent: spectate a running measured "
+        "process over its shared-memory ring, or run the CI live-path smoke.",
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    at = sub.add_parser(
+        "attach",
+        help="tail a live process's ring(s) and serve /report over the window",
+    )
+    at.add_argument(
+        "ring",
+        help="agent.ring path, a run dir containing one, or a root dir of "
+        "per-rank run dirs",
+    )
+    at.add_argument("--port", type=int, default=0,
+                    help="HTTP port (0 = ephemeral)")
+    at.add_argument("--window", type=float, default=60.0,
+                    help="rolling window length in seconds")
+    at.add_argument("--once", action="store_true",
+                    help="drain once, print the window payload JSON to "
+                         "stdout, and exit (no HTTP server)")
+    at.add_argument("--duration", type=float, default=0.0,
+                    help="serve for N seconds then exit (0 = until Ctrl-C)")
+
+    sm = sub.add_parser(
+        "smoke",
+        help="end-to-end live-path smoke: launch serve --agent, poll "
+        "/healthz, assert /report + /stats.json + zero drops",
+    )
+    sm.add_argument("--arch", default="mamba2-370m",
+                    help="model arch for the serving workload")
+    sm.add_argument("--port", type=int, default=8707)
+    sm.add_argument("--timeout", type=float, default=240.0,
+                    help="overall smoke deadline in seconds")
+    sm.add_argument("--out", default="",
+                    help="write the smoke result JSON here")
+    return p
+
+
+# -- attach -------------------------------------------------------------------
+
+
+def find_rings(path: str) -> List[str]:
+    """Resolve a ring file / run dir / root dir argument to ring paths."""
+    if os.path.isfile(path):
+        return [path]
+    if os.path.isdir(path):
+        direct = os.path.join(path, RING_FILENAME)
+        if os.path.exists(direct):
+            return [direct]
+        rings = []
+        for entry in sorted(os.scandir(path), key=lambda e: e.name):
+            if entry.is_dir():
+                ring = os.path.join(entry.path, RING_FILENAME)
+                if os.path.exists(ring):
+                    rings.append(ring)
+        return rings
+    return []
+
+
+def cmd_attach(ns: argparse.Namespace) -> int:
+    from .aggregator import Aggregator
+    from .serve import AgentServer
+
+    rings = find_rings(ns.ring)
+    if not rings:
+        raise MissingArtifact(
+            f"no {RING_FILENAME} at {ns.ring} — launch the target with an "
+            "agent (repro.scorep --agent, launch serve --agent, or "
+            "REPRO_MONITOR_AGENT=1)"
+        )
+    try:
+        aggregator = Aggregator(paths=tuple(rings), window_s=ns.window)
+    except RingError as exc:
+        raise MissingArtifact(str(exc)) from exc
+    if ns.once:
+        aggregator.drain_once()
+        print(json.dumps(aggregator.snapshot(), indent=1))
+        aggregator.close()
+        return 0
+    server = AgentServer(aggregator, port=ns.port).start()
+    print(
+        f"agent: spectating {len(rings)} ring(s) at {server.url} "
+        f"(/report /stats.json /healthz); Ctrl-C to stop"
+    )
+    try:
+        if ns.duration > 0:
+            time.sleep(ns.duration)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+        aggregator.close()
+    return 0
+
+
+# -- smoke --------------------------------------------------------------------
+
+
+def _http_json(url: str, timeout: float = 5.0):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return json.loads(resp.read().decode("utf-8"))
+
+
+def cmd_smoke(ns: argparse.Namespace) -> int:
+    base = f"http://127.0.0.1:{ns.port}"
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", ns.arch, "--smoke",
+        "--batch", "2", "--prompt-len", "16", "--gen", "8",
+        "--loop", "10000",
+        "--agent", "--agent-port", str(ns.port),
+    ]
+    print(f"smoke: launching {' '.join(cmd)}")
+    proc = subprocess.Popen(cmd)
+    deadline = time.monotonic() + ns.timeout
+    result = {"arch": ns.arch, "port": ns.port}
+    try:
+        # 1. Poll /healthz until the endpoint answers.
+        health = None
+        while time.monotonic() < deadline:
+            if proc.poll() is not None:
+                print(f"error: serve child exited early ({proc.returncode})",
+                      file=sys.stderr)
+                return 1
+            try:
+                health = _http_json(base + "/healthz")
+                break
+            except (urllib.error.URLError, OSError, ValueError):
+                time.sleep(0.5)
+        if health is None:
+            print("error: /healthz never became reachable", file=sys.stderr)
+            return 1
+        print(f"smoke: /healthz up (status={health['status']})")
+
+        # 2. Poll /stats.json until the window has populated region rows.
+        # Individual requests may stall while the child's first JAX compile
+        # holds the GIL — treat those like "not up yet" and keep polling.
+        stats = None
+        while time.monotonic() < deadline:
+            if proc.poll() is not None:
+                print(f"error: serve child exited early ({proc.returncode})",
+                      file=sys.stderr)
+                return 1
+            try:
+                stats = _http_json(base + "/stats.json", timeout=10.0)
+            except (urllib.error.URLError, OSError, ValueError):
+                time.sleep(1.0)
+                continue
+            if any(r.get("visits", 0) > 0 for r in stats.get("regions", [])):
+                break
+            time.sleep(1.0)
+        assert stats is not None and stats.get(SCHEMA_KEY) == REPORT_SCHEMA_VERSION, (
+            f"stats.json missing schema stamp: {None if stats is None else stats.get(SCHEMA_KEY)}"
+        )
+        rows = [r for r in stats["regions"] if r.get("visits", 0) > 0]
+        assert rows, "window never populated with region rows"
+        assert stats.get("window", {}).get("rings"), "window payload lists no rings"
+        result["regions"] = len(rows)
+        result["events"] = stats["window"]["events"]
+        print(f"smoke: /stats.json OK ({len(rows)} live regions, "
+              f"{stats['window']['events']} events in window)")
+
+        # 3. /report: self-contained HTML embedding the same payload.
+        with urllib.request.urlopen(base + "/report", timeout=30.0) as resp:
+            page = resp.read().decode("utf-8")
+        from repro.core.report import extract_payload
+
+        payload = extract_payload(page)
+        assert payload.get(SCHEMA_KEY) == REPORT_SCHEMA_VERSION
+        assert payload.get("meta", {}).get("live") is True
+        for needle in _CDN_NEEDLES:
+            assert needle not in page.replace("http://127.0.0.1", ""), (
+                f"live report is not self-contained: found {needle!r}"
+            )
+        print(f"smoke: /report OK ({len(page)} bytes, self-contained)")
+
+        # 4. Zero ring drops across the whole exercise.
+        health = _http_json(base + "/healthz", timeout=30.0)
+        assert health["drops"] == 0, f"ring drops in smoke: {health['drops']}"
+        result["drops"] = health["drops"]
+        result["status"] = health["status"]
+        print("smoke: zero ring drops")
+        return 0
+    except AssertionError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+    finally:
+        # Clean shutdown: SIGINT lets the child's atexit finalize run.
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGINT)
+            try:
+                proc.wait(timeout=30.0)
+            except subprocess.TimeoutExpired:
+                proc.terminate()
+                try:
+                    proc.wait(timeout=10.0)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+        print(f"smoke: serve child exited ({proc.returncode})")
+        if ns.out:
+            result["returncode"] = proc.returncode
+            os.makedirs(os.path.dirname(ns.out) or ".", exist_ok=True)
+            with open(ns.out, "w") as fh:
+                json.dump(result, fh, indent=1)
+            print(f"smoke: wrote {ns.out}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ns = build_parser().parse_args(argv)
+    try:
+        if ns.cmd == "attach":
+            return cmd_attach(ns)
+        if ns.cmd == "smoke":
+            return cmd_smoke(ns)
+    except MissingArtifact as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,241 @@
+"""Measurement-side half of the agent: publish flushes into the ring.
+
+The :class:`AgentPublisher` hangs off a live :class:`~repro.core.measurement.
+Measurement` (created by ``repro.agent.runtime.AgentRuntime`` when
+``MeasurementConfig.agent`` is set) and mirrors the substrate surface the
+flush path already fans out to — ``on_flush(thread_id, columns)`` under the
+measurement flush lock, ``on_metric(name, value, t_ns)`` from user threads —
+but instead of writing artifacts it forwards everything into the shared
+-memory ring (:mod:`repro.agent.ringbus`) for a sidecar aggregator to tail.
+
+Cost discipline (the governor contract):
+
+* Every publish is timed; the cumulative nanoseconds are exposed two ways —
+  ``publish_ns`` (monotonic total, for benchmarks) and
+  :meth:`take_publish_cost_ns` (delta since last call), which the governor
+  pulls into its window cost at each flush so live publishing is accounted
+  against the same overhead budget as instrumentation itself.
+* When the publish fraction of wall time exceeds its share of the budget
+  (a quarter of the governor budget, or of 1% when no governor runs), the
+  publisher *degrades instead of busting the budget*: it doubles its batch
+  stride — publishing every 2nd, 4th, ... 64th flush batch and counting the
+  thinned records — and relaxes the stride again once the pressure is gone.
+  Thinning whole batches (never splitting one) keeps every published batch
+  self-contained for the aggregator's per-batch leaf-pair analysis.
+
+The publisher also keeps the definitions sidecar current (region + metric
+id tables, rewritten atomically when they grow) and piggybacks a 1 Hz
+``mem.rss_mb`` sample onto the publish path so the live window has a memory
+series even when the memory substrate is off.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import TYPE_CHECKING, Any, Dict, Optional
+
+from repro.core.memsys import rss_bytes
+
+from .ringbus import (
+    DEFAULT_CAPACITY,
+    RING_FILENAME,
+    RingWriter,
+    defs_path_for,
+    encode_columns,
+    encode_metric,
+    write_defs,
+)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.measurement import Measurement
+
+#: Degradation ladder ceiling: publish at most every 64th batch.
+MAX_STRIDE = 64
+
+#: Publish-fraction controller period (ns) and budget share.
+ADJUST_PERIOD_NS = int(1e9)
+BUDGET_SHARE = 0.25
+
+#: Default budget when no governor runs — the <1% publish-overhead claim.
+DEFAULT_BUDGET = 0.01
+
+#: Definitions sidecar rewrite throttle (ns) and mem-sample period (ns).
+DEFS_PERIOD_NS = int(0.5e9)
+MEM_PERIOD_NS = int(1e9)
+
+
+class AgentPublisher:
+    def __init__(
+        self,
+        measurement: "Measurement",
+        ring_path: Optional[str] = None,
+        capacity: Optional[int] = None,
+    ):
+        self.measurement = measurement
+        cfg = measurement.config
+        self.ring_path = ring_path or os.path.join(measurement.run_dir, RING_FILENAME)
+        if capacity is None:
+            # Room for two full flush batches (+ headers) so one slow drain
+            # tick never forces a drop.
+            capacity = max(DEFAULT_CAPACITY, 2 * (cfg.flush_threshold + 1) + 64)
+        self.writer = RingWriter(
+            self.ring_path,
+            capacity,
+            rank=cfg.topology.rank,
+            epoch_time_ns=measurement.epoch_time_ns,
+            epoch_perf_ns=measurement.epoch_perf_ns,
+        )
+        self.budget = float(cfg.budget) if cfg.budget > 0 else DEFAULT_BUDGET
+
+        self._streams: Dict[int, int] = {}
+        self._metric_ids: Dict[str, int] = {}
+        self._metric_lock = threading.Lock()
+        self._defs_regions = -1
+        self._defs_metrics = -1
+        self._defs_t = 0
+
+        self.publish_ns = 0
+        self._cost_pending = 0
+        self._cost_lock = threading.Lock()
+
+        self.stride = 1
+        self.thinned_batches = 0
+        self.thinned_records = 0
+        #: Controller period — instance attribute so benchmarks/tests can
+        #: shrink it to reach the governed steady state quickly.
+        self.adjust_period_ns = ADJUST_PERIOD_NS
+        self._batch_counter = 0
+        now = time.perf_counter_ns()
+        self._window_t0 = now
+        self._window_publish_ns = 0
+        self._mem_t = now
+        self.closed = False
+        self._write_defs(now)
+
+    # -- flush-path hooks (on_flush under the measurement flush lock) --------
+
+    def on_flush(self, thread_id: int, columns: Dict[str, Any]) -> None:
+        if self.closed:
+            return
+        t0 = time.perf_counter_ns()
+        self._batch_counter += 1
+        if self.stride > 1 and (self._batch_counter % self.stride):
+            self.thinned_batches += 1
+            self.thinned_records += int(len(columns["kind"]))
+        else:
+            stream = self._streams.get(thread_id)
+            if stream is None:
+                stream = self._streams[thread_id] = len(self._streams)
+            self.writer.publish(encode_columns(columns, stream=stream))
+            self._maybe_write_defs(t0)
+            self._maybe_sample_memory(t0)
+        dt = time.perf_counter_ns() - t0
+        self.publish_ns += dt
+        self._window_publish_ns += dt
+        with self._cost_lock:
+            self._cost_pending += dt
+        self._maybe_adjust(t0 + dt)
+
+    def on_metric(self, name: str, value: float, t_ns: int) -> None:
+        if self.closed:
+            return
+        t0 = time.perf_counter_ns()
+        with self._metric_lock:
+            mid = self._metric_ids.get(name)
+            if mid is None:
+                mid = self._metric_ids[name] = len(self._metric_ids)
+        self.writer.publish(encode_metric(mid, value, t_ns))
+        self._maybe_write_defs(t0)
+        dt = time.perf_counter_ns() - t0
+        self.publish_ns += dt
+        with self._cost_lock:
+            self._cost_pending += dt
+
+    # -- governor integration -------------------------------------------------
+
+    def take_publish_cost_ns(self) -> int:
+        """Publish nanoseconds accrued since the last call (governor pulls
+        this into its window cost at each flush)."""
+        with self._cost_lock:
+            pending, self._cost_pending = self._cost_pending, 0
+        return pending
+
+    def _maybe_adjust(self, now: int) -> None:
+        elapsed = now - self._window_t0
+        if elapsed < self.adjust_period_ns:
+            return
+        fraction = self._window_publish_ns / max(elapsed, 1)
+        share = BUDGET_SHARE * self.budget
+        if fraction > share and self.stride < MAX_STRIDE:
+            self.stride = min(self.stride * 2, MAX_STRIDE)
+        elif fraction < share / 4 and self.stride > 1:
+            self.stride //= 2
+        self._window_t0 = now
+        self._window_publish_ns = 0
+
+    # -- sidecar upkeep -------------------------------------------------------
+
+    def _maybe_sample_memory(self, now: int) -> None:
+        if now - self._mem_t < MEM_PERIOD_NS:
+            return
+        self._mem_t = now
+        self.on_metric("mem.rss_mb", rss_bytes() / 1e6, time.perf_counter_ns())
+
+    def _maybe_write_defs(self, now: int) -> None:
+        regions = self.measurement.regions
+        if (
+            len(regions) == self._defs_regions
+            and len(self._metric_ids) == self._defs_metrics
+        ) or now - self._defs_t < DEFS_PERIOD_NS:
+            return
+        self._write_defs(now)
+
+    def _write_defs(self, now: int) -> None:
+        m = self.measurement
+        cfg = m.config
+        self._defs_regions = len(m.regions)
+        with self._metric_lock:
+            metrics = dict(self._metric_ids)
+        self._defs_metrics = len(metrics)
+        self._defs_t = now
+        doc = {
+            "meta": {
+                "rank": cfg.topology.rank,
+                "pid": os.getpid(),
+                "experiment": cfg.experiment,
+                "instrumenter": cfg.instrumenter,
+                "topology": cfg.topology.as_dict(),
+                "epoch_time_ns": m.epoch_time_ns,
+                "epoch_perf_ns": m.epoch_perf_ns,
+            },
+            "regions": [
+                [r["id"], f"{r['module']}:{r['name']}", r["kind"]]
+                for r in m.regions.snapshot()
+            ],
+            "metrics": metrics,
+            "streams": {str(v): k for k, v in self._streams.items()},
+        }
+        write_defs(defs_path_for(self.ring_path), doc)
+
+    # -- health ----------------------------------------------------------------
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "ring": self.ring_path,
+            "capacity": self.writer.capacity,
+            "write_seq": self.writer.write_seq,
+            "drops": self.writer.drops,
+            "publish_ns": self.publish_ns,
+            "stride": self.stride,
+            "thinned_batches": self.thinned_batches,
+            "thinned_records": self.thinned_records,
+        }
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        self._write_defs(time.perf_counter_ns())
+        self.writer.close()

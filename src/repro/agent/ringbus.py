@@ -1,0 +1,398 @@
+"""Shared-memory event ring — the live observability bus.
+
+One mmap-backed file (``agent.ring`` in the run dir) carries flush-granular
+event records out of the measured process, following the lock-free mapfile
+idiom scalene uses for its sampling channel: a fixed header page with
+monotonic sequence counters, then a fixed-width slot array.  Single writer
+(the measured process), single reader (the sidecar aggregator); neither ever
+blocks the other:
+
+* The **writer** publishes one whole flush batch per call — a single
+  vectorized copy of :data:`RECORD_DTYPE` records (the same fixed-width
+  ``(kind u1, region i4, t u8, aux u4)`` encoding ``NumpyEventBuffer``
+  flushes) — and bumps ``write_seq`` *after* the slots are filled.  When the
+  batch does not fit in the free space it is dropped whole (never split,
+  never blocked) and ``drops`` counts the lost records.
+* The **reader** owns ``read_seq``: it copies ``[read_seq, write_seq)`` out
+  of the slot array and advances the counter.  Because the writer never
+  writes past ``read_seq + capacity``, the copied span is stable without any
+  lock.  A reader that attaches (or re-attaches after a crash) snaps
+  ``read_seq`` to the newest sequence — spectating starts *now*, not at a
+  stale backlog.
+
+Control records share the slot array with event records:
+
+* ``REC_BATCH`` — batch header; ``region`` is a small per-thread stream id,
+  ``aux`` the number of event records that follow.  Batches are written
+  atomically under the writer lock, so a drained span always contains whole
+  batches and per-batch leaf-pair analysis never sees a torn stream.
+* ``REC_METRIC`` — one metric sample; ``region`` is an interned metric id,
+  ``aux`` the float32 bit pattern of the value.
+
+Region/metric ids are meaningless without the definitions sidecar
+(``agent_defs.json``, written atomically next to the ring whenever the
+table grows) — see :func:`write_defs` / :func:`read_defs`.
+
+Counter stores are aligned 8-byte writes — atomic in practice on every
+platform CPython's mmap supports; the monotonic-counter protocol needs no
+stronger guarantee because each side only ever writes its own counter.
+"""
+
+from __future__ import annotations
+
+import json
+import mmap
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: Ring file + definitions sidecar names inside a run dir.
+RING_FILENAME = "agent.ring"
+DEFS_FILENAME = "agent_defs.json"
+
+MAGIC = 0x52504D4F4E524E47  # "RPMONRNG"
+VERSION = 1
+
+#: Fixed-width record — the ring-slot form of ``buffer.COLUMNS``.
+RECORD_DTYPE = np.dtype(
+    [("kind", "u1"), ("region", "<i4"), ("t", "<u8"), ("aux", "<u4")]
+)
+RECORD_SIZE = RECORD_DTYPE.itemsize  # 17 bytes
+
+#: Control record kinds (event kinds are 0..5, see repro.core.buffer.EV_*).
+REC_BATCH = 240
+REC_METRIC = 241
+
+#: Header page size; slots start at this offset.
+HEADER_SIZE = 4096
+
+HEADER_DTYPE = np.dtype(
+    [
+        ("magic", "<u8"),
+        ("version", "<u4"),
+        ("record_size", "<u4"),
+        ("capacity", "<u8"),
+        ("write_seq", "<u8"),
+        ("read_seq", "<u8"),
+        ("drops", "<u8"),
+        ("heartbeat_ns", "<u8"),
+        ("epoch_time_ns", "<u8"),
+        ("epoch_perf_ns", "<u8"),
+        ("rank", "<u4"),
+        ("pid", "<u4"),
+        ("writer_closed", "<u4"),
+    ]
+)
+
+#: Default slot count (records).  ~2.2 MB at 17 B/record; the measurement
+#: sizes its ring to hold at least two flush batches (see publisher).
+DEFAULT_CAPACITY = 1 << 17
+
+
+class RingError(RuntimeError):
+    """Missing, truncated, or incompatible ring file."""
+
+
+def encode_columns(columns: Dict[str, np.ndarray], stream: int = 0) -> np.ndarray:
+    """One flush batch -> ``REC_BATCH`` header + its event records.
+
+    Four vectorized column assignments; no per-event Python.
+    """
+    n = int(len(columns["kind"]))
+    rec = np.empty(n + 1, dtype=RECORD_DTYPE)
+    rec[0] = (REC_BATCH, stream, time.perf_counter_ns(), n)
+    body = rec[1:]
+    body["kind"] = columns["kind"]
+    body["region"] = columns["region"]
+    body["t"] = columns["t"]
+    body["aux"] = columns["aux"]
+    return rec
+
+
+def encode_metric(metric_id: int, value: float, t_ns: int) -> np.ndarray:
+    """One metric sample as a single control record (value as f32 bits)."""
+    rec = np.empty(1, dtype=RECORD_DTYPE)
+    bits = int(np.float32(value).view(np.uint32))
+    rec[0] = (REC_METRIC, metric_id, t_ns, bits)
+    return rec
+
+
+def decode_records(
+    rec: np.ndarray,
+) -> Tuple[List[Tuple[int, Dict[str, np.ndarray]]], List[Tuple[int, int, float]]]:
+    """Split a drained span back into flush batches and metric samples.
+
+    Returns ``(batches, metrics)`` where each batch is ``(stream_id,
+    columns)`` with the same column dict shape substrates receive, and each
+    metric is ``(metric_id, t_ns, value)``.  Stray event records without a
+    batch header (a batch whose header slot was dropped can't occur — drops
+    are whole-batch — but a half-written tail could appear if a writer died
+    mid-copy) are skipped rather than misattributed.
+    """
+    batches: List[Tuple[int, Dict[str, np.ndarray]]] = []
+    metrics: List[Tuple[int, int, float]] = []
+    kinds = rec["kind"]
+    i, n = 0, len(rec)
+    while i < n:
+        k = int(kinds[i])
+        if k == REC_BATCH:
+            cnt = int(rec["aux"][i])
+            body = rec[i + 1 : i + 1 + cnt]
+            if len(body) == cnt:
+                batches.append(
+                    (
+                        int(rec["region"][i]),
+                        {
+                            "kind": body["kind"].copy(),
+                            "region": body["region"].copy(),
+                            "t": body["t"].copy(),
+                            "aux": body["aux"].copy(),
+                        },
+                    )
+                )
+            i += 1 + cnt
+        elif k == REC_METRIC:
+            bits = np.uint32(rec["aux"][i])
+            metrics.append(
+                (int(rec["region"][i]), int(rec["t"][i]), float(bits.view(np.float32)))
+            )
+            i += 1
+        else:
+            i += 1
+    return batches, metrics
+
+
+class _Ring:
+    """Shared mmap plumbing for writer and reader."""
+
+    def __init__(self):
+        self._mm: Optional[mmap.mmap] = None
+        self._file = None
+        self._hdr: Optional[np.ndarray] = None
+        self._slots: Optional[np.ndarray] = None
+        self.path = ""
+        self.capacity = 0
+
+    def _map(self, fileobj, capacity: int) -> None:
+        self._file = fileobj
+        self._mm = mmap.mmap(fileobj.fileno(), HEADER_SIZE + capacity * RECORD_SIZE)
+        self._hdr = np.frombuffer(self._mm, dtype=HEADER_DTYPE, count=1)
+        self._slots = np.frombuffer(
+            self._mm, dtype=RECORD_DTYPE, count=capacity, offset=HEADER_SIZE
+        )
+        self.capacity = capacity
+
+    def _field(self, name: str) -> int:
+        return int(self._hdr[name][0])
+
+    @property
+    def write_seq(self) -> int:
+        return self._field("write_seq")
+
+    @property
+    def read_seq(self) -> int:
+        return self._field("read_seq")
+
+    @property
+    def drops(self) -> int:
+        return self._field("drops")
+
+    @property
+    def lag(self) -> int:
+        return self.write_seq - self.read_seq
+
+    @property
+    def heartbeat_ns(self) -> int:
+        return self._field("heartbeat_ns")
+
+    @property
+    def rank(self) -> int:
+        return self._field("rank")
+
+    @property
+    def epoch_time_ns(self) -> int:
+        return self._field("epoch_time_ns")
+
+    @property
+    def epoch_perf_ns(self) -> int:
+        return self._field("epoch_perf_ns")
+
+    @property
+    def writer_closed(self) -> bool:
+        return bool(self._field("writer_closed"))
+
+    def close(self) -> None:
+        # Release the numpy views before the mmap: frombuffer views keep
+        # exported pointers that make mmap.close() raise BufferError.
+        self._hdr = None
+        self._slots = None
+        if self._mm is not None:
+            self._mm.close()
+            self._mm = None
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+
+class RingWriter(_Ring):
+    """Single-writer end: creates the ring file and publishes batches.
+
+    Thread-safe (flushes arrive from any thread; metric samples from user
+    threads): a small lock serializes the batch copy + counter bump, which
+    also guarantees batch atomicity for the reader's parser.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        capacity: int = DEFAULT_CAPACITY,
+        *,
+        rank: int = 0,
+        epoch_time_ns: int = 0,
+        epoch_perf_ns: int = 0,
+    ):
+        super().__init__()
+        if capacity <= 1:
+            raise ValueError("ring capacity must be > 1 record")
+        self.path = path
+        self._lock = threading.Lock()
+        fh = open(path, "w+b")
+        fh.truncate(HEADER_SIZE + capacity * RECORD_SIZE)
+        self._map(fh, capacity)
+        hdr = self._hdr
+        hdr["version"][0] = VERSION
+        hdr["record_size"][0] = RECORD_SIZE
+        hdr["capacity"][0] = capacity
+        hdr["rank"][0] = rank
+        hdr["pid"][0] = os.getpid() & 0xFFFFFFFF
+        hdr["epoch_time_ns"][0] = epoch_time_ns or time.time_ns()
+        hdr["epoch_perf_ns"][0] = epoch_perf_ns or time.perf_counter_ns()
+        hdr["heartbeat_ns"][0] = time.time_ns()
+        # Magic last: a reader racing creation sees zero magic -> not a ring
+        # yet, rather than a ring with garbage geometry.
+        hdr["magic"][0] = MAGIC
+
+    def publish(self, records: np.ndarray) -> bool:
+        """Copy ``records`` into the ring; False when dropped on overrun."""
+        n = len(records)
+        if n == 0:
+            return True
+        with self._lock:
+            hdr = self._hdr
+            w = int(hdr["write_seq"][0])
+            free = self.capacity - (w - int(hdr["read_seq"][0]))
+            if n > free:
+                hdr["drops"][0] += n
+                hdr["heartbeat_ns"][0] = time.time_ns()
+                return False
+            start = w % self.capacity
+            end = start + n
+            if end <= self.capacity:
+                self._slots[start:end] = records
+            else:
+                split = self.capacity - start
+                self._slots[start:] = records[:split]
+                self._slots[: end - self.capacity] = records[split:]
+            hdr["write_seq"][0] = w + n
+            hdr["heartbeat_ns"][0] = time.time_ns()
+            return True
+
+    def close(self) -> None:
+        if self._hdr is not None:
+            self._hdr["writer_closed"][0] = 1
+            self._mm.flush()
+        super().close()
+
+
+class RingReader(_Ring):
+    """Single-reader end: attaches to an existing ring and drains it.
+
+    Attaching snaps ``read_seq`` to the current ``write_seq`` — a reader
+    always resumes at the newest sequence (crash-and-reattach semantics),
+    never replays a backlog it wasn't watching.  One reader at a time: a
+    second attach steals the cursor from the first.
+    """
+
+    def __init__(self, path: str):
+        super().__init__()
+        self.path = path
+        if not os.path.exists(path):
+            raise RingError(f"no ring at {path}")
+        size = os.path.getsize(path)
+        if size < HEADER_SIZE:
+            raise RingError(f"{path} is not a ring (truncated header: {size} bytes)")
+        fh = open(path, "r+b")
+        try:
+            hdr = np.frombuffer(
+                fh.read(HEADER_SIZE), dtype=HEADER_DTYPE, count=1
+            )
+            if int(hdr["magic"][0]) != MAGIC:
+                raise RingError(f"{path} is not a ring (bad magic)")
+            if int(hdr["version"][0]) != VERSION:
+                raise RingError(
+                    f"{path} is ring version {int(hdr['version'][0])}, "
+                    f"this reader speaks {VERSION}"
+                )
+            if int(hdr["record_size"][0]) != RECORD_SIZE:
+                raise RingError(
+                    f"{path} has {int(hdr['record_size'][0])}-byte records, "
+                    f"expected {RECORD_SIZE}"
+                )
+            capacity = int(hdr["capacity"][0])
+            if size < HEADER_SIZE + capacity * RECORD_SIZE:
+                raise RingError(f"{path} is truncated (capacity {capacity})")
+        except RingError:
+            fh.close()
+            raise
+        self._map(fh, capacity)
+        # Resume at the newest sequence.
+        self._hdr["read_seq"][0] = self._hdr["write_seq"][0]
+
+    def poll(self) -> np.ndarray:
+        """Copy out everything published since the last poll and advance."""
+        hdr = self._hdr
+        w = int(hdr["write_seq"][0])
+        r = int(hdr["read_seq"][0])
+        n = w - r
+        if n <= 0:
+            return np.empty(0, dtype=RECORD_DTYPE)
+        start = r % self.capacity
+        end = start + n
+        if end <= self.capacity:
+            out = self._slots[start:end].copy()
+        else:
+            out = np.concatenate(
+                [self._slots[start:], self._slots[: end - self.capacity]]
+            )
+        hdr["read_seq"][0] = w
+        return out
+
+    @property
+    def heartbeat_age_s(self) -> float:
+        return max(time.time_ns() - self.heartbeat_ns, 0) / 1e9
+
+
+# -- definitions sidecar ------------------------------------------------------
+
+
+def defs_path_for(ring_path: str) -> str:
+    return os.path.join(os.path.dirname(ring_path) or ".", DEFS_FILENAME)
+
+
+def write_defs(path: str, doc: Dict[str, Any]) -> None:
+    """Atomic write (tmp + rename): the reader never sees a torn JSON."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    os.replace(tmp, path)
+
+
+def read_defs(path: str) -> Optional[Dict[str, Any]]:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None

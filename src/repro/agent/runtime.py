@@ -1,0 +1,81 @@
+"""In-process agent runtime — what ``MeasurementConfig.agent`` turns on.
+
+One :class:`AgentRuntime` per measurement: always an
+:class:`~repro.agent.publisher.AgentPublisher` (the ring writer on the flush
+path), plus — on rank 0 only — the sidecar (aggregator + HTTP server)
+hosting the live endpoints.  Non-zero ranks publish their rings and rank 0's
+aggregator fans them in from the sibling run dirs under ``out_dir``
+(rescanned periodically, so late-starting ranks join the window when they
+appear).
+
+The measurement talks to this object through four calls: ``on_flush`` /
+``on_metric`` (mirroring the substrate surface), ``take_publish_cost_ns``
+(the governor's accounting pull), and ``close`` (one of finalize's isolated
+best-effort hooks).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import TYPE_CHECKING, Any, Dict, Optional
+
+from .aggregator import Aggregator
+from .publisher import AgentPublisher
+from .serve import AgentServer
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.measurement import Measurement
+
+
+class AgentRuntime:
+    def __init__(self, measurement: "Measurement", announce: bool = True):
+        self.measurement = measurement
+        cfg = measurement.config
+        self.publisher = AgentPublisher(measurement)
+        self.server: Optional[AgentServer] = None
+        if cfg.topology.rank == 0:
+            root: Optional[str] = None
+            out_dir = cfg.out_dir
+            # Fan-in root: sibling rank run dirs live under out_dir; an
+            # explicit run_dir outside it still gets its own ring via paths.
+            if out_dir and os.path.isdir(out_dir):
+                root = out_dir
+            aggregator = Aggregator(
+                paths=(self.publisher.ring_path,),
+                root=root,
+                experiment=cfg.experiment,
+            )
+            self.server = AgentServer(
+                aggregator, port=int(cfg.agent_port or 0)
+            ).start()
+            if announce:
+                print(
+                    f"[repro.agent] live endpoint at {self.server.url} "
+                    f"(ring: {self.publisher.ring_path})",
+                    file=sys.stderr,
+                )
+
+    # -- measurement-facing surface ------------------------------------------
+
+    def on_flush(self, thread_id: int, columns) -> None:
+        self.publisher.on_flush(thread_id, columns)
+
+    def on_metric(self, name: str, value: float, t_ns: int) -> None:
+        self.publisher.on_metric(name, value, t_ns)
+
+    def take_publish_cost_ns(self) -> int:
+        return self.publisher.take_publish_cost_ns()
+
+    def describe(self) -> Dict[str, Any]:
+        doc = self.publisher.describe()
+        if self.server is not None:
+            doc["url"] = self.server.url
+        return doc
+
+    def close(self) -> None:
+        if self.server is not None:
+            self.server.stop()
+            self.server.aggregator.close()
+            self.server = None
+        self.publisher.close()

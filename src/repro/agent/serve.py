@@ -1,0 +1,142 @@
+"""Live HTTP endpoint — the existing report model over a rolling window.
+
+Stdlib-only (``http.server``): three read-only endpoints on a loopback
+socket, backed by an :class:`~repro.agent.aggregator.Aggregator` that a
+daemon thread drains continuously:
+
+========================  ====================================================
+``GET /report``           self-contained HTML (``core/report``'s renderer fed
+                          the window snapshot instead of a finished run dir)
+``GET /stats.json``       the schema-stamped window payload (same document
+                          the HTML embeds; see docs/ARTIFACTS.md)
+``GET /healthz``          ring lag, drop counts, heartbeat ages; ``status``
+                          is ``ok`` / ``degraded`` (drops) / ``stale``
+========================  ====================================================
+
+The server never touches the measured process's state: everything it knows
+arrived through the shared-memory ring, so the same class serves both the
+in-process sidecar (``--agent``) and the external spectator
+(``python -m repro.agent attach``).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from .aggregator import Aggregator
+
+#: Aggregator drain period (seconds) — snappy enough for a live view,
+#: far coarser than the writer's flush granularity.
+POLL_S = 0.2
+
+
+class AgentServer:
+    """Aggregator drain loop + HTTP endpoint, both daemon threads."""
+
+    def __init__(
+        self,
+        aggregator: Aggregator,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        poll_s: float = POLL_S,
+    ):
+        self.aggregator = aggregator
+        self.poll_s = float(poll_s)
+        self._stop = threading.Event()
+        self._drainer: Optional[threading.Thread] = None
+        self._server_thread: Optional[threading.Thread] = None
+
+        agent = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, *args):  # noqa: D102 - quiet by design
+                pass
+
+            def _send(self, body: bytes, content_type: str, code: int = 200):
+                self.send_response(code)
+                self.send_header("Content-Type", content_type)
+                self.send_header("Content-Length", str(len(body)))
+                self.send_header("Cache-Control", "no-store")
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):
+                path = self.path.split("?", 1)[0]
+                try:
+                    if path in ("/", "/report"):
+                        from repro.core.report import render_report
+
+                        page = render_report(agent.aggregator.snapshot())
+                        self._send(page.encode("utf-8"), "text/html; charset=utf-8")
+                    elif path == "/stats.json":
+                        doc = agent.aggregator.snapshot()
+                        self._send(
+                            json.dumps(doc).encode("utf-8"), "application/json"
+                        )
+                    elif path == "/healthz":
+                        doc = agent.aggregator.healthz()
+                        code = 200 if doc["status"] == "ok" else 503
+                        self._send(
+                            json.dumps(doc).encode("utf-8"), "application/json", code
+                        )
+                    else:
+                        self._send(b"not found\n", "text/plain", 404)
+                except BrokenPipeError:  # client went away mid-write
+                    pass
+                except Exception as exc:  # never kill the serving thread
+                    try:
+                        self._send(
+                            f"error: {exc!r}\n".encode(), "text/plain", 500
+                        )
+                    except OSError:
+                        pass
+
+        self.httpd = ThreadingHTTPServer((host, port), Handler)
+        self.httpd.daemon_threads = True
+        self.host, self.port = self.httpd.server_address[:2]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def _drain_loop(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            try:
+                self.aggregator.drain_once()
+            except Exception:  # pragma: no cover - keep serving stale data
+                pass
+
+    def start(self) -> "AgentServer":
+        self._stop.clear()
+        self._drainer = threading.Thread(
+            target=self._drain_loop, name="repro-agent-drain", daemon=True
+        )
+        self._drainer.start()
+        self._server_thread = threading.Thread(
+            target=self.httpd.serve_forever,
+            kwargs={"poll_interval": 0.2},
+            name="repro-agent-http",
+            daemon=True,
+        )
+        self._server_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        if self._drainer is not None:
+            self._drainer.join(timeout=2.0)
+            self._drainer = None
+        if self._server_thread is not None:
+            self._server_thread.join(timeout=2.0)
+            self._server_thread = None
+        # One last drain so post-stop snapshots (finalize paths, tests) see
+        # everything that was published before shutdown.
+        try:
+            self.aggregator.drain_once()
+        except Exception:
+            pass

@@ -85,6 +85,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="static_plan.json from `analysis plan`: merges its "
                         "auto-excludes into the filter and warm-starts the "
                         "governor (REPRO_MONITOR_STATIC_PLAN)")
+    p.add_argument("--agent", action="store_true",
+                   help="run the live continuous-monitoring agent: publish "
+                        "events to a shared-memory ring and serve /report, "
+                        "/stats.json, /healthz on rank 0 "
+                        "(REPRO_MONITOR_AGENT=1)")
+    p.add_argument("--agent-port", type=int, default=0,
+                   help="agent HTTP port (0 = ephemeral; "
+                        "REPRO_MONITOR_AGENT_PORT)")
     p.add_argument("target", help="script path, or module name with -m style 'mod:pkg.mod'")
     p.add_argument("args", nargs=argparse.REMAINDER, help="target application arguments")
     return p
@@ -121,6 +129,8 @@ def compose_environment(ns: argparse.Namespace, environ) -> Dict[str, str]:
         chrome_export=not ns.no_chrome,
         report=ns.report,
         static_plan=ns.static_plan,
+        agent=ns.agent,
+        agent_port=ns.agent_port,
     )
     env.update(config.to_env())
     env[ENV_PREFIX + "ENABLE"] = "1"

@@ -45,6 +45,9 @@ _SECTIONS: List[Tuple[str, str]] = [
      "sharded step, checkpointing) with monitoring built in."),
     ("repro.launch.serve", "Batched prefill + greedy-decode serving driver "
      "with monitoring built in."),
+    ("repro.agent", "Live continuous-monitoring agent: spectate a running "
+     "measured process over its shared-memory ring (`attach`), or run the "
+     "end-to-end live-path smoke (`smoke`)."),
 ]
 
 
@@ -59,6 +62,8 @@ def _parser_for(module: str):
         from repro.launch.train import build_parser
     elif module == "repro.launch.serve":
         from repro.launch.serve import build_parser
+    elif module == "repro.agent":
+        from repro.agent.cli import build_parser
     else:  # pragma: no cover - guarded by _SECTIONS
         raise KeyError(module)
     return build_parser()

@@ -527,6 +527,15 @@ class Governor:
             self._ev_total += float(kind.size)
             self._ev_enters += float(enters.size)
 
+        # Live-agent publish cost counts against the same budget as the
+        # instrumentation itself: pull the nanoseconds accrued since the
+        # last flush into this window (the publisher degrades its stride
+        # when its share of the budget is exceeded; this makes the residual
+        # visible to the escalation ladder too).
+        agent = getattr(self.measurement, "agent", None)
+        if agent is not None:
+            self._window_cost += float(agent.take_publish_cost_ns())
+
         now = time.perf_counter_ns()
         elapsed = now - self._window_start
         if elapsed < self.min_window_ns or self._window_pairs < self.min_window_pairs:

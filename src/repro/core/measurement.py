@@ -92,6 +92,12 @@ class MeasurementConfig:
     # governor uses) and its predicted offenders warm-start the governor.
     # The plan is copied into the run dir at start() for provenance.
     static_plan: str = ""
+    # Live continuous-monitoring agent (repro.agent): publish flush batches
+    # into a shared-memory ring; rank 0 additionally runs the sidecar
+    # aggregator + HTTP endpoint (/report, /stats.json, /healthz) on
+    # ``agent_port`` (0 = ephemeral).
+    agent: bool = False
+    agent_port: int = 0
 
     def __post_init__(self):
         if self.topology is None:
@@ -141,6 +147,8 @@ class MeasurementConfig:
             keep_series=get("SERIES", "1") not in ("0", "false", ""),
             report=get("REPORT", "0") not in ("0", "false", ""),
             static_plan=get("STATIC_PLAN", cls.static_plan),
+            agent=get("AGENT", "0") not in ("0", "false", ""),
+            agent_port=int(get("AGENT_PORT", cls.agent_port)),
         )
 
     def to_env(self) -> Dict[str, str]:
@@ -161,6 +169,8 @@ class MeasurementConfig:
             ENV_PREFIX + "CHROME": "1" if self.chrome_export else "0",
             ENV_PREFIX + "SERIES": "1" if self.keep_series else "0",
             ENV_PREFIX + "REPORT": "1" if self.report else "0",
+            ENV_PREFIX + "AGENT": "1" if self.agent else "0",
+            ENV_PREFIX + "AGENT_PORT": str(self.agent_port),
         }
         env.update(self.topology.to_env())  # RANK / WORLD_SIZE / LOCAL_RANK / MESH
         if self.run_dir:
@@ -241,6 +251,10 @@ class Measurement:
             # filter before any region verdict is cached.  A bad plan path
             # raises MissingArtifact here, at construction, not mid-run.
             apply_plan(self, load_plan(config.static_plan))
+        #: Live-monitoring runtime (repro.agent.runtime.AgentRuntime), or
+        #: None.  Created in start() when config.agent is set, or later via
+        #: attach_agent(); the flush path fans out to it like a substrate.
+        self.agent = None
         self._buffer_cls = BUFFER_STRATEGIES[config.buffer_strategy]
         self.run_dir = config.run_dir or os.path.join(
             config.out_dir,
@@ -278,6 +292,11 @@ class Measurement:
         with self._flush_lock:
             for sub in self._substrates:
                 sub.on_flush(thread_id, columns)
+            if self.agent is not None:
+                # Before the governor: the governor's very next on_flush
+                # pulls this publish's cost (take_publish_cost_ns) into the
+                # window it is about to score.
+                self.agent.on_flush(thread_id, columns)
             if self.governor is not None:
                 # After the substrates: the governor may mutate the filter,
                 # the sampling period, or the instrumenter itself, and the
@@ -313,6 +332,8 @@ class Measurement:
             with open(os.path.join(self.run_dir, _PLAN_ARTIFACT), "w") as fh:
                 json.dump(self.static_plan, fh, indent=1)
         self.started = True
+        if self.config.agent:
+            self.attach_agent()
         if self.governor is not None:
             # Calibrate before the instrumenter installs: the probe runs
             # throwaway instrumenter instances on a stub host and must not
@@ -321,6 +342,25 @@ class Measurement:
         self.instrumenter.install(self)
         if self.governor is not None:
             self.governor.open()
+
+    def attach_agent(self, port: Optional[int] = None):
+        """Turn on the live-monitoring agent for a started measurement.
+
+        Idempotent: returns the existing runtime if one is live.  Normally
+        invoked from :meth:`start` via ``config.agent``; callers that decide
+        late (e.g. ``launch serve --agent`` joining an active measurement)
+        use this directly."""
+        if not self.started or self.finalized:
+            raise RuntimeError("attach_agent requires a started measurement")
+        if self.agent is not None:
+            return self.agent
+        if port is not None:
+            self.config.agent_port = int(port)
+        self.config.agent = True
+        from repro.agent.runtime import AgentRuntime  # late: agent imports core
+
+        self.agent = AgentRuntime(self)
+        return self.agent
 
     def stop(self) -> None:
         """Uninstall the instrumenter but keep the run open (re-startable)."""
@@ -332,6 +372,25 @@ class Measurement:
                 self.governor.frozen = True
                 self.governor.stop_watchdog()
             self.instrumenter.uninstall()
+
+    def _best_effort(self, label: str, fn, advice: str = "") -> bool:
+        """Run one finalize hook in isolation.
+
+        Finalize is a sequence of independent artifact writers; one failing
+        hook (a substrate close, the chrome export, the agent shutdown, the
+        report) must neither skip the hooks after it nor corrupt the run dir
+        — whatever already hit disk stays, whatever comes next still runs.
+        Each failure surfaces as a RuntimeWarning naming the hook."""
+        try:
+            fn()
+            return True
+        except Exception as exc:
+            suffix = f" ({advice})" if advice else ""
+            warnings.warn(
+                f"{label} failed for {self.run_dir}: {exc!r}{suffix}",
+                RuntimeWarning,
+            )
+            return False
 
     def finalize(self) -> Optional[str]:
         if not self.started or self.finalized:
@@ -347,18 +406,17 @@ class Measurement:
         with self._buffers_lock:
             buffers = list(self._buffers)
         for buf in buffers:
-            buf.flush()
+            self._best_effort(f"buffer flush (thread {buf.thread_id})", buf.flush)
         region_table = self.regions.snapshot()
         for sub in self._substrates:
-            sub.close(region_table)
+            self._best_effort(
+                f"substrate close ({sub.name})",
+                lambda s=sub: s.close(region_table),
+            )
         if self.governor is not None:
-            try:
-                self.governor.close(self.run_dir)
-            except Exception as exc:
-                warnings.warn(
-                    f"governor report failed for {self.run_dir}: {exc!r}",
-                    RuntimeWarning,
-                )
+            self._best_effort(
+                "governor report", lambda: self.governor.close(self.run_dir)
+            )
         for sub in self._substrates:
             # Chrome export runs after *all* substrates closed so the trace
             # can embed metric series (metrics.json) as counter tracks.  An
@@ -366,14 +424,16 @@ class Measurement:
             # already on disk and re-exportable offline via to_chrome().
             export_chrome = getattr(sub, "export_chrome", None)
             if export_chrome is not None:
-                try:
-                    export_chrome()
-                except Exception as exc:
-                    warnings.warn(
-                        f"chrome trace export failed for {self.run_dir}: {exc!r} "
-                        "(raw streams kept; re-run repro.core.export.export_run)",
-                        RuntimeWarning,
-                    )
+                self._best_effort(
+                    f"chrome trace export ({sub.name})",
+                    export_chrome,
+                    advice="raw streams kept; re-run repro.core.export.export_run",
+                )
+        if self.agent is not None:
+            # After the exports (the last flush above still published), and
+            # before meta.json: the ring's writer_closed flag and the final
+            # definitions sidecar are part of the run dir contract.
+            self._best_effort("agent shutdown", self.agent.close)
         meta = stamp({
             "rank": self.config.rank,
             "topology": self.config.topology.as_dict(),
@@ -393,18 +453,17 @@ class Measurement:
         if self.config.report:
             # Last: the report generator re-reads every artifact finalized
             # above.  Best-effort for the same reason as the chrome export —
-            # raw artifacts are on disk and the report is re-generatable via
-            # `python -m repro.core.analysis report <run_dir>`.
-            try:
+            # raw artifacts are on disk and the report is re-generatable.
+            def _report():
                 from .report import write_report
 
                 write_report(self.run_dir)
-            except Exception as exc:
-                warnings.warn(
-                    f"report generation failed for {self.run_dir}: {exc!r} "
-                    "(re-run `python -m repro.core.analysis report`)",
-                    RuntimeWarning,
-                )
+
+            self._best_effort(
+                "report generation",
+                _report,
+                advice="re-run `python -m repro.core.analysis report`",
+            )
         return self.run_dir
 
     def swap_instrumenter(self, name: str, **kwargs) -> None:
@@ -436,6 +495,8 @@ class Measurement:
         t = time.perf_counter_ns()
         for sub in self._substrates:
             sub.on_metric(name, float(value), t)
+        if self.agent is not None:
+            self.agent.on_metric(name, float(value), t)
 
     def substrate(self, name: str):
         for sub in self._substrates:

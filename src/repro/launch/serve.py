@@ -106,21 +106,36 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--static-plan", dest="static_plan", default="",
                    help="static_plan.json from `analysis plan`: applied to "
                         "the active measurement (or the one --report starts)")
+    p.add_argument("--agent", action="store_true",
+                   help="run the live-monitoring agent alongside the workload "
+                        "(/report, /stats.json, /healthz); attaches to the "
+                        "active measurement when launched under repro.scorep, "
+                        "else starts a measurement of its own")
+    p.add_argument("--agent-port", type=int, default=0,
+                   help="agent HTTP port (0 = ephemeral)")
+    p.add_argument("--loop", type=int, default=1,
+                   help="repeat the serve workload N times (live-monitoring "
+                        "demos/smokes: keeps events flowing; Ctrl-C exits "
+                        "cleanly after the current iteration)")
     return p
 
 
 def main(argv=None) -> int:
     ns = build_parser().parse_args(argv)
     owns_measurement = False
-    if ns.report:
+    if ns.report or ns.agent:
         m = rmon.active()
-        if m is not None:
-            m.config.report = True
-        else:
-            rmon.init(experiment="serve", report=True,
+        if m is None:
+            rmon.init(experiment="serve", report=ns.report,
+                      agent=ns.agent, agent_port=ns.agent_port,
                       static_plan=ns.static_plan,
                       substrates=("profiling", "tracing", "metrics", "memory"))
             owns_measurement = True
+        else:
+            if ns.report:
+                m.config.report = True
+            if ns.agent:
+                m.attach_agent(ns.agent_port)
     if ns.static_plan and not owns_measurement:
         m = rmon.active()
         if m is not None:
@@ -128,14 +143,22 @@ def main(argv=None) -> int:
 
             apply_plan(m, load_plan(ns.static_plan))
     cfg = get_smoke_config(ns.arch) if ns.smoke else get_config(ns.arch)
-    result = serve(cfg, batch=ns.batch, prompt_len=ns.prompt_len, gen=ns.gen,
-                   use_mesh=ns.mesh)
-    print(result)
+    result = None
+    try:
+        for i in range(max(1, ns.loop)):
+            result = serve(cfg, batch=ns.batch, prompt_len=ns.prompt_len,
+                           gen=ns.gen, use_mesh=ns.mesh)
+            if ns.loop > 1:
+                rmon.metric("serve.iteration", i + 1)
+    except KeyboardInterrupt:
+        pass  # clean exit mid-loop: fall through to finalize below
+    if result is not None:
+        print(result)
     if owns_measurement:
         run_dir = rmon.finalize()
-        if run_dir:
+        if run_dir and ns.report:
             print(f"report: {run_dir}/report.html")
-    return 0 if result["finite"] else 1
+    return 0 if (result is None or result["finite"]) else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,343 @@
+"""Live-monitoring agent tests: config round-trip, in-process end-to-end
+HTTP, the external attach CLI, multi-rank fan-in with rank dedup, governor
+cost accounting, the publisher degradation ladder, and finalize isolation."""
+
+import json
+import time
+import urllib.error
+import urllib.request
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.agent.aggregator import Aggregator
+from repro.agent.publisher import MAX_STRIDE
+from repro.agent.ringbus import RingWriter, defs_path_for, encode_columns, write_defs
+from repro.core.buffer import COLUMNS, EV_ENTER, EV_EXIT
+from repro.core.measurement import Measurement, MeasurementConfig
+from repro.core.schema import REPORT_SCHEMA_VERSION, SCHEMA_KEY
+
+
+def _get(url, timeout=5.0):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.getcode(), resp.read().decode("utf-8")
+
+
+def _agent_measurement(tmp_path, name="agent-run", **overrides):
+    cfg = MeasurementConfig(
+        instrumenter="none",
+        substrates=("profiling",),
+        run_dir=str(tmp_path / name),
+        agent=True,
+        **overrides,
+    )
+    m = Measurement(cfg)
+    m.start()
+    return m
+
+
+def _work(m, n=150, metric=True):
+    for i in range(n):
+        with m.region("work"):
+            time.sleep(0.0002)
+        if metric:
+            m.metric("toks", float(i))
+    m.thread_buffer().flush()
+
+
+# -- configuration ------------------------------------------------------------
+
+
+def test_agent_config_env_round_trip():
+    cfg = MeasurementConfig(agent=True, agent_port=8707)
+    env = cfg.to_env()
+    assert env["REPRO_MONITOR_AGENT"] == "1"
+    assert env["REPRO_MONITOR_AGENT_PORT"] == "8707"
+    back = MeasurementConfig.from_env(env)
+    assert back.agent is True and back.agent_port == 8707
+    off = MeasurementConfig.from_env(MeasurementConfig().to_env())
+    assert off.agent is False and off.agent_port == 0
+
+
+# -- end-to-end: in-process sidecar ------------------------------------------
+
+
+def test_agent_live_endpoints_end_to_end(tmp_path):
+    m = _agent_measurement(tmp_path)
+    assert m.agent is not None and m.agent.server is not None
+    url = m.agent.server.url
+    try:
+        _work(m)
+        deadline = time.monotonic() + 10.0
+        rows = []
+        while time.monotonic() < deadline and not rows:
+            time.sleep(0.25)
+            _, body = _get(url + "/stats.json")
+            stats = json.loads(body)
+            rows = [r for r in stats["regions"] if r["visits"] > 0]
+        assert stats[SCHEMA_KEY] == REPORT_SCHEMA_VERSION
+        assert rows and rows[0]["visits"] == 150
+        assert rows[0]["excl_ns"] > 0 and rows[0]["p95_ns"] >= rows[0]["p50_ns"]
+
+        code, body = _get(url + "/healthz")
+        health = json.loads(body)
+        assert code == 200 and health["status"] == "ok"
+        assert health["drops"] == 0 and health["rings"]
+
+        _, page = _get(url + "/report")
+        from repro.core.report import extract_payload
+
+        payload = extract_payload(page)
+        assert payload[SCHEMA_KEY] == REPORT_SCHEMA_VERSION
+        assert payload["meta"]["live"] is True
+        for needle in ("https://", "cdn.", "@import", 'src="//'):
+            assert needle not in page
+
+        code, _ = _get(url + "/nope")
+    except urllib.error.HTTPError as exc:
+        assert exc.code == 404
+    finally:
+        m.finalize()
+    # Finalize tears the endpoint down.
+    with pytest.raises((urllib.error.URLError, ConnectionError, OSError)):
+        urllib.request.urlopen(url + "/healthz", timeout=2.0)
+
+
+def test_agent_run_dir_artifacts_and_describe(tmp_path):
+    m = _agent_measurement(tmp_path)
+    _work(m, n=30, metric=False)
+    desc = m.agent.describe()
+    assert desc["drops"] == 0 and desc["write_seq"] > 0
+    assert desc["url"].startswith("http://127.0.0.1:")
+    run_dir = m.finalize()
+    assert (tmp_path / "agent-run" / "agent.ring").exists()
+    defs = json.load(open(defs_path_for(str(tmp_path / "agent-run" / "agent.ring"))))
+    names = [row[1] for row in defs["regions"]]
+    assert "user:work" in names
+    assert defs["meta"]["rank"] == 0
+    assert json.load(open(run_dir + "/meta.json"))
+
+
+# -- external attach (rank > 0: no in-process server competes) ---------------
+
+
+def test_agent_attach_cli_once(tmp_path, capsys):
+    from repro.agent.cli import main as agent_main
+
+    cfg = MeasurementConfig(
+        instrumenter="none",
+        substrates=("profiling",),
+        run_dir=str(tmp_path / "r1"),
+        agent=True,
+        rank=1,
+    )
+    m = Measurement(cfg)
+    m.start()
+    assert m.agent.server is None  # only rank 0 hosts the sidecar
+    # --once attaches at the newest sequence (spectating starts *now*), so
+    # the pre-attach history below is skipped by design; the assertions
+    # cover the payload contract and the live-writer health verdict.
+    _work(m, n=40, metric=False)
+    assert agent_main(["attach", str(tmp_path / "r1"), "--once"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc[SCHEMA_KEY] == REPORT_SCHEMA_VERSION
+    assert doc["window"]["status"] == "ok"
+    m.finalize()
+
+
+# -- multi-rank fan-in --------------------------------------------------------
+
+
+def _fake_ring(run_dir, rank, epoch_time_ns):
+    run_dir.mkdir(parents=True)
+    ring = str(run_dir / "agent.ring")
+    w = RingWriter(ring, capacity=4096, rank=rank, epoch_time_ns=epoch_time_ns,
+                   epoch_perf_ns=1)
+    write_defs(defs_path_for(ring), {
+        "meta": {"rank": rank, "experiment": "exp", "epoch_time_ns": epoch_time_ns,
+                 "epoch_perf_ns": 1},
+        "regions": [[0, "serve:step", "user"]],
+        "metrics": {},
+    })
+    return ring, w
+
+
+def _publish_pairs(w, n, dur_ns=1000):
+    kinds = np.array([EV_ENTER, EV_EXIT] * n, dtype=COLUMNS[0][1])
+    regions = np.zeros(2 * n, dtype=COLUMNS[1][1])
+    t = np.arange(2 * n, dtype=COLUMNS[2][1]) * dur_ns
+    aux = np.zeros(2 * n, dtype=COLUMNS[3][1])
+    assert w.publish(encode_columns(
+        {"kind": kinds, "region": regions, "t": t, "aux": aux}))
+
+
+def test_multi_rank_fan_in_and_rank_dedup(tmp_path):
+    ring0, w0 = _fake_ring(tmp_path / "exp-a-r0", rank=0, epoch_time_ns=100)
+    ring1, w1 = _fake_ring(tmp_path / "exp-b-r1", rank=1, epoch_time_ns=100)
+    # A stale duplicate of rank 1 (older epoch): must be dropped, newest wins.
+    ring1s, w1s = _fake_ring(tmp_path / "exp-stale-r1", rank=1, epoch_time_ns=50)
+    agg = Aggregator(paths=(ring0, ring1, ring1s))
+    try:
+        assert len(agg._tails) == 2
+        _publish_pairs(w0, 10)
+        _publish_pairs(w1, 30)
+        agg.drain_once()
+        doc = agg.snapshot()
+        merge = doc["merge"]
+        assert merge is not None and merge["world_size"] == 2
+        assert [r["rank"] for r in merge["ranks"]] == [0, 1]
+        assert merge["total_events"] == 80
+        assert [d["rank"] for d in merge["dropped_runs"]] == [1]
+        # Per-rank heatmap: rank 1 did 3x the work of rank 0.
+        prof = merge["profile"]
+        assert prof["regions"] == ["serve:step"]
+        (row,) = prof["excl_ns"]
+        assert row[1] == pytest.approx(3 * row[0])
+        assert prof["imbalance"]["serve:step"] == pytest.approx(1.5)
+        assert doc["meta"]["world_size"] == 2
+        # The unified table sums both ranks.
+        (region_row,) = [r for r in doc["regions"] if r["visits"]]
+        assert region_row["region"] == "serve:step"
+        assert region_row["visits"] == 40
+    finally:
+        agg.close()
+        w0.close()
+        w1.close()
+        w1s.close()
+
+
+def test_aggregator_root_rescan_picks_up_late_ranks(tmp_path):
+    ring0, w0 = _fake_ring(tmp_path / "exp-r0", rank=0, epoch_time_ns=100)
+    agg = Aggregator(paths=(ring0,), root=str(tmp_path), experiment="exp",
+                     rescan_s=0.0)
+    try:
+        _publish_pairs(w0, 5)
+        agg.drain_once()
+        assert len(agg._tails) == 1
+        ring1, w1 = _fake_ring(tmp_path / "exp-late-r1", rank=1, epoch_time_ns=200)
+        _publish_pairs(w1, 5)  # published before the rescan attaches…
+        agg.drain_once()       # …so resume-at-newest skips it
+        assert len(agg._tails) == 2
+        _publish_pairs(w1, 7)
+        agg.drain_once()
+        health = agg.healthz()
+        assert {r["rank"] for r in health["rings"]} == {0, 1}
+        w1.close()
+    finally:
+        agg.close()
+        w0.close()
+
+
+# -- governor integration -----------------------------------------------------
+
+
+def test_governor_accounts_publish_cost(tmp_path):
+    m = _agent_measurement(tmp_path, budget=0.5)
+    try:
+        assert m.governor is not None
+        pub = m.agent.publisher
+        with pub._cost_lock:
+            pub._cost_pending += 12_345_678
+        before = m.governor._window_cost
+        empty = {name: np.empty(0, dtype=dt) for name, dt in COLUMNS}
+        m.governor.on_flush(0, empty)
+        assert m.governor._window_cost - before >= 12_345_678
+        # The pull is a swap: a second flush must not double-count.
+        after = m.governor._window_cost
+        m.governor.on_flush(0, empty)
+        assert m.governor._window_cost - after < 12_345_678
+    finally:
+        m.finalize()
+
+
+def test_publisher_degrades_and_relaxes_stride(tmp_path):
+    m = _agent_measurement(tmp_path)
+    try:
+        pub = m.agent.publisher
+        cols = {name: np.empty(0, dtype=dt) for name, dt in COLUMNS}
+        # Overdrive: pretend publishing consumed ~all wall time.
+        for _ in range(10):
+            pub._window_t0 = time.perf_counter_ns() - int(2e9)
+            pub._window_publish_ns = int(2e9)
+            pub.on_flush(0, cols)
+        assert pub.stride == MAX_STRIDE
+        assert pub.thinned_batches > 0
+        # Pressure gone: the ladder steps back down to 1.
+        for _ in range(10):
+            pub._window_t0 = time.perf_counter_ns() - int(2e9)
+            pub._window_publish_ns = 0
+            pub.on_flush(0, cols)
+        assert pub.stride == 1
+    finally:
+        m.finalize()
+
+
+# -- finalize isolation (one failing hook must not skip the others) ----------
+
+
+class _ExplodingSubstrate:
+    name = "exploding"
+
+    def open(self, run_dir, meta):
+        pass
+
+    def on_flush(self, thread_id, columns):
+        pass
+
+    def on_metric(self, name, value, t_ns):
+        pass
+
+    def close(self, region_table):
+        raise RuntimeError("substrate close boom")
+
+    def export_chrome(self):
+        raise RuntimeError("chrome export boom")
+
+
+def test_finalize_isolates_failing_hooks(tmp_path):
+    m = _agent_measurement(tmp_path, name="iso")
+    m._substrates.insert(0, _ExplodingSubstrate())
+    orig_close = m.agent.close
+    calls = {"agent": 0}
+
+    def agent_boom():
+        calls["agent"] += 1
+        raise RuntimeError("agent shutdown boom")
+
+    m.agent.close = agent_boom
+    _work(m, n=10, metric=False)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        run_dir = m.finalize()
+    msgs = [str(w.message) for w in caught if w.category is RuntimeWarning]
+    assert any("substrate close (exploding)" in s for s in msgs)
+    assert any("chrome trace export (exploding)" in s for s in msgs)
+    assert any("agent shutdown" in s for s in msgs)
+    assert calls["agent"] == 1
+    # Every hook after the failing ones still ran: the profiling substrate
+    # wrote its artifact and meta.json closed out the run dir.
+    assert (tmp_path / "iso" / "profile.json").exists()
+    meta = json.load(open(run_dir + "/meta.json"))
+    assert meta[SCHEMA_KEY] == REPORT_SCHEMA_VERSION
+    assert m.finalized
+    orig_close()  # real teardown so the server thread doesn't leak
+
+
+def test_finalize_survives_failing_buffer_flush(tmp_path):
+    cfg = MeasurementConfig(
+        instrumenter="none", substrates=("profiling",), run_dir=str(tmp_path / "b")
+    )
+    m = Measurement(cfg)
+    m.start()
+    with m.region("ok"):
+        pass
+    buf = m.thread_buffer()
+    orig_flush = buf.flush
+    buf.flush = lambda: (_ for _ in ()).throw(RuntimeError("flush boom"))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        run_dir = m.finalize()
+    assert any("buffer flush" in str(w.message) for w in caught)
+    assert json.load(open(run_dir + "/meta.json"))
+    buf.flush = orig_flush

@@ -1,0 +1,218 @@
+"""Shared-memory ring (repro.agent.ringbus): encoding, wraparound, drops,
+reattach semantics, and corrupt-file errors."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.agent.ringbus import (
+    RECORD_DTYPE,
+    RingError,
+    RingReader,
+    RingWriter,
+    decode_records,
+    defs_path_for,
+    encode_columns,
+    encode_metric,
+    read_defs,
+    write_defs,
+)
+from repro.core.buffer import COLUMNS, EV_ENTER, EV_EXIT
+
+
+def _columns(kinds, regions, ts, auxs):
+    cols = {name: np.asarray(v, dtype=dt) for (name, dt), v in zip(
+        COLUMNS, (kinds, regions, ts, auxs))}
+    return cols
+
+
+def _pair_columns(n, region=3, t0=1000, dt=10):
+    kinds, regions, ts, auxs = [], [], [], []
+    t = t0
+    for _ in range(n):
+        kinds += [EV_ENTER, EV_EXIT]
+        regions += [region, region]
+        ts += [t, t + dt]
+        auxs += [0, 0]
+        t += 2 * dt
+    return _columns(kinds, regions, ts, auxs)
+
+
+# -- encode / decode ----------------------------------------------------------
+
+
+def test_encode_decode_round_trip():
+    cols = _pair_columns(5, region=7)
+    rec = encode_columns(cols, stream=2)
+    assert rec.dtype == RECORD_DTYPE
+    assert len(rec) == 11  # header + 10 events
+    batches, metrics = decode_records(rec)
+    assert metrics == []
+    assert len(batches) == 1
+    stream, out = batches[0]
+    assert stream == 2
+    for name, _ in COLUMNS:
+        np.testing.assert_array_equal(out[name], cols[name])
+
+
+def test_metric_encode_decode_round_trip():
+    rec = encode_metric(4, 123.5, 999)
+    (batches, metrics) = decode_records(rec)
+    assert batches == []
+    assert metrics == [(4, 999, 123.5)]
+    # f32 payload: large values round but survive with float32 precision
+    _, m = decode_records(encode_metric(0, 1e12, 1))
+    assert m[0][2] == pytest.approx(1e12, rel=1e-6)
+
+
+def test_decode_skips_torn_tail():
+    """A batch header whose body was cut off (writer died mid-copy) is
+    skipped, not misattributed."""
+    cols = _pair_columns(3)
+    rec = encode_columns(cols)
+    torn = rec[:4]  # header claims 6 events, only 3 present
+    batches, metrics = decode_records(torn)
+    assert batches == [] and metrics == []
+
+
+def test_decode_interleaved_batches_and_metrics():
+    spans = [
+        encode_columns(_pair_columns(2), stream=0),
+        encode_metric(1, 2.0, 50),
+        encode_columns(_pair_columns(1, region=9), stream=1),
+    ]
+    batches, metrics = decode_records(np.concatenate(spans))
+    assert [s for s, _ in batches] == [0, 1]
+    assert metrics == [(1, 50, 2.0)]
+
+
+def test_property_encode_decode_round_trip():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed (requirements-dev)"
+    )
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(
+                st.integers(0, 5),              # kind
+                st.integers(-1, 2**31 - 1),     # region (i4, -1 sentinel)
+                st.integers(0, 2**63),          # t (u8)
+                st.integers(0, 2**32 - 1),      # aux (u4)
+            ),
+            max_size=64,
+        ),
+        st.integers(0, 200),
+    )
+    def check(events, stream):
+        cols = _columns(*(zip(*events) if events else ([], [], [], [])))
+        rec = encode_columns(cols, stream=stream)
+        batches, metrics = decode_records(rec)
+        assert metrics == []
+        assert len(batches) == 1
+        out_stream, out = batches[0]
+        assert out_stream == stream
+        for name, _ in COLUMNS:
+            np.testing.assert_array_equal(out[name], cols[name])
+
+    check()
+
+
+# -- ring transport -----------------------------------------------------------
+
+
+def test_ring_wraparound_preserves_order(tmp_path):
+    """Many batches through a tiny ring: every record crosses the wrap
+    boundary eventually and still round-trips in order."""
+    ring = str(tmp_path / "agent.ring")
+    w = RingWriter(ring, capacity=64, rank=0)
+    r = RingReader(ring)
+    seen = []
+    for i in range(100):
+        cols = _columns([EV_ENTER, EV_EXIT], [i, i], [i, i + 1], [0, 0])
+        assert w.publish(encode_columns(cols))
+        batches, _ = decode_records(r.poll())
+        seen += [int(c["region"][0]) for _, c in batches]
+    assert seen == list(range(100))
+    assert w.drops == 0
+    w.close()
+    r.close()
+
+
+def test_ring_overrun_drops_whole_batches_and_counts(tmp_path):
+    ring = str(tmp_path / "agent.ring")
+    w = RingWriter(ring, capacity=32, rank=0)
+    r = RingReader(ring)  # attached but deliberately not draining
+    ok = w.publish(encode_columns(_pair_columns(10)))  # 21 records
+    assert ok
+    dropped = encode_columns(_pair_columns(10))
+    assert not w.publish(dropped)  # 21 > 32 - 21 free: dropped whole
+    assert w.drops == len(dropped)
+    # The reader sees exactly the published batch, never a partial one.
+    batches, _ = decode_records(r.poll())
+    assert len(batches) == 1
+    assert len(batches[0][1]["kind"]) == 20
+    # Space freed by the drain: the next batch fits again.
+    assert w.publish(encode_columns(_pair_columns(10)))
+    assert w.drops == len(dropped)
+    w.close()
+    r.close()
+
+
+def test_reader_reattach_resumes_at_newest(tmp_path):
+    ring = str(tmp_path / "agent.ring")
+    w = RingWriter(ring, capacity=256, rank=1)
+    r1 = RingReader(ring)
+    w.publish(encode_columns(_pair_columns(3)))
+    assert len(r1.poll()) == 7
+    r1.close()  # reader "crashes"
+    w.publish(encode_columns(_pair_columns(5)))  # published while unread
+    r2 = RingReader(ring)
+    # Reattach snaps to the newest sequence: the unread backlog is skipped…
+    assert len(r2.poll()) == 0
+    # …but everything published from now on flows.
+    w.publish(encode_columns(_pair_columns(2)))
+    batches, _ = decode_records(r2.poll())
+    assert len(batches) == 1 and len(batches[0][1]["kind"]) == 4
+    assert r2.rank == 1
+    w.close()
+    assert r2.writer_closed
+    r2.close()
+
+
+def test_reader_errors_on_missing_or_corrupt_ring(tmp_path):
+    with pytest.raises(RingError):
+        RingReader(str(tmp_path / "nope.ring"))
+    short = tmp_path / "short.ring"
+    short.write_bytes(b"\x00" * 100)
+    with pytest.raises(RingError):
+        RingReader(str(short))
+    bad = tmp_path / "bad.ring"
+    bad.write_bytes(b"\xff" * 8192)
+    with pytest.raises(RingError):
+        RingReader(str(bad))
+    # Valid header, file truncated below the declared capacity.
+    ring = str(tmp_path / "trunc.ring")
+    w = RingWriter(ring, capacity=1024)
+    w.close()
+    with open(ring, "r+b") as fh:
+        fh.truncate(4096 + 17 * 10)
+    with pytest.raises(RingError):
+        RingReader(ring)
+
+
+# -- definitions sidecar ------------------------------------------------------
+
+
+def test_defs_sidecar_round_trip(tmp_path):
+    ring = str(tmp_path / "agent.ring")
+    path = defs_path_for(ring)
+    assert os.path.dirname(path) == str(tmp_path)
+    doc = {"meta": {"rank": 0}, "regions": [[0, "m:f", "py"]], "metrics": {"x": 0}}
+    write_defs(path, doc)
+    assert read_defs(path) == doc
+    assert not os.path.exists(path + ".tmp")
+    assert read_defs(str(tmp_path / "missing.json")) is None

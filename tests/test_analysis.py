@@ -88,6 +88,21 @@ def test_missing_artifact_exit_codes_are_uniform(tmp_path, capsys):
         err = capsys.readouterr().err
         assert err.startswith("error:"), (argv, err)
 
+    # The agent CLI follows the same convention (missing/corrupt ring).
+    from repro.agent.cli import main as agent_main
+
+    corrupt = tmp_path / "corrupt"
+    corrupt.mkdir()
+    (corrupt / "agent.ring").write_bytes(b"not a ring header")
+    for argv in (
+        ["attach", str(empty)],  # dir without a ring
+        ["attach", str(empty / "nope.ring")],  # no such file
+        ["attach", str(corrupt)],  # truncated/bad-magic ring
+    ):
+        assert agent_main(argv) == 2, argv
+        err = capsys.readouterr().err
+        assert err.startswith("error:"), (argv, err)
+
 
 def test_lint_exit_codes(tmp_path, capsys):
     """`analysis lint` follows the linter convention: 1 with violations,
