@@ -12,14 +12,16 @@ comparison is programmatic and drives the §Perf loop).
     PYTHONPATH=src python -m repro.core.analysis report RUN_DIR [--diff BASE]
     PYTHONPATH=src python -m repro.core.analysis plan PATHS... [--out FILE]
     PYTHONPATH=src python -m repro.core.analysis lint PATHS...
+    PYTHONPATH=src python -m repro.core.analysis concurrency PATHS... [--out FILE]
 
 Every subcommand follows one error convention: a missing/unreadable artifact
-(or a bad path handed to ``plan``/``lint``) raises :class:`MissingArtifact`,
-which the CLI renders as a one-line ``error: ...`` on stderr and
-**exit code 2** (so scripts can tell "wrong substrate set" from real
-failures, which keep their tracebacks).  ``lint`` additionally exits **1** when violations remain
-and **0** when clean — the same contract as every mainstream linter, so it
-drops into CI gates unchanged.
+(or a bad path handed to ``plan``/``lint``/``concurrency``) raises
+:class:`MissingArtifact`, which the CLI renders as a one-line ``error: ...``
+on stderr and **exit code 2** (so scripts can tell "wrong substrate set" from
+real failures, which keep their tracebacks).  ``lint`` and ``concurrency``
+additionally exit **1** when violations/findings remain and **0** when clean
+— the same contract as every mainstream linter, so they drop into CI gates
+unchanged.
 """
 
 from __future__ import annotations
@@ -537,6 +539,25 @@ def build_parser():
     )
     ln.add_argument("paths", nargs="+",
                     help="package directories and/or .py files to lint")
+    cc = sub.add_parser(
+        "concurrency",
+        help="static concurrency analysis: discover threads/locks/coroutines "
+             "(no execution), run the SP4xx passes (deadlock order, races, "
+             "event-loop blocking, fork-after-threads, unjoined work), emit "
+             "concurrency_plan.json; exit 1 on findings",
+    )
+    cc.add_argument("paths", nargs="+",
+                    help="package directories and/or .py files to analyze")
+    cc.add_argument("--out", default=None,
+                    help="write concurrency_plan.json here (directories "
+                         "resolve to concurrency_plan.json inside); omitted "
+                         "= report only, nothing written")
+    cc.add_argument("--top", type=int, default=10,
+                    help="entrypoint/finding rows to print")
+    cc.add_argument("--smoke", action="store_true",
+                    help="verify the artifact contract (stamped doc "
+                         "round-trips load) and exit 0 even with findings "
+                         "(CI gate)")
     return p
 
 
@@ -608,6 +629,41 @@ def main(argv: Optional[List[str]] = None) -> int:
                 print(f"{len(violations)} violation(s)", file=sys.stderr)
                 return 1
             print("clean: no measurement-API violations")
+        elif ns.cmd == "concurrency":
+            import json as _json
+            import tempfile
+
+            from .staticpass import (
+                load_concurrency_plan,
+                render_concurrency_plan,
+                save_concurrency_plan,
+            )
+            from .staticpass.concurrency import analyze_paths, assemble_plan
+
+            model, findings = analyze_paths(ns.paths)
+            doc = assemble_plan(ns.paths, model, findings)
+            print(render_concurrency_plan(doc, top=ns.top))
+            if ns.out is not None:
+                print(
+                    f"concurrency plan written to "
+                    f"{save_concurrency_plan(doc, ns.out)}"
+                )
+            if ns.smoke:
+                # Artifact contract: stamped, serializable, loads back.
+                assert doc.get("report_schema_version", 0) >= 1
+                with tempfile.TemporaryDirectory() as td:
+                    path = save_concurrency_plan(doc, td + os.sep)
+                    loaded = load_concurrency_plan(path)
+                assert loaded["rule_counts"] == doc["rule_counts"]
+                assert _json.dumps(loaded["findings"]) == _json.dumps(
+                    doc["findings"]
+                )
+                print("concurrency smoke OK (artifact round-trip verified)")
+            elif findings:
+                print(f"{len(findings)} finding(s)", file=sys.stderr)
+                return 1
+            else:
+                print("clean: no concurrency findings")
         else:
             for name, vals in hotspots(ns.run_dir, ns.top):
                 print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")

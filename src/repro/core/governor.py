@@ -357,6 +357,12 @@ class Governor:
         # region names (both module forms) pre-qualified for the exclude
         # rung, plus a provenance summary for the governor document.
         self._plan_offenders: set = set()
+        # Wait-point regions from the plan's concurrency section (lock
+        # acquires, joins, blocking calls — both module forms).  These are
+        # sampler-friendly: mostly blocked, so their instrumentation cost is
+        # negligible and their enter/exit pairs *are* the wait-state signal.
+        # They must never be excluded — see ``_offenders``.
+        self._plan_wait_points: set = set()
         self._plan_meta: Optional[Dict[str, Any]] = None
 
     # -- lifecycle ----------------------------------------------------------
@@ -370,12 +376,20 @@ class Governor:
         from .staticpass import offender_names, plan_exclude_patterns
 
         self._plan_offenders = offender_names(plan)
+        conc = plan.get("concurrency") or {}
+        self._plan_wait_points = {
+            row[key]
+            for row in conc.get("wait_points", [])
+            for key in ("region", "frameless_region")
+            if row.get(key)
+        }
         self._plan_meta = {
             "generator": plan.get("generator", "?"),
             "functions": plan.get("functions", 0),
             "verdicts": dict(plan.get("verdicts", {})),
             "predicted_offenders": len(plan.get("predicted_offenders", [])),
             "patterns": len(plan_exclude_patterns(plan)),
+            "wait_points": len(conc.get("wait_points", [])),
         }
 
     def calibrate_startup(self) -> Calibration:
@@ -672,7 +686,14 @@ class Governor:
         (the ladder's downgrade rungs cover the meantime).  Exception: a
         region the static plan predicted as an offender is pre-qualified
         (``seed_static_plan``) — the short-duration verdict was reached
-        statically, so no observed-leaf evidence is required."""
+        statically, so no observed-leaf evidence is required.
+
+        The inverse static hint also applies: a region the concurrency
+        analyzer marked as a wait point (lock acquire, join, blocking call)
+        is never offered for exclusion.  Wait points spend their time
+        blocked, so keeping them costs almost nothing, and dropping them
+        would erase exactly the wait-state signal the concurrency report
+        exists to surface."""
         n = self._visits.size
         regions = self.measurement.regions
         order = np.argsort(-self._est_cost[:n])
@@ -687,8 +708,11 @@ class Governor:
                 continue
             if region.kind == KIND_USER:
                 continue
+            rname = f"{region.module}:{region.name}"
+            if rname in self._plan_wait_points:
+                continue
             if not self._leaf_min[rid] <= self.offender_max_leaf_ns:
-                if f"{region.module}:{region.name}" not in self._plan_offenders:
+                if rname not in self._plan_offenders:
                     continue
             out.append(rid)
         return out

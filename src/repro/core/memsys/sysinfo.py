@@ -51,7 +51,9 @@ def rss_bytes() -> int:
     global _rss_source
     rss = _rss_from_statm()
     if rss is not None:
-        _rss_source = "statm"
+        # Reviewed race: every caller (main or poller thread) writes the
+        # same platform-determined tag, so the lost update is harmless.
+        _rss_source = "statm"  # repro-lint: allow=SP402
         return rss
     rss = _rss_from_getrusage()
     if rss is not None:

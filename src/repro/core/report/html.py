@@ -376,6 +376,34 @@ def _plan_section(doc: Dict[str, Any]) -> str:
         f"sampler-friendly, {v.get('keep', 0)} kept "
         f"({plan.get('patterns', 0)} filter patterns)</p>"
     )
+    conc = plan.get("concurrency")
+    if conc:
+        counts = conc.get("findings", {})
+        flagged = sum(counts.values())
+        detail = ", ".join(
+            f"{rule} ×{n}" for rule, n in sorted(counts.items()) if n
+        )
+        out.append(
+            "<h3>Concurrency</h3>"
+            '<p class="sub">'
+            f"{conc.get('entrypoints', 0)} concurrent entrypoints, "
+            f"{conc.get('locks', 0)} locks, "
+            f"{conc.get('wait_points', 0)} wait points "
+            "(never auto-excluded — their spans are the wait-state signal)"
+            "</p>"
+        )
+        if flagged:
+            out.append(
+                '<p class="note">'
+                f"{flagged} static SP4xx finding(s): {esc(detail)} — "
+                "run <code>analysis concurrency</code> for call-path "
+                "witnesses.</p>"
+            )
+        else:
+            out.append(
+                '<p class="note">no static concurrency findings '
+                "(SP401–SP405 clean).</p>"
+            )
     vs = plan.get("vs_observed") or {}
     if not vs.get("governed"):
         out.append(

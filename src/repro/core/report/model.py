@@ -246,10 +246,24 @@ def _plan_section(
     plan = _load_json(run_dir, PLAN_ARTIFACT)
     if plan is None:
         return None
+    conc = plan.get("concurrency") or None
     return {
         "files": plan.get("files", 0),
         "functions": plan.get("functions", 0),
         "verdicts": plan.get("verdicts", {}),
         "patterns": len(plan.get("filter", {}).get("patterns", [])),
         "vs_observed": plan_vs_observed(plan, governor),
+        # Concurrency summary (SP4xx rule counts + wait-point census) rides
+        # along when the plan carries one — counts only, the full witness
+        # paths live in concurrency_plan.json.
+        "concurrency": (
+            {
+                "entrypoints": conc.get("entrypoints", 0),
+                "locks": conc.get("locks", 0),
+                "wait_points": len(conc.get("wait_points", [])),
+                "findings": dict(conc.get("findings", {})),
+            }
+            if conc
+            else None
+        ),
     }

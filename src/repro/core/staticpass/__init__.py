@@ -22,13 +22,31 @@ Two passes share one scanner (:mod:`.scanner`):
 ``linter`` (:mod:`.linter`, CLI ``analysis lint``)
     Reports measurement-API misuse with ``file:line`` diagnostics and stable
     rule ids (``SP1xx`` lifecycle, ``SP2xx`` environment, ``SP3xx``
-    distortion); see :data:`.linter.RULES`.
+    distortion, ``SP4xx`` concurrency); see :data:`.linter.RULES`.
 
-Both passes run with zero runtime overhead — nothing is imported or executed
-— so they are safe as pre-deploy gates (CI runs ``analysis lint`` over this
-repo itself and ``analysis plan src/repro --smoke`` on every push).
+``concurrency`` (:mod:`.concurrency` on :mod:`.concgraph`, CLI
+``analysis concurrency``)
+    Inter-procedural concurrency analysis: discovers threads / processes /
+    executors / coroutines, the lock table and its acquisition order
+    (including across calls), then runs the SP401–SP405 detection passes
+    (deadlock-order cycles, race candidates, event-loop-blocking calls,
+    fork-after-threads, unjoined work) and emits a schema-stamped
+    ``concurrency_plan.json`` whose wait-point candidates seed the
+    governor's sampler-friendly set.
+
+All passes run with zero runtime overhead — nothing is imported or executed
+— so they are safe as pre-deploy gates (CI runs ``analysis lint`` and the
+SP4xx self-analysis over this repo itself on every push).
 """
 
+from .concurrency import (
+    CONCURRENCY_RULES,
+    analyze_paths,
+    build_concurrency_plan,
+    load_concurrency_plan,
+    render_concurrency_plan,
+    save_concurrency_plan,
+)
 from .linter import RULES, Violation, lint_paths
 from .planner import (
     ARTIFACT,
@@ -45,11 +63,17 @@ from .scanner import module_name_for, scan_paths
 
 __all__ = [
     "ARTIFACT",
+    "CONCURRENCY_RULES",
     "RULES",
     "Violation",
+    "analyze_paths",
     "apply_plan",
+    "build_concurrency_plan",
     "build_plan",
     "lint_paths",
+    "load_concurrency_plan",
+    "render_concurrency_plan",
+    "save_concurrency_plan",
     "load_plan",
     "module_name_for",
     "offender_names",

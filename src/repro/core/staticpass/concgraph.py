@@ -1,0 +1,1057 @@
+"""Concurrency-structure discovery — the model the SP4xx passes run on.
+
+One walk over the scanned set (:mod:`.scanner` output; pure ast, user code
+never imported) produces a :class:`ConcurrencyModel`:
+
+* **import canonicalization** — per-module alias tables so ``mp.Process``,
+  ``Thread`` (from-import) and ``threading.Thread`` all resolve to one
+  canonical dotted name before any set membership is tested;
+* **lock table** — every ``threading.Lock()`` / ``RLock`` / ``Condition`` /
+  ``Semaphore`` (+ ``multiprocessing`` / ``asyncio`` variants) creation
+  site, identified as ``module:NAME`` (module globals), ``module:Cls.attr``
+  (``self.attr = Lock()`` in a method, or a class-body assignment) or
+  ``module:func.<locals>.name`` (function locals);
+* **acquisition sites** — ``with lock:`` blocks and explicit
+  ``lock.acquire()`` / ``release()`` pairs, each recorded with the set of
+  locks *already held* at that point (the lock-order graph's edges);
+* **call edges** — every resolved intra-package call site, annotated with
+  the lexically-held lock set, so lock context propagates across calls;
+* **spawn sites** — ``threading.Thread(target=…)``, ``multiprocessing.
+  Process(target=…)``, executor ``submit``/``map``, ``asyncio.run`` /
+  ``create_task`` / ``to_thread``, plus ``threading.Thread`` subclasses'
+  ``run`` methods — with handle binding, ``start``/``join``/``shutdown``
+  tracking and a per-scope ordered event list (thread starts vs forks);
+* **entrypoints + reachability** — one entrypoint per distinct spawn
+  target plus ``<main>`` (module bodies and functions no scanned code
+  calls), each with the set of reachable scopes and, per scope, the locks
+  *guaranteed* held on every call path (intersection over paths — the
+  sound direction for race suppression).
+
+Everything here is an approximation by construction (names, not objects;
+statement order, not data flow) — the passes in :mod:`.concurrency` turn it
+into findings that say "candidate", never "proof".
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from .classify import _callee_keys, _defined_names
+from .scanner import _FUNC_NODES, FunctionInfo, ScannedModule, dotted_name
+
+#: Canonical blocking-call set, shared with the linter's SP301 (raw dotted
+#: text) and SP403 (canonicalized through the import table).
+BLOCKING_CALLS = {
+    "time.sleep",
+    "sleep",
+    "subprocess.run",
+    "subprocess.call",
+    "subprocess.check_call",
+    "subprocess.check_output",
+    "subprocess.Popen",
+    "socket.create_connection",
+    "urllib.request.urlopen",
+    "requests.get",
+    "requests.post",
+    "requests.request",
+    "select.select",
+    "input",
+}
+
+#: Canonical constructor names that create a lock-like object.
+LOCK_CTORS = {
+    "threading.Lock": "Lock",
+    "threading.RLock": "RLock",
+    "threading.Condition": "Condition",
+    "threading.Semaphore": "Semaphore",
+    "threading.BoundedSemaphore": "BoundedSemaphore",
+    "multiprocessing.Lock": "Lock",
+    "multiprocessing.RLock": "RLock",
+    "asyncio.Lock": "Lock",
+    "asyncio.Condition": "Condition",
+    "asyncio.Semaphore": "Semaphore",
+}
+
+_THREAD_CTORS = {"threading.Thread"}
+_PROCESS_CTORS = {"multiprocessing.Process", "multiprocessing.context.Process"}
+_EXECUTOR_CTORS = {
+    "concurrent.futures.ThreadPoolExecutor",
+    "concurrent.futures.ProcessPoolExecutor",
+    "concurrent.futures.thread.ThreadPoolExecutor",
+}
+#: Direct fork-the-process calls (``multiprocessing`` start sites are
+#: derived from process/pool spawns instead, where the default Linux start
+#: method is fork).
+_FORK_CALLS = {"os.fork", "os.forkpty"}
+_POOL_CTORS = {"multiprocessing.Pool", "multiprocessing.pool.Pool"}
+
+#: Top-level modules whose imports are tracked for canonicalization.
+_TRACKED_ROOTS = {
+    "threading", "multiprocessing", "concurrent", "asyncio", "os", "time",
+    "queue", "socket", "subprocess", "select", "urllib", "requests",
+}
+
+
+@dataclass(frozen=True)
+class Site:
+    """One source location inside a scope (``module:qualname`` key)."""
+
+    file: str
+    line: int
+    scope: str
+
+    def where(self) -> str:
+        return f"{self.file}:{self.line}"
+
+
+@dataclass
+class LockDef:
+    lock_id: str
+    kind: str  # Lock / RLock / Condition / Semaphore / BoundedSemaphore
+    attr: Optional[str]  # attribute name for self.X / class-body locks
+    site: Site
+
+
+@dataclass
+class Acquire:
+    lock_id: str
+    site: Site
+    held_before: Tuple[str, ...]
+    via: str  # "with" | "acquire"
+
+
+@dataclass
+class CallEdge:
+    caller: str
+    callee: str  # resolved scope key
+    site: Site
+    held: Tuple[str, ...]
+
+
+@dataclass
+class Spawn:
+    kind: str  # thread | process | executor | executor-task | task | to_thread
+    targets: Tuple[str, ...]  # resolved scope keys (may be empty)
+    target_text: str
+    site: Site
+    handle: Optional[Tuple[str, ...]] = None  # ("local", scope, name) | ("attr", module, name)
+    started: bool = False
+    joined: bool = False
+    shutdown: bool = False
+    managed: bool = False  # created as a `with` context manager
+    daemon: bool = False
+    start_site: Optional[Site] = None
+
+
+@dataclass
+class GlobalWrite:
+    var: str  # "module:NAME"
+    site: Site
+    held: Tuple[str, ...]
+
+
+@dataclass
+class BlockingCall:
+    callee: str  # canonical dotted name
+    site: Site
+
+
+@dataclass
+class Entrypoint:
+    name: str  # "<main>" | "thread:<key>" | "process:<key>" | ...
+    kind: str
+    roots: Tuple[str, ...]
+    site: Optional[Site]
+    #: scope key -> locks guaranteed held on *every* scanned path from the
+    #: roots (intersection semantics; empty set means "maybe unlocked").
+    reachable: Dict[str, frozenset] = field(default_factory=dict)
+
+
+@dataclass
+class ConcurrencyModel:
+    modules: List[ScannedModule]
+    functions: Dict[str, FunctionInfo]
+    locks: Dict[str, LockDef]
+    acquires: List[Acquire]
+    edges: Dict[str, List[CallEdge]]
+    spawns: List[Spawn]
+    global_writes: List[GlobalWrite]
+    blocking: Dict[str, List[BlockingCall]]  # scope -> direct blocking sites
+    #: per-scope ordered events: ("start"|"fork"|"call", payload, Site)
+    events: Dict[str, List[Tuple[str, Any, Site]]]
+    entrypoints: Dict[str, Entrypoint]
+    #: every scope any call site resolved to, at any confidence — scopes in
+    #: here are "called somewhere" and not free-standing main entrypoints.
+    called: Set[str]
+    #: wait-point candidate rows (region/kind/site), deduped.
+    wait_points: List[Dict[str, Any]]
+    errors: List[Dict[str, str]]
+
+    def function_key(self, fn: FunctionInfo) -> str:
+        return f"{fn.module}:{fn.qualname}"
+
+
+def _fn_key(fn: FunctionInfo) -> str:
+    return f"{fn.module}:{fn.qualname}"
+
+
+def _module_scope(mod: ScannedModule) -> str:
+    return f"{mod.module}:<module>"
+
+
+# ---------------------------------------------------------------------------
+# import canonicalization
+# ---------------------------------------------------------------------------
+
+
+def import_table(tree: ast.Module) -> Dict[str, str]:
+    """local name -> canonical dotted prefix for tracked stdlib modules."""
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                root = a.name.split(".")[0]
+                if root not in _TRACKED_ROOTS:
+                    continue
+                if a.asname:
+                    table[a.asname] = a.name
+                else:
+                    # `import concurrent.futures` binds `concurrent`.
+                    table[root] = root
+        elif isinstance(node, ast.ImportFrom):
+            if node.level or not node.module:
+                continue
+            if node.module.split(".")[0] not in _TRACKED_ROOTS:
+                continue
+            for a in node.names:
+                table[a.asname or a.name] = f"{node.module}.{a.name}"
+    return table
+
+
+def canonical(table: Dict[str, str], text: str) -> str:
+    """Rewrite ``text``'s leading segment through the import table."""
+    if not text:
+        return text
+    head, sep, rest = text.partition(".")
+    mapped = table.get(head)
+    if mapped is None:
+        return text
+    return f"{mapped}.{rest}" if rest else mapped
+
+
+# ---------------------------------------------------------------------------
+# model construction
+# ---------------------------------------------------------------------------
+
+
+def build_model(modules: List[ScannedModule]) -> ConcurrencyModel:
+    functions: Dict[str, FunctionInfo] = {}
+    for mod in modules:
+        for fn in mod.functions:
+            functions[_fn_key(fn)] = fn
+    defined = _defined_names(list(functions.values()))
+
+    model = ConcurrencyModel(
+        modules=modules,
+        functions=functions,
+        locks={},
+        acquires=[],
+        edges={},
+        spawns=[],
+        global_writes=[],
+        blocking={},
+        events={},
+        entrypoints={},
+        called=set(),
+        wait_points=[],
+        errors=[
+            {"file": m.path, "error": m.parse_error}
+            for m in modules
+            if m.parse_error
+        ],
+    )
+
+    builders = []
+    for mod in modules:
+        if mod.tree is None:
+            continue
+        table = import_table(mod.tree)
+        builders.append((mod, table))
+        _collect_locks(model, mod, table)
+
+    # Attribute-name index over the lock table (``self.X`` / ``obj.X``
+    # acquisitions resolve through it when the defining class is elsewhere).
+    attr_index: Dict[str, List[str]] = {}
+    for lock in model.locks.values():
+        if lock.attr:
+            attr_index.setdefault(lock.attr, []).append(lock.lock_id)
+    for ids in attr_index.values():
+        ids.sort()
+
+    for mod, table in builders:
+        walker = _ScopeWalker(model, mod, table, defined, attr_index)
+        walker.walk_module()
+
+    _resolve_spawn_lifecycle(model)
+    _build_entrypoints(model, defined)
+    _collect_wait_points(model)
+    return model
+
+
+def _class_of(qualname: str) -> Optional[str]:
+    """Enclosing class path of a method qualname (None for plain funcs)."""
+    if "." not in qualname:
+        return None
+    head = qualname.rsplit(".", 1)[0]
+    if head.endswith("<locals>") or "<locals>" in head.split(".")[-1]:
+        return None
+    return head
+
+
+def _collect_locks(model: ConcurrencyModel, mod: ScannedModule,
+                   table: Dict[str, str]) -> None:
+    """Pass A: every lock-creation assignment in the module."""
+
+    def lock_kind(value: ast.expr) -> Optional[str]:
+        if isinstance(value, ast.Call):
+            return LOCK_CTORS.get(canonical(table, dotted_name(value.func)))
+        return None
+
+    def add(lock_id: str, kind: str, attr: Optional[str], line: int) -> None:
+        model.locks.setdefault(
+            lock_id,
+            LockDef(lock_id=lock_id, kind=kind, attr=attr,
+                    site=Site(mod.path, line, _module_scope(mod))),
+        )
+
+    # Module body + class bodies (execute at import time).
+    def scan_body(body: List[ast.stmt], prefix: str) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.ClassDef):
+                scan_body(stmt.body, f"{prefix}{stmt.name}.")
+            elif isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                targets = (
+                    stmt.targets if isinstance(stmt, ast.Assign)
+                    else [stmt.target]
+                )
+                value = stmt.value
+                kind = lock_kind(value) if value is not None else None
+                if kind is None:
+                    continue
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        attr = t.id if prefix else None
+                        add(f"{mod.module}:{prefix}{t.id}", kind, attr,
+                            stmt.lineno)
+
+    if mod.tree is not None:
+        scan_body(mod.tree.body, "")
+
+    # Function bodies: self.attr = Lock() (instance locks, identified by the
+    # enclosing class) and local name = Lock().
+    for fn in mod.functions:
+        if fn.node is None:
+            continue
+        cls = _class_of(fn.qualname)
+        for stmt in ast.walk(fn.node):
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = (
+                stmt.targets if isinstance(stmt, ast.Assign)
+                else [stmt.target]
+            )
+            value = stmt.value
+            kind = lock_kind(value) if value is not None else None
+            if kind is None:
+                continue
+            for t in targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id in ("self", "cls")):
+                    owner = cls or fn.qualname
+                    add(f"{mod.module}:{owner}.{t.attr}", kind, t.attr,
+                        stmt.lineno)
+                elif isinstance(t, ast.Name):
+                    add(f"{mod.module}:{fn.qualname}.<locals>.{t.id}", kind,
+                        None, stmt.lineno)
+
+
+# ---------------------------------------------------------------------------
+# pass B: per-scope walk (held locks, spawns, writes, events)
+# ---------------------------------------------------------------------------
+
+
+class _ScopeWalker:
+    """Statement-ordered walk of every scope of one module.
+
+    Tracks the lexically-held lock set (``with`` nesting + explicit
+    ``acquire``/``release``), binds spawn handles, and appends the ordered
+    ``start``/``fork``/``call`` event stream the SP404 pass replays."""
+
+    def __init__(self, model: ConcurrencyModel, mod: ScannedModule,
+                 table: Dict[str, str], defined: Dict[str, List[str]],
+                 attr_index: Dict[str, List[str]]):
+        self.model = model
+        self.mod = mod
+        self.table = table
+        self.defined = defined
+        self.attr_index = attr_index
+        # module-level names assigned in the module body (shared-state
+        # candidates for SP402's subscript/attribute store detection).
+        self.module_names: Set[str] = set()
+        if mod.tree is not None:
+            for stmt in mod.tree.body:
+                if isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            self.module_names.add(t.id)
+                elif isinstance(stmt, ast.AnnAssign):
+                    if isinstance(stmt.target, ast.Name):
+                        self.module_names.add(stmt.target.id)
+
+    # -- public -------------------------------------------------------------
+
+    def walk_module(self) -> None:
+        if self.mod.tree is None:
+            return
+        self._walk_scope(_module_scope(self.mod), self.mod.tree.body,
+                         fn=None, is_async=False)
+        for fn in self.mod.functions:
+            if fn.node is None:
+                continue
+            self._walk_scope(_fn_key(fn), fn.node.body, fn=fn,
+                             is_async=fn.is_async)
+
+    # -- per-scope state ----------------------------------------------------
+
+    def _walk_scope(self, scope: str, body: List[ast.stmt],
+                    fn: Optional[FunctionInfo], is_async: bool) -> None:
+        self.scope = scope
+        self.fn = fn
+        self.is_async = is_async
+        self.held: List[str] = []
+        self.globals_decl: Set[str] = set()
+        self.local_locks: Dict[str, str] = {}
+        self.local_handles: Dict[str, Spawn] = {}
+        # ctor Call nodes already registered as spawns — the generic
+        # expression walk must not register them a second time.
+        self._consumed: Set[int] = set()
+        self.events = self.model.events.setdefault(scope, [])
+        if fn is not None:
+            prefix = f"{self.mod.module}:{fn.qualname}.<locals>."
+            for lock_id in self.model.locks:
+                if lock_id.startswith(prefix):
+                    self.local_locks[lock_id[len(prefix):]] = lock_id
+        self._body(body)
+
+    def _site(self, node: ast.AST) -> Site:
+        return Site(self.mod.path, getattr(node, "lineno", 0), self.scope)
+
+    # -- statements ---------------------------------------------------------
+
+    def _body(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, _FUNC_NODES):
+            return  # nested defs are their own scopes
+        if isinstance(stmt, ast.ClassDef):
+            # Class bodies at this scope execute inline (locks were taken in
+            # pass A); methods are separate scopes.
+            self._body([s for s in stmt.body
+                        if not isinstance(s, _FUNC_NODES)])
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self._with(stmt)
+            return
+        if isinstance(stmt, ast.Global):
+            self.globals_decl.update(stmt.names)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            self._assign(stmt)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._expr(stmt.iter)
+            self._body(stmt.body)
+            self._body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.While):
+            self._expr(stmt.test)
+            self._body(stmt.body)
+            self._body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.If):
+            self._expr(stmt.test)
+            self._body(stmt.body)
+            self._body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Try):
+            self._body(stmt.body)
+            for h in stmt.handlers:
+                self._body(h.body)
+            self._body(stmt.orelse)
+            self._body(stmt.finalbody)
+            return
+        # Generic statement: expressions at this point, nested statement
+        # lists (match cases, TryStar, ...) recursively.
+        for _name, value in ast.iter_fields(stmt):
+            if isinstance(value, ast.expr):
+                self._expr(value)
+            elif isinstance(value, list):
+                for item in value:
+                    if isinstance(item, ast.stmt):
+                        self._stmt(item)
+                    elif isinstance(item, ast.expr):
+                        self._expr(item)
+                    elif hasattr(item, "body") and isinstance(
+                            getattr(item, "body"), list):
+                        self._body([s for s in item.body
+                                    if isinstance(s, ast.stmt)])
+
+    def _with(self, stmt: ast.stmt) -> None:
+        pushed: List[str] = []
+        for item in stmt.items:
+            ctx = item.context_expr
+            # Executor created as a context manager never leaks.
+            spawn = self._spawn_from_call(ctx) if isinstance(ctx, ast.Call) else None
+            if spawn is not None:
+                spawn.managed = True
+                spawn.started = True
+                self._bind_optional_vars(item.optional_vars, spawn)
+            self._expr(ctx)
+            lock_id = self._resolve_lock_expr(ctx)
+            if lock_id is not None:
+                self.model.acquires.append(Acquire(
+                    lock_id=lock_id, site=self._site(ctx),
+                    held_before=tuple(self.held), via="with",
+                ))
+                self.held.append(lock_id)
+                pushed.append(lock_id)
+        self._body(stmt.body)
+        for lock_id in reversed(pushed):
+            self.held.remove(lock_id)
+
+    def _bind_optional_vars(self, target: Optional[ast.expr],
+                            spawn: Spawn) -> None:
+        if isinstance(target, ast.Name):
+            spawn.handle = ("local", self.scope, target.id)
+            self.local_handles[target.id] = spawn
+
+    def _assign(self, stmt: ast.stmt) -> None:
+        value = getattr(stmt, "value", None)
+        targets = (
+            stmt.targets if isinstance(stmt, ast.Assign)
+            else [stmt.target]
+        )
+        spawn = (
+            self._spawn_from_call(value)
+            if isinstance(value, ast.Call) else None
+        )
+        if spawn is not None:
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    spawn.handle = ("local", self.scope, t.id)
+                    self.local_handles[t.id] = spawn
+                elif (isinstance(t, ast.Attribute)
+                      and isinstance(t.value, ast.Name)
+                      and t.value.id in ("self", "cls")):
+                    spawn.handle = ("attr", self.mod.module, t.attr)
+        if value is not None:
+            self._expr(value)
+        for t in targets:
+            self._write_target(t, stmt)
+
+    def _write_target(self, target: ast.expr, stmt: ast.stmt) -> None:
+        """Record shared-state writes (SP402 candidates)."""
+        if self.fn is None:
+            return  # module-body assignments are initialization, not races
+        if isinstance(target, ast.Name):
+            if target.id in self.globals_decl:
+                self._global_write(target.id, stmt)
+        elif isinstance(target, (ast.Attribute, ast.Subscript)):
+            base = target.value
+            if isinstance(base, ast.Name):
+                name = base.id
+                if name in self.globals_decl or (
+                        name in self.module_names
+                        and name not in self.local_handles):
+                    self._global_write(name, stmt)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._write_target(el, stmt)
+
+    def _global_write(self, name: str, stmt: ast.stmt) -> None:
+        self.model.global_writes.append(GlobalWrite(
+            var=f"{self.mod.module}:{name}",
+            site=self._site(stmt),
+            held=tuple(self.held),
+        ))
+
+    # -- expressions --------------------------------------------------------
+
+    def _expr(self, expr: Optional[ast.expr]) -> None:
+        if expr is None:
+            return
+        stack: List[ast.AST] = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.Lambda,) + _FUNC_NODES):
+                continue  # deferred bodies don't run at this site
+            if isinstance(node, ast.Call):
+                self._call(node)
+            for child in ast.iter_child_nodes(node):
+                stack.append(child)
+
+    def _call(self, call: ast.Call) -> None:
+        if id(call) in self._consumed:
+            return  # already registered as a spawn by the owning statement
+        text = dotted_name(call.func)
+        canon = canonical(self.table, text)
+        site = self._site(call)
+
+        # Spawn constructors used inline: Thread(...).start().
+        if isinstance(call.func, ast.Attribute):
+            base = call.func.value
+            attr = call.func.attr
+            if attr == "start" and isinstance(base, ast.Call):
+                spawn = self._spawn_from_call(base)
+                if spawn is not None:
+                    spawn.started = True
+                    spawn.start_site = site
+                    self._spawn_event(spawn, site)
+                    return
+            if attr in ("start", "join", "shutdown", "cancel"):
+                handle = self._handle_for(base)
+                if handle is not None:
+                    if attr == "start":
+                        handle.started = True
+                        handle.start_site = site
+                        self._spawn_event(handle, site)
+                    elif attr == "join":
+                        handle.joined = True
+                        self.events.append(("join", handle, site))
+                    elif attr == "shutdown":
+                        handle.shutdown = True
+                    return
+                if attr == "join":
+                    # join on a name we can't bind (collection-mediated
+                    # handles): remember it — SP405 treats any unbound join
+                    # in a scope as covering that scope's anonymous spawns.
+                    self.events.append(("join", None, site))
+            if attr in ("submit", "map") and self._looks_like_executor(base):
+                targets = self._resolve_targets(call.args[:1])
+                spawn = Spawn(
+                    kind="executor-task", targets=targets,
+                    target_text=dotted_name(call.args[0]) if call.args else "",
+                    site=site, started=True,
+                )
+                self.model.spawns.append(spawn)
+                self.events.append(("start", spawn, site))
+            if attr == "acquire":
+                lock_id = self._resolve_lock_expr(base)
+                if lock_id is not None:
+                    self.model.acquires.append(Acquire(
+                        lock_id=lock_id, site=site,
+                        held_before=tuple(self.held), via="acquire",
+                    ))
+                    self.held.append(lock_id)
+                    return
+            if attr == "release":
+                lock_id = self._resolve_lock_expr(base)
+                if lock_id is not None and lock_id in self.held:
+                    self.held.remove(lock_id)
+                    return
+
+        # asyncio spawn forms.
+        if canon in ("asyncio.run", "asyncio.create_task",
+                     "asyncio.ensure_future"):
+            kind = "async-main" if canon == "asyncio.run" else "task"
+            for arg in call.args:
+                if isinstance(arg, ast.Call):
+                    targets = self._resolve_targets([arg.func])
+                    if targets:
+                        self.model.spawns.append(Spawn(
+                            kind=kind, targets=targets,
+                            target_text=dotted_name(arg.func), site=site,
+                            started=True,
+                        ))
+        elif canon == "asyncio.gather":
+            for arg in call.args:
+                if isinstance(arg, ast.Call):
+                    targets = self._resolve_targets([arg.func])
+                    if targets:
+                        self.model.spawns.append(Spawn(
+                            kind="task", targets=targets,
+                            target_text=dotted_name(arg.func), site=site,
+                            started=True,
+                        ))
+        elif canon == "asyncio.to_thread":
+            targets = self._resolve_targets(call.args[:1])
+            if targets:
+                spawn = Spawn(
+                    kind="to_thread", targets=targets,
+                    target_text=dotted_name(call.args[0]), site=site,
+                    started=True,
+                )
+                self.model.spawns.append(spawn)
+                self.events.append(("start", spawn, site))
+
+        # Fork-the-process sites.
+        if canon in _FORK_CALLS or canon in _POOL_CTORS:
+            self.events.append(("fork", canon, site))
+
+        # Blocking calls (canonicalized).
+        if canon in BLOCKING_CALLS or text in BLOCKING_CALLS:
+            self.model.blocking.setdefault(self.scope, []).append(
+                BlockingCall(callee=canon, site=site)
+            )
+
+        # Spawn ctor used as a bare expression (no handle, never started
+        # here — starts on the same call chain were handled above).
+        spawn = self._spawn_from_call_no_register(call)
+        if spawn is not None:
+            self.model.spawns.append(spawn)
+
+        # Resolved intra-package call edge.  Only *strong* resolutions
+        # (same-class self-calls, uniquely-defined names, module-qualified
+        # names) become graph edges — weak tail matches on attribute calls
+        # of unknown objects (``stats.update``, ``buf.append``) manufacture
+        # paths between unrelated subsystems and poison every transitive
+        # pass.  Weak matches still mark the callee as "called somewhere"
+        # so it is not mistaken for a main-thread entrypoint.
+        for key, strong in self._resolve_conf(call.func):
+            self.model.called.add(key)
+            if not strong:
+                continue
+            self.model.edges.setdefault(self.scope, []).append(CallEdge(
+                caller=self.scope, callee=key, site=site,
+                held=tuple(self.held),
+            ))
+            self.events.append(("call", key, site))
+
+    # -- resolution helpers --------------------------------------------------
+
+    def _spawn_from_call(self, call: Optional[ast.expr]) -> Optional[Spawn]:
+        """Register and return a Spawn when ``call`` constructs one.  The
+        ctor node is marked consumed; the generic walk still visits its
+        argument expressions."""
+        spawn = self._spawn_from_call_no_register(call)
+        if spawn is not None:
+            self.model.spawns.append(spawn)
+            self._consumed.add(id(call))
+        return spawn
+
+    def _spawn_from_call_no_register(
+        self, call: Optional[ast.expr]
+    ) -> Optional[Spawn]:
+        if not isinstance(call, ast.Call):
+            return None
+        canon = canonical(self.table, dotted_name(call.func))
+        if canon in _THREAD_CTORS:
+            kind = "thread"
+        elif canon in _PROCESS_CTORS:
+            kind = "process"
+        elif canon in _EXECUTOR_CTORS:
+            kind = "executor"
+        elif canon in _POOL_CTORS:
+            kind = "process"
+        else:
+            return None
+        target_text = ""
+        targets: Tuple[str, ...] = ()
+        daemon = False
+        for kw in call.keywords:
+            if kw.arg == "target":
+                target_text = dotted_name(kw.value)
+                targets = self._resolve_targets([kw.value])
+            elif kw.arg == "daemon":
+                daemon = (isinstance(kw.value, ast.Constant)
+                          and kw.value.value is True)
+        return Spawn(kind=kind, targets=targets, target_text=target_text,
+                     site=self._site(call), daemon=daemon)
+
+    def _spawn_event(self, spawn: Spawn, site: Site) -> None:
+        if spawn.kind in ("thread", "executor", "executor-task", "to_thread"):
+            self.events.append(("start", spawn, site))
+        elif spawn.kind == "process":
+            # Default Linux start method is fork: the fork happens here.
+            self.events.append(("fork", "multiprocessing.Process.start", site))
+
+    def _handle_for(self, base: ast.expr) -> Optional[Spawn]:
+        if isinstance(base, ast.Name):
+            return self.local_handles.get(base.id)
+        if (isinstance(base, ast.Attribute)
+                and isinstance(base.value, ast.Name)
+                and base.value.id in ("self", "cls")):
+            for spawn in self.model.spawns:
+                if spawn.handle == ("attr", self.mod.module, base.attr):
+                    return spawn
+        return None
+
+    def _looks_like_executor(self, base: ast.expr) -> bool:
+        handle = self._handle_for(base)
+        if handle is not None:
+            return handle.kind == "executor"
+        # Unbound: accept names that read like an executor/pool.
+        text = dotted_name(base).rsplit(".", 1)[-1].lower()
+        return "executor" in text or "pool" in text
+
+    def _resolve_targets(self, exprs: List[ast.expr]) -> Tuple[str, ...]:
+        """All resolutions (any confidence) — used for spawn targets, where
+        the target expression names the function directly."""
+        keys: List[str] = []
+        for expr in exprs:
+            for key, _strong in self._resolve_conf(expr):
+                if key not in keys:
+                    keys.append(key)
+        local = [k for k in keys if k.startswith(self.mod.module + ":")]
+        return tuple(local or keys)
+
+    def _resolve_conf(self, expr: ast.expr) -> List[Tuple[str, bool]]:
+        """Resolve a call target to ``(scope_key, strong)`` candidates.
+
+        Strong means the analyzer can defend the edge: a ``self.meth`` call
+        inside the defining class, a bare name the scanned set defines
+        unambiguously (after same-module preference), or a ``module.func``
+        reference whose module segment matches a scanned module.  Everything
+        else — tail matches on attribute calls of unknown objects — is weak:
+        the name coincidence carries no evidence the objects are related.
+        """
+        # self.meth / cls.meth inside a method body.
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id in ("self", "cls")
+                and self.fn is not None):
+            cls = _class_of(self.fn.qualname)
+            if cls is not None:
+                own = f"{self.mod.module}:{cls}.{expr.attr}"
+                if own in self.model.functions:
+                    return [(own, True)]
+                # Inherited / dynamic: method-shaped matches only, weak.
+                return [
+                    (key, False)
+                    for key in _callee_keys(expr.attr, self.defined)
+                    if key.endswith("." + expr.attr)
+                ]
+        # module.func (or pkg.module.func) against scanned module names.
+        if isinstance(expr, ast.Attribute):
+            text = dotted_name(expr)
+            if text and "." in text and "()" not in text:
+                mod_part, attr = text.rsplit(".", 1)
+                hits = []
+                for mod in self.model.modules:
+                    if (mod.module == mod_part
+                            or mod.module.endswith("." + mod_part)):
+                        key = f"{mod.module}:{attr}"
+                        if key in self.model.functions:
+                            hits.append((key, True))
+                if hits:
+                    return hits
+            # Unknown-object method call: weak, method-shaped matches only.
+            return [
+                (key, False)
+                for key in _callee_keys(expr.attr, self.defined)
+                if key.endswith("." + expr.attr)
+            ]
+        # Bare name.
+        name = dotted_name(expr)
+        if not name or "()" in name:
+            return []
+        keys = _callee_keys(name, self.defined)
+        local = [k for k in keys if k.startswith(self.mod.module + ":")]
+        picked = local or keys
+        strong = len(picked) == 1
+        return [(k, strong) for k in picked]
+
+    def _resolve_lock_expr(self, expr: ast.expr) -> Optional[str]:
+        if isinstance(expr, ast.Name):
+            if expr.id in self.local_locks:
+                return self.local_locks[expr.id]
+            module_lock = f"{self.mod.module}:{expr.id}"
+            if module_lock in self.model.locks:
+                return module_lock
+            return None
+        if isinstance(expr, ast.Attribute):
+            base = expr.value
+            if isinstance(base, ast.Name) and base.id in ("self", "cls"):
+                cls = _class_of(self.fn.qualname) if self.fn else None
+                if cls:
+                    own = f"{self.mod.module}:{cls}.{expr.attr}"
+                    if own in self.model.locks:
+                        return own
+                candidates = self.attr_index.get(expr.attr, [])
+                same_mod = [c for c in candidates
+                            if c.startswith(self.mod.module + ":")]
+                pick = same_mod or candidates
+                return pick[0] if pick else None
+            # module.LOCK or obj.lock: dotted module-global, else attr index.
+            text = dotted_name(expr)
+            if "." in text:
+                mod_part, attr = text.rsplit(".", 1)
+                for mod in self.model.modules:
+                    if (mod.module == mod_part
+                            or mod.module.endswith("." + mod_part)):
+                        lock_id = f"{mod.module}:{attr}"
+                        if lock_id in self.model.locks:
+                            return lock_id
+            candidates = self.attr_index.get(expr.attr, [])
+            return candidates[0] if candidates else None
+        return None
+
+
+# ---------------------------------------------------------------------------
+# spawn lifecycle + entrypoints + wait points
+# ---------------------------------------------------------------------------
+
+
+def _resolve_spawn_lifecycle(model: ConcurrencyModel) -> None:
+    """Post-pass join resolution: attr-handle joins anywhere in the module
+    already marked their spawn; a scope containing an *unbindable* join
+    (collection-mediated handles) covers that scope's unjoined spawns."""
+    scopes_with_loose_join: Set[str] = set()
+    for scope, events in model.events.items():
+        for kind, payload, _site in events:
+            if kind == "join" and payload is None:
+                scopes_with_loose_join.add(scope)
+    for spawn in model.spawns:
+        if spawn.joined or not spawn.started:
+            continue
+        if spawn.site.scope in scopes_with_loose_join:
+            spawn.joined = True
+
+
+def _build_entrypoints(model: ConcurrencyModel,
+                       defined: Dict[str, List[str]]) -> None:
+    eps: Dict[str, Entrypoint] = {}
+
+    def add(name: str, kind: str, roots: Tuple[str, ...],
+            site: Optional[Site]) -> None:
+        if not roots:
+            return
+        if name in eps:
+            return
+        eps[name] = Entrypoint(name=name, kind=kind, roots=roots, site=site)
+
+    for spawn in model.spawns:
+        if not spawn.targets:
+            continue
+        kind = {
+            "thread": "thread", "process": "process",
+            "executor-task": "thread", "to_thread": "thread",
+            "task": "task", "async-main": "async-main",
+        }.get(spawn.kind, spawn.kind)
+        for key in spawn.targets:
+            add(f"{kind}:{key}", kind, (key,), spawn.site)
+
+    # threading.Thread subclasses: the run() method is a thread entrypoint.
+    for mod in model.modules:
+        if mod.tree is None:
+            continue
+        table = import_table(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            bases = {canonical(table, dotted_name(b)) for b in node.bases}
+            if bases & (_THREAD_CTORS | _PROCESS_CTORS):
+                run_key = f"{mod.module}:{node.name}.run"
+                if run_key in model.functions:
+                    kind = "thread" if bases & _THREAD_CTORS else "process"
+                    add(f"{kind}:{run_key}", kind, (run_key,),
+                        Site(mod.path, node.lineno, _module_scope(mod)))
+
+    # <main>: module bodies + functions nothing scanned calls and no spawn
+    # targets (callable from outside the scanned set, presumed main-thread).
+    spawn_targets = {k for ep in eps.values() for k in ep.roots}
+    called: Set[str] = set(model.called)
+    for edges in model.edges.values():
+        for e in edges:
+            called.add(e.callee)
+    main_roots = [_module_scope(m) for m in model.modules if m.tree is not None]
+    for key, fn in model.functions.items():
+        if key in called or key in spawn_targets:
+            continue
+        if fn.is_async:
+            continue  # a bare coroutine function is not main-callable work
+        main_roots.append(key)
+    eps["<main>"] = Entrypoint(
+        name="<main>", kind="main", roots=tuple(main_roots), site=None,
+    )
+
+    for ep in eps.values():
+        ep.reachable = _reach_with_held(model, ep.roots)
+    model.entrypoints = eps
+
+
+def _reach_with_held(model: ConcurrencyModel,
+                     roots: Tuple[str, ...]) -> Dict[str, frozenset]:
+    """BFS over call edges; per scope, the intersection of locks held along
+    every discovered path (monotone-shrinking, terminates)."""
+    held_at: Dict[str, frozenset] = {}
+    work: List[str] = []
+    for r in roots:
+        held_at[r] = frozenset()
+        work.append(r)
+    guard = 0
+    while work and guard < 100_000:
+        guard += 1
+        scope = work.pop()
+        base = held_at[scope]
+        for edge in model.edges.get(scope, []):
+            new = base | frozenset(edge.held)
+            cur = held_at.get(edge.callee)
+            if cur is None:
+                held_at[edge.callee] = new
+                work.append(edge.callee)
+            else:
+                inter = cur & new
+                if inter != cur:
+                    held_at[edge.callee] = inter
+                    work.append(edge.callee)
+    return held_at
+
+
+def _region_of(model: ConcurrencyModel, scope: str) -> Tuple[str, str]:
+    """(framed, frameless) region names for a scope key."""
+    fn = model.functions.get(scope)
+    if fn is None:
+        module, _, name = scope.partition(":")
+        return scope, scope
+    return (f"{fn.module}:{fn.qualname}",
+            f"{fn.frameless_module}:{fn.qualname}")
+
+
+def _collect_wait_points(model: ConcurrencyModel) -> None:
+    """Wait-point candidates: sites where a thread parks (lock acquire,
+    join, blocking call).  Deduped per (region, kind); these seed the
+    governor's sampler-friendly set — regions whose time is waiting lose
+    nothing to sampling, but excluding them would erase the wait-state
+    signal entirely."""
+    rows: Dict[Tuple[str, str], Dict[str, Any]] = {}
+
+    def add(scope: str, kind: str, site: Site) -> None:
+        region, frameless = _region_of(model, scope)
+        key = (region, kind)
+        if key not in rows:
+            rows[key] = {
+                "region": region,
+                "frameless_region": frameless,
+                "kind": kind,
+                "file": site.file,
+                "line": site.line,
+            }
+
+    for acq in model.acquires:
+        add(acq.site.scope, "lock-acquire", acq.site)
+    for scope, events in model.events.items():
+        for kind, _payload, site in events:
+            if kind == "join":
+                add(scope, "join", site)
+    for scope, calls in model.blocking.items():
+        for b in calls:
+            add(scope, "blocking-call", b.site)
+    model.wait_points = sorted(
+        rows.values(), key=lambda r: (r["file"], r["line"], r["kind"])
+    )

@@ -1,0 +1,741 @@
+"""Static concurrency analyzer — SP4xx detection passes + concurrency_plan.json.
+
+Runs entirely on the :mod:`.concgraph` model (pure ast, user code never
+imported).  Five passes become stable lint rules:
+
+========  ==========================  ==============================================
+id        name                        catches
+========  ==========================  ==============================================
+SP401     lock-order-inversion        a cycle in the lock-order graph: some path
+                                      acquires A then B while another acquires B
+                                      then A (including across calls) — two
+                                      threads interleaving those paths deadlock.
+SP402     race-candidate              module state written from ≥2 distinct
+                                      concurrent entrypoints with no common lock
+                                      guaranteed held on every path — a lost-
+                                      update / torn-read candidate.
+SP403     blocking-call-in-coroutine  a blocking call (SP301's set) inside an
+                                      ``async def`` without ``to_thread`` /
+                                      executor hand-off — it parks the whole
+                                      event loop, not just this coroutine.
+SP404     fork-after-threads          ``os.fork`` / ``multiprocessing`` start
+                                      reachable after a thread start: the child
+                                      inherits locked locks but not the threads
+                                      that would release them.
+SP405     unjoined-thread             a started thread/process never joined, or
+                                      an executor neither ``with``-managed nor
+                                      shut down — work leaks past the scope that
+                                      owns it (daemon threads included: they die
+                                      mid-write at interpreter exit).
+========  ==========================  ==============================================
+
+Every finding is a *candidate* with a call-path witness (``file:line: note``
+lines) — names, not objects; paths, not proofs.  Suppression reuses the
+linter pragmas (``# repro-lint: allow=SP401`` / ``allow-file=...``).
+
+The artifact (``concurrency_plan.json``) is schema-stamped and carries the
+entrypoint table, lock table, wait-point candidates (the governor's
+sampler-friendly seeds) and per-rule findings.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from .. import schema
+from .concgraph import (
+    ConcurrencyModel,
+    Site,
+    Spawn,
+    build_model,
+    _region_of,
+)
+from .scanner import ScannedModule, scan_paths
+
+#: Stable rule registry (ids are stable; renumbering is a breaking change).
+CONCURRENCY_RULES = {
+    "SP401": "lock-order-inversion",
+    "SP402": "race-candidate",
+    "SP403": "blocking-call-in-coroutine",
+    "SP404": "fork-after-threads",
+    "SP405": "unjoined-thread",
+}
+
+ARTIFACT = "concurrency_plan.json"
+_GENERATOR = "repro.core.staticpass.concurrency"
+
+#: Entrypoint kinds that run concurrently with something else (``<main>``
+#: counts: main races against any spawned entrypoint).
+_CONCURRENT_KINDS = {"thread", "process", "task", "main"}
+
+#: Call-graph closure depth bounds (witnesses stay readable; the model is
+#: an approximation anyway — deep chains add noise faster than signal).
+_TRANS_ACQUIRE_DEPTH = 4
+_TRANS_BLOCKING_DEPTH = 3
+
+
+class Finding(dict):
+    """One SP4xx finding — a dict (JSON-ready) with attribute sugar."""
+
+    @property
+    def rule_id(self) -> str:
+        return self["rule"]
+
+    @property
+    def rule(self) -> str:
+        return CONCURRENCY_RULES[self["rule"]]
+
+    @property
+    def file(self) -> str:
+        return self["file"]
+
+    @property
+    def line(self) -> int:
+        return self["line"]
+
+    @property
+    def message(self) -> str:
+        return self["message"]
+
+    def format(self) -> str:
+        return (
+            f"{self['file']}:{self['line']}: {self['rule']} "
+            f"{CONCURRENCY_RULES[self['rule']]}: {self['message']}"
+        )
+
+
+def _finding(rule: str, site: Site, message: str,
+             witness: List[str],
+             entrypoints: Optional[List[str]] = None) -> Finding:
+    return Finding(
+        rule=rule,
+        rule_name=CONCURRENCY_RULES[rule],
+        file=site.file,
+        line=site.line,
+        message=message,
+        witness=witness,
+        entrypoints=sorted(entrypoints or []),
+    )
+
+
+def _w(site: Site, note: str) -> str:
+    return f"{site.where()}: {note}"
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def analyze_paths(paths: List[str]) -> Tuple[ConcurrencyModel, List[Finding]]:
+    """Scan + model + all passes; findings are suppression-filtered and
+    sorted.  Raises :class:`MissingArtifact` for a bad path (CLI exit 2)."""
+    modules = scan_paths(paths)
+    return analyze_modules(modules)
+
+
+def analyze_modules(
+    modules: List[ScannedModule],
+) -> Tuple[ConcurrencyModel, List[Finding]]:
+    model = build_model(modules)
+    findings = analyze_model(model)
+    by_path: Dict[str, ScannedModule] = {m.path: m for m in modules}
+    kept = [f for f in findings if not _suppressed(f, by_path.get(f.file))]
+    kept.sort(key=lambda f: (f["file"], f["line"], f["rule"]))
+    return model, kept
+
+
+def analyze_model(model: ConcurrencyModel) -> List[Finding]:
+    findings: List[Finding] = []
+    findings.extend(_pass_lock_order(model))
+    findings.extend(_pass_races(model))
+    findings.extend(_pass_blocking_in_coroutine(model))
+    findings.extend(_pass_fork_after_threads(model))
+    findings.extend(_pass_unjoined(model))
+    return findings
+
+
+def _suppressed(f: Finding, mod: Optional[ScannedModule]) -> bool:
+    if mod is None:
+        return False
+    keys = {f["rule"], f["rule_name"]}
+    if keys & mod.file_suppressions:
+        return True
+    return bool(keys & mod.line_suppressions.get(f["line"], set()))
+
+
+# ---------------------------------------------------------------------------
+# SP401 — lock-order inversion
+# ---------------------------------------------------------------------------
+
+
+def _trans_acquires(model: ConcurrencyModel) -> Dict[str, Dict[str, Site]]:
+    """scope -> {lock_id: first acquire site reachable within the depth
+    bound} (the scope's own acquires plus its callees', transitively)."""
+    direct: Dict[str, Dict[str, Site]] = {}
+    for acq in model.acquires:
+        direct.setdefault(acq.site.scope, {}).setdefault(
+            acq.lock_id, acq.site
+        )
+    closure = {scope: dict(locks) for scope, locks in direct.items()}
+    for _ in range(_TRANS_ACQUIRE_DEPTH):
+        changed = False
+        for scope, edges in model.edges.items():
+            mine = closure.setdefault(scope, {})
+            for edge in edges:
+                for lock_id, site in closure.get(edge.callee, {}).items():
+                    if lock_id not in mine:
+                        mine[lock_id] = edge.site  # witness: the call site
+                        changed = True
+        if not changed:
+            break
+    return closure
+
+
+def _pass_lock_order(model: ConcurrencyModel) -> List[Finding]:
+    # Edge table: (held_lock -> acquired_lock) -> list of witness sites.
+    edges: Dict[Tuple[str, str], List[Tuple[Site, str]]] = {}
+
+    def add_edge(a: str, b: str, site: Site, note: str) -> None:
+        if a == b:
+            return  # re-entrant acquire (RLock) is not an ordering edge
+        edges.setdefault((a, b), []).append((site, note))
+
+    # Local edges: acquire B while lexically holding A.
+    for acq in model.acquires:
+        for held in acq.held_before:
+            add_edge(held, acq.lock_id, acq.site,
+                     f"acquires {_short(acq.lock_id)} while holding "
+                     f"{_short(held)}")
+    # Inter-procedural edges: call out while holding A into code that
+    # (transitively) acquires B.
+    trans = _trans_acquires(model)
+    for scope, scope_edges in model.edges.items():
+        for edge in scope_edges:
+            if not edge.held:
+                continue
+            for lock_id, _site in trans.get(edge.callee, {}).items():
+                for held in edge.held:
+                    add_edge(held, lock_id, edge.site,
+                             f"calls into {_scope_name(edge.callee)} which "
+                             f"acquires {_short(lock_id)} while holding "
+                             f"{_short(held)}")
+
+    # Cycle detection: SCCs of the lock-order graph with ≥2 locks.
+    graph: Dict[str, Set[str]] = {}
+    for (a, b) in edges:
+        graph.setdefault(a, set()).add(b)
+        graph.setdefault(b, set())
+    findings: List[Finding] = []
+    for scc in _sccs(graph):
+        if len(scc) < 2:
+            continue
+        cyc_edges = sorted(
+            (pair, sites) for pair, sites in edges.items()
+            if pair[0] in scc and pair[1] in scc
+        )
+        witness: List[str] = []
+        scopes: Set[str] = set()
+        first_site: Optional[Site] = None
+        for (_a, _b), sites in cyc_edges:
+            for site, note in sites:
+                witness.append(_w(site, note))
+                scopes.add(site.scope)
+                if first_site is None or (site.file, site.line) < (
+                        first_site.file, first_site.line):
+                    first_site = site
+        if first_site is None:
+            continue
+        if len(scopes) < 2 and not _multi_entry(model, scopes):
+            # One scope acquiring in both orders can only deadlock against
+            # itself if ≥2 entrypoints run it — otherwise stay quiet.
+            continue
+        names = " ↔ ".join(sorted(_short(l) for l in scc))
+        findings.append(_finding(
+            "SP401", first_site,
+            f"lock-order inversion between {names} — two threads "
+            f"interleaving these paths deadlock",
+            witness,
+            _entrypoints_reaching(model, scopes),
+        ))
+    return findings
+
+
+def _multi_entry(model: ConcurrencyModel, scopes: Set[str]) -> bool:
+    return len(_entrypoints_reaching(model, scopes)) >= 2
+
+
+def _entrypoints_reaching(model: ConcurrencyModel,
+                          scopes: Set[str]) -> List[str]:
+    out = []
+    for name, ep in model.entrypoints.items():
+        if any(s in ep.reachable for s in scopes):
+            out.append(name)
+    return sorted(out)
+
+
+def _sccs(graph: Dict[str, Set[str]]) -> List[Set[str]]:
+    """Tarjan, iterative (analysis must not recurse on user-sized graphs)."""
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Set[str] = set()
+    stack: List[str] = []
+    out: List[Set[str]] = []
+    counter = [0]
+
+    for root in sorted(graph):
+        if root in index:
+            continue
+        work: List[Tuple[str, Any]] = [(root, iter(sorted(graph[root])))]
+        index[root] = low[root] = counter[0]
+        counter[0] += 1
+        stack.append(root)
+        on_stack.add(root)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for succ in it:
+                if succ not in index:
+                    index[succ] = low[succ] = counter[0]
+                    counter[0] += 1
+                    stack.append(succ)
+                    on_stack.add(succ)
+                    work.append((succ, iter(sorted(graph[succ]))))
+                    advanced = True
+                    break
+                if succ in on_stack:
+                    low[node] = min(low[node], index[succ])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                scc: Set[str] = set()
+                while True:
+                    top = stack.pop()
+                    on_stack.discard(top)
+                    scc.add(top)
+                    if top == node:
+                        break
+                out.append(scc)
+    return out
+
+
+def _short(lock_id: str) -> str:
+    return lock_id.split(":", 1)[-1]
+
+
+def _scope_name(scope: str) -> str:
+    return scope.split(":", 1)[-1]
+
+
+# ---------------------------------------------------------------------------
+# SP402 — race candidates
+# ---------------------------------------------------------------------------
+
+
+def _pass_races(model: ConcurrencyModel) -> List[Finding]:
+    by_var: Dict[str, List] = {}
+    for w in model.global_writes:
+        by_var.setdefault(w.var, []).append(w)
+
+    findings: List[Finding] = []
+    for var in sorted(by_var):
+        writes = by_var[var]
+        # (entrypoint, write, effective held set) rows: a write counts for
+        # an entrypoint when its scope is reachable from it; the effective
+        # held set is what's lexically held plus what's guaranteed held on
+        # every call path in.
+        rows: List[Tuple[str, Any, frozenset]] = []
+        for w in writes:
+            for name, ep in model.entrypoints.items():
+                if ep.kind not in _CONCURRENT_KINDS:
+                    continue
+                guaranteed = ep.reachable.get(w.site.scope)
+                if guaranteed is None:
+                    continue
+                rows.append((name, w, frozenset(w.held) | guaranteed))
+        eps = {name for name, _w_, _h in rows}
+        if len(eps) < 2:
+            continue
+        if not (eps - {"<main>"}):
+            continue  # needs at least one spawned entrypoint in the mix
+        common = None
+        for _name, _w_, held in rows:
+            common = held if common is None else (common & held)
+        if common:
+            continue  # some lock protects every path
+        witness: List[str] = []
+        seen: Set[Tuple[str, int, str]] = set()
+        first: Optional[Site] = None
+        for name, w, held in sorted(
+                rows, key=lambda r: (r[1].site.file, r[1].site.line, r[0])):
+            key = (w.site.file, w.site.line, name)
+            if key in seen:
+                continue
+            seen.add(key)
+            if first is None:
+                first = w.site
+            held_note = (
+                f" holding {{{', '.join(_short(l) for l in sorted(held))}}}"
+                if held else " with no lock held"
+            )
+            witness.append(
+                _w(w.site, f"written via entrypoint {name}{held_note}")
+            )
+        if first is None:
+            continue
+        findings.append(_finding(
+            "SP402", first,
+            f"{_short(var)} is written from {len(eps)} entrypoints with no "
+            f"common lock — lost-update candidate",
+            witness,
+            sorted(eps),
+        ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SP403 — blocking call in coroutine
+# ---------------------------------------------------------------------------
+
+
+def _pass_blocking_in_coroutine(model: ConcurrencyModel) -> List[Finding]:
+    # Transitive blocking closure over sync callees (async callees are
+    # awaited — their own scopes get their own findings).
+    blocks: Dict[str, Tuple[Site, List[str]]] = {}
+    for scope, calls in model.blocking.items():
+        b = calls[0]
+        blocks[scope] = (b.site, [_w(b.site, f"calls {b.callee}(...)")])
+    for _ in range(_TRANS_BLOCKING_DEPTH):
+        changed = False
+        for scope, edges in model.edges.items():
+            if scope in blocks:
+                continue
+            fn = model.functions.get(scope)
+            if fn is not None and fn.is_async:
+                continue  # async callees don't propagate: they're awaited
+            for edge in sorted(edges, key=lambda e: (e.site.file,
+                                                     e.site.line)):
+                hit = blocks.get(edge.callee)
+                if hit is None:
+                    continue
+                blocks[scope] = (
+                    edge.site,
+                    [_w(edge.site, f"calls {_scope_name(edge.callee)}")]
+                    + hit[1],
+                )
+                changed = True
+                break
+        if not changed:
+            break
+
+    findings: List[Finding] = []
+    for scope, fn in sorted(model.functions.items()):
+        if not fn.is_async:
+            continue
+        # Direct blocking calls: one finding per site.
+        for b in model.blocking.get(scope, []):
+            findings.append(_finding(
+                "SP403", b.site,
+                f"blocking call {b.callee}(...) inside async def "
+                f"{fn.qualname} parks the whole event loop — use "
+                f"await asyncio.to_thread(...) or an executor",
+                [_w(b.site, f"calls {b.callee}(...) in coroutine "
+                    f"{fn.qualname}")],
+                _entrypoints_reaching(model, {scope}),
+            ))
+        if scope in model.blocking:
+            continue  # direct findings subsume the transitive path
+        # Transitive: a sync callee chain that blocks.
+        for edge in sorted(model.edges.get(scope, []),
+                           key=lambda e: (e.site.file, e.site.line)):
+            callee_fn = model.functions.get(edge.callee)
+            if callee_fn is not None and callee_fn.is_async:
+                continue
+            hit = blocks.get(edge.callee)
+            if hit is None:
+                continue
+            findings.append(_finding(
+                "SP403", edge.site,
+                f"async def {fn.qualname} reaches a blocking call via "
+                f"{_scope_name(edge.callee)} — the event loop parks for "
+                f"the full wait",
+                [_w(edge.site, f"coroutine {fn.qualname} calls "
+                    f"{_scope_name(edge.callee)}")] + hit[1],
+                _entrypoints_reaching(model, {scope}),
+            ))
+            break  # one witness chain per coroutine is enough
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SP404 — fork after threads
+# ---------------------------------------------------------------------------
+
+
+def _pass_fork_after_threads(model: ConcurrencyModel) -> List[Finding]:
+    # Transitive "this scope starts a thread" / "this scope forks" sets.
+    starts: Dict[str, Site] = {}
+    forks: Dict[str, Tuple[Site, str]] = {}
+    for scope, events in model.events.items():
+        for kind, payload, site in events:
+            if kind == "start" and isinstance(payload, Spawn):
+                if payload.kind in ("thread", "executor", "executor-task",
+                                    "to_thread"):
+                    starts.setdefault(scope, site)
+            elif kind == "fork":
+                forks.setdefault(scope, (site, str(payload)))
+    for closure, label in ((starts, "start"), (forks, "fork")):
+        for _ in range(_TRANS_ACQUIRE_DEPTH):
+            changed = False
+            for scope, edges in model.edges.items():
+                if scope in closure:
+                    continue
+                for edge in edges:
+                    hit = closure.get(edge.callee)
+                    if hit is None:
+                        continue
+                    closure[scope] = (
+                        edge.site if label == "start"
+                        else (edge.site, f"via {_scope_name(edge.callee)}")
+                    )
+                    changed = True
+                    break
+            if not changed:
+                break
+
+    findings: List[Finding] = []
+    for scope in sorted(model.events):
+        events = model.events[scope]
+        live: List[Tuple[Spawn, Site]] = []
+        abstract_start: Optional[Site] = None
+        reported = False
+        for kind, payload, site in events:
+            if reported:
+                break
+            if kind == "start" and isinstance(payload, Spawn):
+                if payload.kind in ("thread", "executor", "executor-task",
+                                    "to_thread"):
+                    live.append((payload, site))
+            elif kind == "join":
+                if payload is None:
+                    live = []
+                    abstract_start = None
+                else:
+                    live = [(s, st) for (s, st) in live if s is not payload]
+            elif kind == "call":
+                if payload in starts and abstract_start is None:
+                    # The callee (transitively) starts a thread that is
+                    # still running when it returns — unless it also joins,
+                    # which the loose-join handling above models per scope.
+                    abstract_start = starts[payload]
+            fork_info = None
+            if kind == "fork":
+                fork_info = (site, str(payload))
+            elif kind == "call" and payload in forks:
+                f_site, f_note = forks[payload]
+                fork_info = (site, f"reaches fork ({f_note}) "
+                             f"in {_scope_name(payload)}")
+            if fork_info is None:
+                continue
+            started_at = live[0][1] if live else abstract_start
+            if started_at is None:
+                continue
+            f_site, f_note = fork_info
+            findings.append(_finding(
+                "SP404", f_site,
+                "fork after thread start — the child inherits lock states "
+                "but not the threads that would release them",
+                [_w(started_at, "thread started here"),
+                 _w(f_site, f_note if "reaches" in f_note
+                    else f"{f_note} forks the process")],
+                _entrypoints_reaching(model, {scope}),
+            ))
+            reported = True  # one finding per scope
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SP405 — unjoined thread / leaked executor
+# ---------------------------------------------------------------------------
+
+
+def _pass_unjoined(model: ConcurrencyModel) -> List[Finding]:
+    findings: List[Finding] = []
+    for spawn in model.spawns:
+        site = spawn.site
+        eps = _entrypoints_reaching(model, {site.scope})
+        if spawn.kind == "executor":
+            if spawn.managed or spawn.shutdown:
+                continue
+            findings.append(_finding(
+                "SP405", site,
+                "executor is neither `with`-managed nor shut down — worker "
+                "threads leak past the scope that owns them",
+                [_w(site, "executor created here, no shutdown() on any "
+                    "scanned path")],
+                eps,
+            ))
+        elif spawn.kind in ("thread", "process"):
+            if not spawn.started or spawn.joined:
+                continue
+            what = "thread" if spawn.kind == "thread" else "process"
+            extra = (" (daemon: it dies mid-write at interpreter exit)"
+                     if spawn.daemon else "")
+            start = spawn.start_site or site
+            findings.append(_finding(
+                "SP405", start,
+                f"{what} started but never joined on any scanned path"
+                f"{extra} — shutdown order is unowned",
+                [_w(site, f"{what} created here"),
+                 _w(start, "started here, no matching join()")],
+                eps,
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# artifact
+# ---------------------------------------------------------------------------
+
+
+def build_concurrency_plan(paths: List[str]) -> Dict[str, Any]:
+    """Scan + analyze + assemble the stamped ``concurrency_plan.json``."""
+    modules = scan_paths(paths)
+    model, findings = analyze_modules(modules)
+    return assemble_plan(paths, model, findings)
+
+
+def assemble_plan(paths: List[str], model: ConcurrencyModel,
+                  findings: List[Finding]) -> Dict[str, Any]:
+    rule_counts = {rid: 0 for rid in CONCURRENCY_RULES}
+    for f in findings:
+        rule_counts[f["rule"]] += 1
+    entrypoints = []
+    for name in sorted(model.entrypoints):
+        ep = model.entrypoints[name]
+        entrypoints.append({
+            "name": name,
+            "kind": ep.kind,
+            "roots": sorted(ep.roots)[:50],
+            "site": ep.site.where() if ep.site else None,
+            "reachable_scopes": len(ep.reachable),
+        })
+    locks = [
+        {
+            "id": lock.lock_id,
+            "kind": lock.kind,
+            "file": lock.site.file,
+            "line": lock.site.line,
+        }
+        for _lid, lock in sorted(model.locks.items())
+    ]
+    doc = {
+        "generator": _GENERATOR,
+        "roots": [os.path.abspath(p) for p in paths],
+        "files": len(model.modules),
+        "functions": len(model.functions),
+        "entrypoints": entrypoints,
+        "locks": locks,
+        "wait_points": model.wait_points[:200],
+        "findings": [dict(f) for f in findings],
+        "rule_counts": rule_counts,
+        "errors": model.errors,
+    }
+    return schema.stamp(doc)
+
+
+def save_concurrency_plan(doc: Dict[str, Any], path: str) -> str:
+    out = path
+    if os.path.isdir(path) or path.endswith(os.sep):
+        os.makedirs(path, exist_ok=True)
+        out = os.path.join(path, ARTIFACT)
+    else:
+        parent = os.path.dirname(os.path.abspath(out))
+        os.makedirs(parent, exist_ok=True)
+    with open(out, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1)
+        fh.write("\n")
+    return out
+
+
+def load_concurrency_plan(path: str) -> Dict[str, Any]:
+    """Load + validate; raises :class:`MissingArtifact` (CLI exit 2)."""
+    p = path
+    if os.path.isdir(p):
+        p = os.path.join(p, ARTIFACT)
+    if not os.path.isfile(p):
+        raise schema.MissingArtifact(
+            f"no concurrency plan at {path} — run `analysis concurrency "
+            f"<paths> --out {ARTIFACT}` first"
+        )
+    try:
+        with open(p, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        raise schema.MissingArtifact(
+            f"unreadable concurrency plan {p}: {exc}"
+        ) from exc
+    if not isinstance(doc, dict) or doc.get("generator") != _GENERATOR:
+        raise schema.MissingArtifact(
+            f"{p} is not a concurrency plan (generator mismatch)"
+        )
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# rendering
+# ---------------------------------------------------------------------------
+
+
+def render_concurrency_plan(doc: Dict[str, Any], top: int = 10) -> str:
+    lines = [
+        f"concurrency plan over {doc.get('files', 0)} files / "
+        f"{doc.get('functions', 0)} functions",
+        f"  entrypoints: {len(doc.get('entrypoints', []))}  "
+        f"locks: {len(doc.get('locks', []))}  "
+        f"wait points: {len(doc.get('wait_points', []))}",
+    ]
+    counts = doc.get("rule_counts", {})
+    summary = "  ".join(
+        f"{rid}:{counts.get(rid, 0)}" for rid in sorted(CONCURRENCY_RULES)
+    )
+    lines.append(f"  findings: {summary}")
+    for ep in doc.get("entrypoints", [])[:top]:
+        roots = ", ".join(ep.get("roots", [])[:3]) or "-"
+        lines.append(
+            f"  entry {ep['name']} [{ep['kind']}] "
+            f"reaches {ep.get('reachable_scopes', 0)} scopes ({roots})"
+        )
+    findings = doc.get("findings", [])
+    for f in findings[:top]:
+        lines.append(f"  {f['file']}:{f['line']}: {f['rule']} "
+                     f"{f['rule_name']}: {f['message']}")
+        for wline in f.get("witness", [])[:4]:
+            lines.append(f"      {wline}")
+    if len(findings) > top:
+        lines.append(f"  ... and {len(findings) - top} more findings")
+    errors = doc.get("errors", [])
+    if errors:
+        lines.append(f"  parse errors: {len(errors)}")
+    return "\n".join(lines)
+
+
+def summarize_for_static_plan(model: ConcurrencyModel,
+                              findings: List[Finding]) -> Dict[str, Any]:
+    """Compact concurrency section embedded in ``static_plan.json`` —
+    counts plus the wait-point rows the governor seeds from."""
+    rule_counts = {rid: 0 for rid in CONCURRENCY_RULES}
+    for f in findings:
+        rule_counts[f["rule"]] += 1
+    return {
+        "entrypoints": len(model.entrypoints),
+        "locks": len(model.locks),
+        "findings": rule_counts,
+        "wait_points": model.wait_points[:200],
+    }

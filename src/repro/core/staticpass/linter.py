@@ -30,6 +30,11 @@ SP301     blocking-call-in-hot-region  a blocking call (sleep, subprocess,
                                        to the region and dilates every iteration.
 ========  ===========================  =============================================
 
+The SP4xx concurrency rules (lock-order inversion, race candidates,
+blocking-in-coroutine, fork-after-threads, unjoined work) live in
+:mod:`.concurrency` and are folded into this linter's rule set — one
+``lint_paths`` call runs both families over a single shared scan.
+
 Suppression pragmas (line- or file-scoped, by rule id or name)::
 
     sys.setprofile(cb)  # repro-lint: allow=SP201
@@ -48,6 +53,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
 from .classify import classify_modules
+from .concgraph import BLOCKING_CALLS as _BLOCKING_CALLS
+from .concurrency import CONCURRENCY_RULES, analyze_modules
 from .scanner import (
     ScannedModule,
     _FUNC_NODES,
@@ -55,30 +62,15 @@ from .scanner import (
     scan_paths,
 )
 
-#: Stable rule registry: id -> name.
+#: Stable rule registry: id -> name.  SP1xx lifecycle, SP2xx environment,
+#: SP3xx distortion, SP4xx concurrency (defined in :mod:`.concurrency`).
 RULES = {
     "SP101": "region-not-entered",
     "SP102": "measurement-not-finalized",
     "SP201": "foreign-hook-install",
     "SP202": "thread-before-install",
     "SP301": "blocking-call-in-hot-region",
-}
-
-_BLOCKING_CALLS = {
-    "time.sleep",
-    "sleep",
-    "subprocess.run",
-    "subprocess.call",
-    "subprocess.check_call",
-    "subprocess.check_output",
-    "subprocess.Popen",
-    "socket.create_connection",
-    "urllib.request.urlopen",
-    "requests.get",
-    "requests.post",
-    "requests.request",
-    "select.select",
-    "input",
+    **CONCURRENCY_RULES,
 }
 
 _FOREIGN_HOOKS = {
@@ -126,6 +118,14 @@ def lint_paths(paths: List[str]) -> List[Violation]:
             continue  # parse errors are the planner's report, not lint rules
         linter = _ModuleLinter(mod, hot_functions)
         out.extend(linter.run())
+    # SP4xx: the concurrency passes run over the same scan (already
+    # suppression-filtered by analyze_modules).
+    _model, findings = analyze_modules(modules)
+    out.extend(
+        Violation(rule_id=f["rule"], file=f["file"], line=f["line"],
+                  message=f["message"])
+        for f in findings
+    )
     return sorted(out, key=lambda v: (v.file, v.line, v.rule_id))
 
 

@@ -43,10 +43,19 @@ def _fnmatch_escape(name: str) -> str:
 
 
 def build_plan(paths: List[str]) -> Dict[str, Any]:
-    """Scan ``paths`` and build the plan document (schema-stamped dict)."""
+    """Scan ``paths`` and build the plan document (schema-stamped dict).
+
+    The concurrency section (finding counts + wait-point candidates the
+    governor treats as sampler-friendly) rides along from the same scan —
+    the scanner cache means no file is parsed twice."""
+    from .concurrency import analyze_modules, summarize_for_static_plan
+
     modules = scan_paths(paths)
     classified = classify_modules(modules)
-    return _assemble(paths, modules, classified)
+    plan = _assemble(paths, modules, classified)
+    model, findings = analyze_modules(modules)
+    plan["concurrency"] = summarize_for_static_plan(model, findings)
+    return plan
 
 
 def _assemble(
@@ -227,4 +236,15 @@ def render_plan(plan: Dict[str, Any], top: int = 15) -> str:
         out.append(f"filter spec ({len(plan['filter']['patterns'])} patterns): {shown}")
     else:
         out.append("filter spec: (empty — nothing auto-excluded)")
+    conc = plan.get("concurrency")
+    if conc:
+        counts = conc.get("findings", {})
+        flagged = sum(counts.values())
+        out.append(
+            f"concurrency: {conc.get('entrypoints', 0)} entrypoints, "
+            f"{conc.get('locks', 0)} locks, "
+            f"{len(conc.get('wait_points', []))} wait points, "
+            f"{flagged} SP4xx findings"
+            + (" — run `analysis concurrency` for details" if flagged else "")
+        )
     return "\n".join(out)

@@ -25,6 +25,7 @@ import ast
 import dis
 import os
 import re
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
@@ -213,13 +214,47 @@ def iter_python_files(paths: List[str]) -> List[Tuple[str, Optional[str]]]:
     return out
 
 
+#: Bounded scan cache: when ``analysis plan`` / ``lint`` / ``concurrency``
+#: run over the same tree in one process, the parse + compile + dis pass
+#: happens once.  Keyed by every file's (path, mtime_ns, size, root) so any
+#: edit — or a different path expansion — misses cleanly.
+_SCAN_CACHE: "OrderedDict[Tuple, List[ScannedModule]]" = OrderedDict()
+_SCAN_CACHE_MAX = 4
+
+
 def scan_paths(paths: List[str]) -> List[ScannedModule]:
     """Scan files/directories into :class:`ScannedModule` records.
 
     Files that fail to parse are kept (with ``parse_error`` set) so the
-    caller can report them without aborting the whole pass.
+    caller can report them without aborting the whole pass.  Results are
+    served from a bounded in-process cache while the underlying files are
+    unchanged; callers receive a fresh list over shared (read-only by
+    convention) module records.
     """
-    return [_scan_file(f, root) for f, root in iter_python_files(paths)]
+    files = iter_python_files(paths)
+    sig = []
+    for f, root in files:
+        try:
+            st = os.stat(f)
+            entry = (os.path.abspath(f), st.st_mtime_ns, st.st_size)
+        except OSError:
+            entry = (os.path.abspath(f), -1, -1)
+        sig.append(entry + (os.path.abspath(root) if root else None,))
+    key = tuple(sig)
+    cached = _SCAN_CACHE.get(key)
+    if cached is not None:
+        _SCAN_CACHE.move_to_end(key)
+        return list(cached)
+    modules = [_scan_file(f, root) for f, root in files]
+    _SCAN_CACHE[key] = modules
+    while len(_SCAN_CACHE) > _SCAN_CACHE_MAX:
+        _SCAN_CACHE.popitem(last=False)
+    return list(modules)
+
+
+def clear_scan_cache() -> None:
+    """Drop the scan cache (tests and long-lived processes)."""
+    _SCAN_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,62 @@
+"""Deliberate concurrency misuse — one violation per SP4xx rule.
+
+The companion of bad.py: tests/test_staticpass.py asserts each SP401–SP405
+rule fires exactly once across this directory.  Keep one rule per function
+and join every thread that is not the SP405 demonstration.
+"""
+
+import os
+import threading
+import time
+
+A = threading.Lock()
+B = threading.Lock()
+counter = 0
+
+
+def ab_path():
+    with A:
+        with B:  # order A -> B
+            pass
+
+
+def ba_path():
+    with B:
+        with A:  # order B -> A: SP401 cycle with ab_path
+            pass
+
+
+def drive_inversion():
+    t = threading.Thread(target=ab_path)
+    t.start()
+    ba_path()
+    t.join()
+
+
+def racer():
+    global counter
+    counter += 1  # SP402: written from thread + main, no common lock
+
+
+def spawn_racers():
+    t = threading.Thread(target=racer)
+    t.start()
+    t.join()
+    racer()
+
+
+async def lazy_poll():
+    time.sleep(0.5)  # SP403: parks the event loop, not just this coroutine
+
+
+def forker():
+    t = threading.Thread(target=racer)
+    t.start()
+    pid = os.fork()  # SP404: fork while a thread is running
+    t.join()
+    return pid
+
+
+def leaker():
+    worker = threading.Thread(target=print)
+    worker.start()  # SP405: never joined on any path

@@ -83,6 +83,8 @@ def test_missing_artifact_exit_codes_are_uniform(tmp_path, capsys):
         ["plan", str(empty)],  # dir form: no Python sources inside
         ["lint", str(empty / "nope")],
         ["lint", str(empty)],
+        ["concurrency", str(empty / "nope")],
+        ["concurrency", str(empty)],  # dir form: no Python sources inside
     ):
         assert main(argv) == 2, argv
         err = capsys.readouterr().err
@@ -120,6 +122,37 @@ def test_lint_exit_codes(tmp_path, capsys):
     captured = capsys.readouterr()
     assert "SP201" in captured.out
     assert "violation" in captured.err
+
+
+def test_concurrency_exit_codes(tmp_path, capsys):
+    """`analysis concurrency` mirrors the lint convention: 1 with findings,
+    0 when clean, and --smoke always 0 (artifact round-trip gate)."""
+    from repro.core.analysis import main
+
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f():\n    return 1\n")
+    assert main(["concurrency", str(clean)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import threading\n"
+        "def leak():\n"
+        "    t = threading.Thread(target=print)\n"
+        "    t.start()\n"
+    )
+    assert main(["concurrency", str(bad)]) == 1
+    captured = capsys.readouterr()
+    assert "SP405" in captured.out
+    assert "finding" in captured.err
+
+    out = tmp_path / "concurrency_plan.json"
+    assert main(["concurrency", str(bad), "--out", str(out)]) == 1
+    plan = json.loads(out.read_text())
+    assert plan["rule_counts"].get("SP405") == 1
+
+    assert main(["concurrency", str(bad), "--smoke"]) == 0
+    assert "smoke OK" in capsys.readouterr().out
 
 
 def test_plan_cli_writes_artifact(tmp_path, capsys):

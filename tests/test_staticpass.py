@@ -450,3 +450,239 @@ def test_scorep_cli_carries_static_plan(tmp_path):
     )
     env = compose_environment(ns, {})
     assert env["REPRO_MONITOR_STATIC_PLAN"] == plan_path
+
+
+# ---------------------------------------------------------------------------
+# concurrency analyzer (SP4xx)
+# ---------------------------------------------------------------------------
+
+
+BAD_CONCURRENCY = os.path.join(LINT_BAD, "bad_concurrency.py")
+
+
+def test_concurrency_fixture_each_rule_fires_exactly_once():
+    """bad_concurrency.py demonstrates every SP4xx rule exactly once, with a
+    call-path witness on each finding (the broader lint fixture test covers
+    the fold into `analysis lint`; this one checks the analyzer directly)."""
+    from repro.core.staticpass import CONCURRENCY_RULES, analyze_paths
+
+    model, findings = analyze_paths([BAD_CONCURRENCY])
+    counts = {}
+    for f in findings:
+        counts[f["rule"]] = counts.get(f["rule"], 0) + 1
+        assert f["witness"], f
+        assert os.path.exists(f["file"]) and f["line"] > 0, f
+    assert counts == {rule: 1 for rule in CONCURRENCY_RULES}, counts
+    # the fixture's threads were discovered as concurrent entrypoints
+    kinds = {ep.kind for ep in model.entrypoints.values()}
+    assert "thread" in kinds and "main" in kinds
+
+
+def test_concurrency_artifact_round_trip(tmp_path):
+    from repro.core.staticpass import (
+        build_concurrency_plan,
+        load_concurrency_plan,
+        render_concurrency_plan,
+        save_concurrency_plan,
+    )
+
+    doc = build_concurrency_plan([BAD_CONCURRENCY])
+    assert doc["report_schema_version"] >= 1
+    assert doc["generator"] == "repro.core.staticpass.concurrency"
+    assert sum(doc["rule_counts"].values()) == len(doc["findings"]) == 5
+    # directory form resolves to concurrency_plan.json inside
+    save_concurrency_plan(doc, str(tmp_path))
+    loaded = load_concurrency_plan(str(tmp_path))
+    assert loaded["findings"] == doc["findings"]
+    text = render_concurrency_plan(loaded)
+    assert "SP401" in text and "lock-order-inversion" in text
+
+    with pytest.raises(MissingArtifact):
+        load_concurrency_plan(str(tmp_path / "nope"))
+    (tmp_path / "corrupt.json").write_text("{truncated")
+    with pytest.raises(MissingArtifact):
+        load_concurrency_plan(str(tmp_path / "corrupt.json"))
+    # a different artifact (e.g. a static plan) is rejected, not mis-read
+    (tmp_path / "other.json").write_text(json.dumps({"generator": "x"}))
+    with pytest.raises(MissingArtifact):
+        load_concurrency_plan(str(tmp_path / "other.json"))
+
+
+def test_concurrency_wait_points_carry_both_module_forms(tmp_path):
+    """Wait-point rows name the region in both module forms (dotted +
+    file-stem) so governor matching works under every instrumenter family."""
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "__init__.py").write_text("")
+    (pkg / "mod.py").write_text(
+        "import threading\n"
+        "_lock = threading.Lock()\n"
+        "def guarded():\n"
+        "    with _lock:\n"
+        "        return 1\n"
+    )
+    from repro.core.staticpass import analyze_paths
+    from repro.core.staticpass.concurrency import assemble_plan
+
+    model, findings = analyze_paths([str(pkg)])
+    doc = assemble_plan([str(pkg)], model, findings)
+    rows = [w for w in doc["wait_points"] if w["kind"] == "lock-acquire"]
+    assert rows, doc["wait_points"]
+    assert any(w["region"].endswith("pkg.mod:guarded") for w in rows)
+    assert any(w["frameless_region"] == "mod:guarded" for w in rows)
+
+
+def test_concurrency_suppression_pragma(tmp_path):
+    """SP4xx findings honour the shared lint pragmas on the anchor line."""
+    src = (
+        "import threading\n"
+        "def leak():\n"
+        "    t = threading.Thread(target=print)\n"
+        "    t.start(){pragma}\n"
+    )
+    from repro.core.staticpass import analyze_paths
+
+    noisy = tmp_path / "noisy.py"
+    noisy.write_text(src.format(pragma=""))
+    _, findings = analyze_paths([str(noisy)])
+    assert [f["rule"] for f in findings] == ["SP405"]
+
+    quiet = tmp_path / "quiet.py"
+    quiet.write_text(src.format(pragma="  # repro-lint: allow=SP405"))
+    _, findings = analyze_paths([str(quiet)])
+    assert findings == []
+
+
+def test_governor_never_excludes_wait_point_regions():
+    """A region the plan marks as a wait point is never offered for
+    exclusion — its enter/exit pairs are the wait-state signal."""
+    import sys
+    from types import SimpleNamespace
+
+    import numpy as np
+
+    from repro.core.governor import Governor
+    from repro.core.regions import RegionRegistry
+
+    def waity():  # pragma: no cover - never called, only registered
+        pass
+
+    reg = RegionRegistry()
+    rid = reg.register_code(waity.__code__, sys._getframe())
+    fake = SimpleNamespace(
+        regions=reg,
+        instrumenter=SimpleNamespace(
+            name="profile", period=0, cost_multiplier=lambda: 1.0
+        ),
+    )
+    g = Governor(fake, budget=0.5)
+    n = len(reg)
+    g._visits = np.ones(n, dtype=np.int64)
+    g._est_cost = np.ones(n, dtype=np.float64)
+    g._leaf_min = np.zeros(n, dtype=np.float64)  # short leaf: prime offender
+    assert rid in g._offenders(set())
+    region = reg.get(rid)
+    g._plan_wait_points = {f"{region.module}:{region.name}"}
+    assert rid not in g._offenders(set())
+
+
+def test_seed_static_plan_collects_wait_points(tmp_path):
+    kpath, plan_path = _kernel_plan(tmp_path)
+    plan = load_plan(plan_path)
+    plan["concurrency"] = {
+        "entrypoints": 1,
+        "locks": 1,
+        "findings": {},
+        "wait_points": [
+            {
+                "region": "case2_kernel:main",
+                "frameless_region": "case2_kernel:main",
+                "kind": "lock-acquire",
+                "file": kpath,
+                "line": 1,
+            }
+        ],
+    }
+    m = Measurement(MeasurementConfig(
+        run_dir=str(tmp_path / "run"), substrates=(), budget=0.05,
+    ))
+    try:
+        m.governor.seed_static_plan(plan)
+        assert "case2_kernel:main" in m.governor._plan_wait_points
+        assert m.governor._plan_meta["wait_points"] == 1
+    finally:
+        m.finalize()
+
+
+def test_scan_cache_hit_and_invalidation(tmp_path):
+    """scan_paths serves repeated scans of unchanged trees from cache
+    (plan + lint + concurrency share one parse) and invalidates on edit."""
+    from repro.core.staticpass.scanner import clear_scan_cache
+
+    clear_scan_cache()
+    mod = tmp_path / "m.py"
+    mod.write_text("def f():\n    return 1\n")
+    first = scan_paths([str(tmp_path)])
+    second = scan_paths([str(tmp_path)])
+    assert [id(m) for m in first] == [id(m) for m in second]  # cache hit
+    assert first is not second  # but callers get their own list
+
+    mod.write_text("def f():\n    return 2\n\ndef g():\n    return 3\n")
+    os.utime(mod, ns=(1, 1))  # force a distinct mtime even on coarse clocks
+    third = scan_paths([str(tmp_path)])
+    assert id(third[0]) != id(first[0])
+    assert {fn.qualname for fn in third[0].functions} == {"f", "g"}
+    clear_scan_cache()
+
+
+def test_concurrency_never_raises_on_odd_modules(tmp_path):
+    """Manual-fuzz battery: the analyzer must survive valid-but-weird
+    modules (it sees arbitrary user code) and tolerate parse errors by
+    recording them, never raising.  test_property_core.py runs the
+    hypothesis-backed generalisation of this when hypothesis is present."""
+    from repro.core.staticpass import analyze_paths
+
+    cases = [
+        # empty / comment-only / docstring-only
+        "",
+        "# nothing here\n",
+        '"""doc"""\n',
+        # locks in odd positions
+        "import threading\nl = [threading.Lock() for _ in range(3)]\n",
+        "import threading\ndef f(x=threading.Lock()):\n    with x:\n        pass\n",
+        "import threading\nclass C:\n    lock = threading.Lock()\n"
+        "    def m(self):\n        with C.lock:\n            pass\n",
+        # spawn targets that cannot be resolved
+        "import threading\ndef f(fn):\n"
+        "    t = threading.Thread(target=fn)\n    t.start()\n    t.join()\n",
+        "import threading\nthreading.Thread(target=lambda: 1).run()\n",
+        # async corner cases
+        "import asyncio\nasync def f():\n    await asyncio.sleep(0)\n",
+        "async def g():\n    async with open_thing() as x:\n        yield x\n",
+        "async def h():\n    return [i async for i in gen()]\n",
+        # control flow soup
+        "def f():\n    global x\n    x = (y := 1)\n    del x\n",
+        "def f(a, /, b, *, c, **kw):\n    match a:\n"
+        "        case [1, *rest]:\n            return rest\n"
+        "        case {'k': v}:\n            return v\n"
+        "        case _:\n            return b\n",
+        "import os\ntry:\n    os.fork()\nfinally:\n    pass\n",
+        "import threading\nwhile True:\n"
+        "    t = threading.Thread(target=print)\n    t.start()\n"
+        "    t.join()\n    break\n",
+        # decorators, nesting, class-in-function
+        "import functools\n@functools.lru_cache\ndef f():\n"
+        "    def g():\n        class C:\n            pass\n        return C\n"
+        "    return g\n",
+    ]
+    for i, src in enumerate(cases):
+        p = tmp_path / f"case_{i}.py"
+        p.write_text(src)
+        model, findings = analyze_paths([str(p)])  # must not raise
+        assert model.errors == [], (src, model.errors)
+
+    broken = tmp_path / "broken.py"
+    broken.write_text("def f(:\n")
+    model, findings = analyze_paths([str(broken)])
+    assert findings == []
+    assert model.errors and "broken.py" in model.errors[0]["file"]
