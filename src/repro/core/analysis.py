@@ -13,15 +13,17 @@ comparison is programmatic and drives the §Perf loop).
     PYTHONPATH=src python -m repro.core.analysis plan PATHS... [--out FILE]
     PYTHONPATH=src python -m repro.core.analysis lint PATHS...
     PYTHONPATH=src python -m repro.core.analysis concurrency PATHS... [--out FILE]
+    PYTHONPATH=src python -m repro.core.analysis fleet ROOT... [--out FILE]
+    PYTHONPATH=src python -m repro.core.analysis fleet gate TRAJ [--append DIR]
 
 Every subcommand follows one error convention: a missing/unreadable artifact
-(or a bad path handed to ``plan``/``lint``/``concurrency``) raises
+(or a bad path handed to ``plan``/``lint``/``concurrency``/``fleet``) raises
 :class:`MissingArtifact`, which the CLI renders as a one-line ``error: ...``
 on stderr and **exit code 2** (so scripts can tell "wrong substrate set" from
-real failures, which keep their tracebacks).  ``lint`` and ``concurrency``
-additionally exit **1** when violations/findings remain and **0** when clean
-— the same contract as every mainstream linter, so they drop into CI gates
-unchanged.
+real failures, which keep their tracebacks).  ``lint``, ``concurrency`` and
+``fleet`` additionally exit **1** when violations/findings/confirmed
+regressions remain and **0** when clean — the same contract as every
+mainstream linter, so they drop into CI gates unchanged.
 """
 
 from __future__ import annotations
@@ -558,10 +560,91 @@ def build_parser():
                     help="verify the artifact contract (stamped doc "
                          "round-trips load) and exit 0 even with findings "
                          "(CI gate)")
+    fl = sub.add_parser(
+        "fleet",
+        help="fleet-scale run-population analytics: effect-size regression "
+             "detection, memsys leak analysis, and the CI perf gate; exit 1 "
+             "on confirmed regressions/leaks",
+    )
+    flsub = fl.add_subparsers(dest="fleet_cmd", required=True)
+    fa = flsub.add_parser(
+        "analyze",
+        help="analyze a run population (N run dirs): baseline-vs-candidate "
+             "effect-size regressions + leak verdicts -> fleet_summary.json "
+             "(`analysis fleet ROOT...` is shorthand for this)",
+    )
+    fa.add_argument("roots", nargs="*",
+                    help="run directories and/or directories containing them "
+                         "(optional with --smoke)")
+    fa.add_argument("--experiment", default=None,
+                    help="only ingest runs of this experiment (run-dir "
+                         "boundary match, as in repro.core.merge)")
+    fa.add_argument("--candidate", type=int, default=0,
+                    help="candidate-window size in runs, newest first "
+                         "(0 = a third of the population, clamped to [1, 8])")
+    fa.add_argument("--alpha", type=float, default=0.05,
+                    help="Mann-Whitney significance level")
+    fa.add_argument("--min-effect", type=float, default=0.33,
+                    help="minimum |Cliff's delta| for a verdict")
+    fa.add_argument("--min-rel", type=float, default=0.05,
+                    help="minimum relative median change for a verdict")
+    fa.add_argument("--out", default=None,
+                    help="write fleet_summary.json here (directories resolve "
+                         "to fleet_summary.json inside); omitted = report only")
+    fa.add_argument("--top", type=int, default=10,
+                    help="finding rows to print")
+    fa.add_argument("--smoke", action="store_true",
+                    help="generate the canonical synthetic populations, "
+                         "verify the stable/step/drift/leak contract and "
+                         "byte-determinism, exit 0 (CI gate)")
+    fg = flsub.add_parser(
+        "gate",
+        help="CI perf gate over a benchmark-artifact trajectory directory: "
+             "exit 1 on a confirmed regression, 0 otherwise (first runs seed "
+             "the baseline and pass), 2 on missing/corrupt inputs",
+    )
+    fg.add_argument("trajectory",
+                    help="trajectory directory of snapshot subdirs "
+                         "(NNNNN[-label]/*.json)")
+    fg.add_argument("--append", metavar="DIR", default=None,
+                    help="first copy DIR's *.json benchmark artifacts in as "
+                         "the newest snapshot (e.g. benchmarks/artifacts)")
+    fg.add_argument("--label", default=None,
+                    help="snapshot label appended to the index (e.g. a "
+                         "commit SHA)")
+    fg.add_argument("--candidate", type=int, default=1,
+                    help="candidate-window size in snapshots")
+    fg.add_argument("--min-baseline", type=int, default=4,
+                    help="baseline snapshots required before the gate "
+                         "judges; fewer = seeding pass")
+    fg.add_argument("--min-rel", type=float, default=0.10,
+                    help="minimum relative median change for a verdict")
+    fg.add_argument("--out", default=None,
+                    help="write the gate summary here (default: "
+                         "fleet_summary.json inside the trajectory dir)")
+    fg.add_argument("--top", type=int, default=10,
+                    help="finding rows to print")
+    fs = flsub.add_parser(
+        "show",
+        help="render an existing fleet_summary.json (runs or gate mode)",
+    )
+    fs.add_argument("summary",
+                    help="fleet_summary.json, or a directory containing it")
+    fs.add_argument("--top", type=int, default=10,
+                    help="finding rows to print")
     return p
 
 
+#: ``analysis fleet X`` where X is not one of these gets ``analyze``
+#: inserted — so ``analysis fleet RUNS_ROOT`` / ``analysis fleet --smoke``
+#: work as the natural shorthand while ``fleet gate`` stays a real mode.
+_FLEET_MODES = ("analyze", "gate", "show")
+
+
 def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv[:1] == ["fleet"] and (len(argv) == 1 or argv[1] not in _FLEET_MODES):
+        argv.insert(1, "analyze")
     ns = build_parser().parse_args(argv)
     try:
         if ns.cmd == "diff":
@@ -664,6 +747,62 @@ def main(argv: Optional[List[str]] = None) -> int:
                 return 1
             else:
                 print("clean: no concurrency findings")
+        elif ns.cmd == "fleet":
+            from .fleet import (
+                append_snapshot,
+                build_fleet_summary,
+                gate_summary,
+                load_fleet_summary,
+                render_fleet_summary,
+                save_fleet_summary,
+            )
+            from .fleet import smoke as fleet_smoke
+
+            if ns.fleet_cmd == "analyze":
+                if ns.smoke:
+                    print(fleet_smoke())
+                    return 0
+                if not ns.roots:
+                    print("error: fleet analyze needs run population roots "
+                          "(or --smoke)", file=sys.stderr)
+                    return 2
+                doc = build_fleet_summary(
+                    ns.roots,
+                    experiment=ns.experiment,
+                    candidate=ns.candidate,
+                    alpha=ns.alpha,
+                    min_effect=ns.min_effect,
+                    min_rel=ns.min_rel,
+                )
+                print(render_fleet_summary(doc, top=ns.top))
+                if ns.out is not None:
+                    print(f"fleet summary written to "
+                          f"{save_fleet_summary(doc, ns.out)}")
+                if doc["findings_total"]:
+                    print(f"{doc['findings_total']} confirmed finding(s)",
+                          file=sys.stderr)
+                    return 1
+            elif ns.fleet_cmd == "gate":
+                if ns.append is not None:
+                    name = append_snapshot(ns.trajectory, ns.append,
+                                           label=ns.label)
+                    print(f"appended snapshot {name} from {ns.append}")
+                doc = gate_summary(
+                    ns.trajectory,
+                    candidate=ns.candidate,
+                    min_baseline=ns.min_baseline,
+                    min_rel=ns.min_rel,
+                )
+                print(render_fleet_summary(doc, top=ns.top))
+                out = ns.out if ns.out is not None else ns.trajectory + os.sep
+                print(f"gate summary written to {save_fleet_summary(doc, out)}")
+                if doc["verdict"] == "regressed":
+                    print(f"{doc['findings_total']} confirmed regression(s)",
+                          file=sys.stderr)
+                    return 1
+            else:
+                print(render_fleet_summary(load_fleet_summary(ns.summary),
+                                           top=ns.top))
         else:
             for name, vals in hotspots(ns.run_dir, ns.top):
                 print(f"{vals['excl_ns'] / 1e6:12.3f} ms excl {vals['visits']:10d}x  {name}")

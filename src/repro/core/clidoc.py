@@ -101,11 +101,18 @@ def _analysis_subcommands() -> str:
 
     parser = build_parser()
     out = []
-    # Walk the subparsers action to render each subcommand's own help.
-    for action in parser._subparsers._group_actions:  # noqa: SLF001 (argparse has no public API for this)
-        for name, sub in action.choices.items():
-            out.append(f"### `analysis {name}`\n")
-            out.append("```text\n" + _render_help(sub) + "\n```\n")
+    # Walk the subparsers action to render each subcommand's own help,
+    # recursing one level for nested modes (`analysis fleet analyze` ...).
+    def walk(prefix: str, p) -> None:
+        if p._subparsers is None:  # noqa: SLF001 (argparse has no public API for this)
+            return
+        for action in p._subparsers._group_actions:  # noqa: SLF001
+            for name, sub in action.choices.items():
+                out.append(f"### `{prefix} {name}`\n")
+                out.append("```text\n" + _render_help(sub) + "\n```\n")
+                walk(f"{prefix} {name}", sub)
+
+    walk("analysis", parser)
     return "\n".join(out)
 
 

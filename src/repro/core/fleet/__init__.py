@@ -1,0 +1,333 @@
+"""repro.core.fleet — fleet-scale regression service over run populations.
+
+PR 5's ``--diff`` answers "did run B regress vs run A?"; at production
+scale the question is "did the *population* shift?".  This package ingests
+N run directories (CI runs, canaries, cron'd smokes — discovery and dedup
+shared with the merge layer), maintains per-region exclusive-time and
+allocation distributions across runs, and turns them into verdicts:
+
+* **Regressions by effect size** — baseline-window vs candidate-window
+  Mann-Whitney + Cliff's delta per region (:mod:`.regress`, kernel in
+  :mod:`.stats`), never raw thresholds.
+* **Leaks** — allocation-velocity + reclaim-rate tests per region and
+  whole-process timeline-slope tests (:mod:`.leaks`), the scalene
+  leak-analysis shape over memsys artifacts.
+* **The CI perf gate** (:mod:`.gate`) — the same machinery pointed at the
+  repo's own ``benchmarks/artifacts/*.json`` trajectory, so every PR is a
+  candidate window against the project's history.
+
+Everything lands in a schema-stamped ``fleet_summary.json`` whose bytes
+are deterministic: ingestion order, wall-clock time, and dict ordering
+never change the artifact (the determinism tests diff raw bytes).
+
+CLI: ``python -m repro.core.analysis fleet [analyze|gate|show] ...``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..schema import MissingArtifact, stamp
+from .gate import append_snapshot, gate_summary, load_trajectory, metric_direction
+from .ingest import RunStat, ingest, load_run
+from .leaks import leak_section
+from .regress import default_candidate, region_findings, sparkline_series, split_windows
+from .stats import (
+    EFFECT_LARGE,
+    EFFECT_MEDIUM,
+    EFFECT_SMALL,
+    cliffs_delta,
+    compare_windows,
+    mann_whitney,
+    sign_test_p,
+)
+
+__all__ = [
+    "ARTIFACT",
+    "EFFECT_LARGE",
+    "EFFECT_MEDIUM",
+    "EFFECT_SMALL",
+    "RunStat",
+    "append_snapshot",
+    "build_fleet_summary",
+    "cliffs_delta",
+    "compare_windows",
+    "gate_summary",
+    "ingest",
+    "load_fleet_summary",
+    "load_run",
+    "load_trajectory",
+    "mann_whitney",
+    "metric_direction",
+    "render_fleet_summary",
+    "save_fleet_summary",
+    "sign_test_p",
+    "smoke",
+]
+
+ARTIFACT = "fleet_summary.json"
+
+#: Noise floor for the time pass: regions whose median exclusive time sits
+#: below this in both windows are not fleet events even when significant.
+MIN_ABS_NS = 100_000
+
+#: Same for the allocation pass (bytes).
+MIN_ABS_BYTES = 16_384
+
+
+def build_fleet_summary(
+    roots: Sequence[str],
+    experiment: Optional[str] = None,
+    candidate: int = 0,
+    alpha: float = 0.05,
+    min_effect: float = EFFECT_MEDIUM,
+    min_rel: float = 0.05,
+    top: int = 25,
+) -> Dict[str, Any]:
+    """Analyze the run population under ``roots`` into the fleet summary
+    document (runs mode).
+
+    ``candidate`` is the candidate-window size in runs (newest first);
+    ``<= 0`` picks a third of the population (clamped to [1, 8]).  Raises
+    :class:`repro.core.schema.MissingArtifact` when no runs are found.
+    """
+    runs, dropped = ingest(roots, experiment=experiment)
+    baseline, cand_runs = split_windows(runs, candidate=candidate)
+    time_section = region_findings(
+        baseline, cand_runs, column="excl_ns", metric="excl_ns",
+        alpha=alpha, min_effect=min_effect, min_rel=min_rel, min_abs=MIN_ABS_NS,
+    )
+    alloc_section = region_findings(
+        baseline, cand_runs, column="alloc_bytes", metric="alloc_bytes",
+        alpha=alpha, min_effect=min_effect, min_rel=min_rel, min_abs=MIN_ABS_BYTES,
+    )
+    leaks = leak_section(runs, alpha=alpha, top=top)
+    regressions = sum(
+        1 for section in (time_section, alloc_section)
+        for f in section["findings"] if f["verdict"] == "regression"
+    )
+    leak_count = leaks["region_leaks"] + sum(
+        1 for sig in leaks["process"].values() if sig["verdict"] == "leak"
+    )
+    verdict = "+".join(
+        part
+        for part, hit in (("regressed", regressions), ("leaking", leak_count))
+        if hit
+    ) or "ok"
+    doc = stamp(
+        {
+            "kind": "fleet",
+            "mode": "runs",
+            "roots": sorted(os.path.normpath(r) for r in roots),
+            "experiment": experiment,
+            "runs": [
+                {
+                    "run_dir": r.run_dir,
+                    "label": r.label(),
+                    "experiment": r.experiment,
+                    "rank": r.rank,
+                    "epoch_time_ns": r.epoch_time_ns,
+                    "has_profile": r.has_profile,
+                    "has_memory": r.has_memory,
+                }
+                for r in runs
+            ],
+            "dropped_runs": dropped,
+            "windows": {
+                "baseline_n": len(baseline),
+                "candidate_n": len(cand_runs),
+                "policy": "newest-N-candidate",
+            },
+            "params": {
+                "alpha": alpha,
+                "min_effect": min_effect,
+                "min_rel": min_rel,
+                "candidate": candidate if candidate > 0 else default_candidate(len(runs)),
+            },
+            "time": time_section,
+            "alloc": alloc_section,
+            "leaks": leaks,
+            "series": {
+                "time": sparkline_series(runs, time_section["findings"], column="excl_ns"),
+                "alloc": sparkline_series(runs, alloc_section["findings"], column="alloc_bytes"),
+                "process": {
+                    "heap_slope_bytes_s": [r.heap_slope_bytes_s for r in runs],
+                    "rss_peak_bytes": [float(r.rss_peak_bytes) for r in runs],
+                },
+            },
+            "findings_total": regressions + leak_count,
+            "verdict": verdict,
+        }
+    )
+    return doc
+
+
+def save_fleet_summary(doc: Dict[str, Any], path: str) -> str:
+    """Write the summary to ``path`` (directories resolve to
+    :data:`ARTIFACT` inside) byte-deterministically and return the path."""
+    if os.path.isdir(path) or path.endswith(os.sep):
+        os.makedirs(path, exist_ok=True)
+        path = os.path.join(path, ARTIFACT)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def load_fleet_summary(path: str) -> Dict[str, Any]:
+    """Read a fleet summary; ``path`` may be the JSON or a directory
+    containing :data:`ARTIFACT`.  Raises :class:`MissingArtifact` (-> CLI
+    exit 2) when absent or unreadable."""
+    if os.path.isdir(path):
+        path = os.path.join(path, ARTIFACT)
+    if not os.path.exists(path):
+        raise MissingArtifact(
+            f"no fleet summary at {path or '.'} — run "
+            f"`python -m repro.core.analysis fleet ROOT --out ...` first"
+        )
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        raise MissingArtifact(f"unreadable fleet summary {path}: {exc}") from exc
+
+
+def _fmt_value(metric: str, value: float) -> str:
+    if metric == "excl_ns":
+        return f"{value / 1e6:.3f} ms"
+    if metric == "alloc_bytes":
+        return f"{value / 1e6:.2f} MB"
+    return f"{value:,.4g}"
+
+
+def _finding_lines(findings: List[Dict[str, Any]], top: int) -> List[str]:
+    out = []
+    for f in findings[:top]:
+        rel = f.get("rel_change")
+        p = f.get("p")
+        name = f.get("region") or f.get("metric")
+        out.append(
+            f"  {f['verdict'].upper():11s} {name}: "
+            f"{_fmt_value(f.get('metric', ''), f['baseline']['median'])} -> "
+            f"{_fmt_value(f.get('metric', ''), f['candidate']['median'])} "
+            + (f"({rel:+.1%}) " if rel is not None else "(new) ")
+            + f"effect {f['effect_size']:+.2f} ({f['effect']})"
+            + (f", p={p:.2g}" if p is not None else f", mad_z={f.get('mad_z', 0.0):+.1f}")
+            + f", confidence {f['confidence']} [{f['method']}]"
+        )
+    if len(findings) > top:
+        out.append(f"  (+{len(findings) - top} more)")
+    return out
+
+
+def render_fleet_summary(doc: Dict[str, Any], top: int = 10) -> str:
+    """Human-readable fleet report for both modes (runs / gate)."""
+    out: List[str] = []
+    if doc.get("mode") == "gate":
+        w = doc.get("windows", {})
+        out.append(
+            f"perf gate over {len(doc.get('snapshots', []))} snapshot(s) "
+            f"({w.get('baseline_n', 0)} baseline / {w.get('candidate_n', 0)} candidate), "
+            f"{doc.get('metrics_watched', 0)} watched metric(s), "
+            f"{doc.get('metrics_unwatched', 0)} unwatched"
+        )
+        findings = doc.get("findings", [])
+        if findings:
+            out.append("findings:")
+            out.extend(_finding_lines(findings, top))
+        out.append(f"verdict: {doc.get('verdict', '?')}")
+        return "\n".join(out)
+    w = doc.get("windows", {})
+    out.append(
+        f"fleet of {len(doc.get('runs', []))} run(s) "
+        f"({w.get('baseline_n', 0)} baseline / {w.get('candidate_n', 0)} candidate)"
+        + (f", {len(doc['dropped_runs'])} duplicate(s) dropped" if doc.get("dropped_runs") else "")
+    )
+    for title, key in (("time (excl_ns)", "time"), ("alloc (bytes)", "alloc")):
+        section = doc.get(key) or {}
+        findings = section.get("findings", [])
+        out.append(
+            f"{title}: {len(findings)} finding(s) over "
+            f"{section.get('checked_regions', 0)} region(s)"
+        )
+        out.extend(_finding_lines(findings, top))
+    leaks = doc.get("leaks") or {}
+    out.append(
+        f"leaks: {leaks.get('region_leaks', 0)} region verdict(s) over "
+        f"{leaks.get('checked_regions', 0)} region(s)"
+    )
+    for row in leaks.get("regions", []):
+        if row["verdict"] != "leak":
+            continue
+        out.append(
+            f"  LEAK        {row['region']}: "
+            f"{row['alloc_velocity_bytes'] / 1e6:.2f} MB/run allocated, "
+            f"reclaim rate {row['reclaim_rate']:.1%}, net "
+            f"{row['net_median_bytes'] / 1e6:+.2f} MB/run "
+            f"({row['net_positive_runs']}/{row['runs']} runs positive, "
+            f"p={row['p']:.2g}), confidence {row['confidence']}"
+        )
+    for name, sig in sorted((leaks.get("process") or {}).items()):
+        if sig["verdict"] == "leak":
+            out.append(
+                f"  LEAK        process {name}: median slope "
+                f"{sig['median_slope_bytes_s'] / 1e3:.1f} kB/s "
+                f"({sig['positive_runs']}/{sig['runs']} runs climbing, "
+                f"p={sig['p']:.2g}), confidence {sig['confidence']}"
+            )
+    out.append(f"verdict: {doc.get('verdict', '?')}")
+    return "\n".join(out)
+
+
+def smoke() -> str:
+    """End-to-end self-check used by ``analysis fleet --smoke`` and CI:
+    generate the canonical synthetic populations, analyze each, and assert
+    the contract — stable is clean, the step and drift regions are flagged
+    with their names and effect sizes, the leak region and process leak
+    verdicts fire, and the summary bytes are ingestion-order independent.
+    Returns a one-line success message."""
+    import shutil
+    import tempfile
+
+    from . import synth
+
+    tmp = tempfile.mkdtemp(prefix="repro-fleet-smoke-")
+    try:
+        roots = synth.write_all(tmp)
+        docs = {kind: build_fleet_summary([root]) for kind, root in roots.items()}
+        assert docs["stable"]["verdict"] == "ok", docs["stable"]["verdict"]
+        assert docs["stable"]["findings_total"] == 0
+
+        step = [f for f in docs["step"]["time"]["findings"]
+                if f["verdict"] == "regression"]
+        assert step and step[0]["region"] == "app:transform", step
+        assert abs(step[0]["effect_size"]) >= EFFECT_LARGE
+
+        drift = [f for f in docs["drift"]["time"]["findings"]
+                 if f["verdict"] == "regression"]
+        assert drift and drift[0]["region"] == "app:decode", drift
+
+        leak_doc = docs["leak"]["leaks"]
+        leak_rows = [r for r in leak_doc["regions"] if r["verdict"] == "leak"]
+        assert leak_rows and leak_rows[0]["region"] == "app:cache_fill", leak_rows
+        assert leak_doc["process"]["heap"]["verdict"] == "leak"
+        assert "leaking" in docs["leak"]["verdict"]
+
+        # Ingestion-order independence: per-run-dir roots, shuffled.
+        run_dirs = sorted(
+            os.path.join(roots["step"], d) for d in os.listdir(roots["step"])
+        )
+        a = json.dumps(build_fleet_summary(run_dirs), sort_keys=True)
+        b = json.dumps(build_fleet_summary(list(reversed(run_dirs))), sort_keys=True)
+        assert a == b, "fleet summary must not depend on ingestion order"
+        return (
+            "fleet smoke OK: stable clean, step/drift flagged "
+            f"(effect {step[0]['effect_size']:+.2f} / {drift[0]['effect_size']:+.2f}), "
+            "leak region + process heap flagged, deterministic bytes"
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

@@ -1,0 +1,248 @@
+"""The CI perf gate — the repo's own perf trajectory as a monitored fleet.
+
+A *trajectory* is a directory of snapshots, one per CI run / PR, each
+snapshot a copy of the benchmark artifacts (``benchmarks/artifacts/*.json``)
+produced by that run::
+
+    .perf-trajectory/
+        00000-a1b2c3d4/   governed_overhead.json  memory_overhead.json ...
+        00001-e5f6a7b8/   ...
+
+Every numeric scalar leaf of every artifact becomes a metric series across
+snapshots (``governed_overhead.beta_us.governed``, ...).  Metrics whose
+name reveals a *worse direction* (``beta``/``dilation``/``overhead``/
+``.._ns``/``drop``/... -> higher is worse; ``..per_s``/``throughput`` ->
+lower is worse) are gated with the same effect-size machinery as the run
+analyzer; everything else (configuration echoes, counts) is left
+unwatched.  The newest snapshot is the candidate window — usually a single
+run, so the comparison takes :func:`compare_windows`'s robust MAD-outlier
+path rather than pretending one sample has a distribution.
+
+Exit-code contract (via ``analysis fleet gate``): 0 = no confirmed
+regression (including the seeding phase while the baseline is shorter than
+``min_baseline``), 1 = confirmed regression, 2 = missing/corrupt inputs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..schema import MissingArtifact, stamp
+from .stats import EFFECT_MEDIUM, compare_windows
+
+#: Snapshots needed before the gate starts judging; until then every run
+#: seeds the baseline and passes.
+MIN_BASELINE = 4
+
+#: Gate-mode relative-change floor — CI timing noise is larger than a
+#: controlled population's, so the gate asks for a bigger median move.
+GATE_MIN_REL = 0.10
+
+_LOWER_WORSE = ("per_s", "throughput", "records_per", "events_per")
+_HIGHER_WORSE = (
+    "beta", "dilation", "overhead", "fraction", "drop", "pause", "lag",
+    "publish", "_ns", "_us", "_ms",
+)
+
+_SNAP_RE = re.compile(r"^(\d{5})(?:-(.+))?$")
+
+
+def metric_direction(name: str) -> int:
+    """+1 = higher is worse, -1 = lower is worse, 0 = unwatched.
+
+    Matched on the lowercase dotted metric name; lower-is-worse patterns
+    win first so ``records_per_s`` is throughput, not a ``.._s`` timing.
+    """
+    low = name.lower()
+    leaf = low.rsplit(".", 1)[-1]
+    if any(p in low for p in _LOWER_WORSE):
+        return -1
+    if any(p in low for p in _HIGHER_WORSE) or leaf.endswith("_s"):
+        return 1
+    return 0
+
+
+def flatten_metrics(stem: str, doc: Any, prefix: str = "") -> Dict[str, float]:
+    """Numeric scalar leaves of ``doc`` as ``{stem.dotted.path: value}``.
+
+    Lists (config arrays, per-size medians) and bools are skipped; only
+    int/float leaves become trajectory metrics."""
+    out: Dict[str, float] = {}
+    if isinstance(doc, dict):
+        for key, value in doc.items():
+            if key == "report_schema_version":
+                continue
+            path = f"{prefix}.{key}" if prefix else f"{stem}.{key}"
+            out.update(flatten_metrics(stem, value, prefix=path))
+    elif isinstance(doc, bool):
+        pass
+    elif isinstance(doc, (int, float)) and prefix:
+        if math.isfinite(doc):
+            out[prefix] = float(doc)
+    return out
+
+
+def _snapshot_key(name: str) -> Optional[Tuple[int, str]]:
+    m = _SNAP_RE.match(name)
+    if m is None:
+        return None
+    return int(m.group(1)), name
+
+
+def load_trajectory(traj_dir: str) -> List[Dict[str, Any]]:
+    """The trajectory's snapshots, oldest first: ``[{"name", "metrics"}]``.
+
+    Raises :class:`MissingArtifact` when the directory does not exist or a
+    snapshot artifact is corrupt JSON (a truncated upload must fail the
+    gate loudly with exit 2, not silently shrink the baseline)."""
+    if not os.path.isdir(traj_dir):
+        raise MissingArtifact(
+            f"no trajectory directory at {traj_dir or '.'} — create it (or "
+            f"pass --append to seed the first snapshot)"
+        )
+    snaps: List[Tuple[int, str]] = []
+    for entry in sorted(os.listdir(traj_dir)):
+        key = _snapshot_key(entry)
+        if key is not None and os.path.isdir(os.path.join(traj_dir, entry)):
+            snaps.append(key)
+    snaps.sort()
+    out = []
+    for _, name in snaps:
+        metrics: Dict[str, float] = {}
+        for path in sorted(glob.glob(os.path.join(traj_dir, name, "*.json"))):
+            stem = os.path.splitext(os.path.basename(path))[0]
+            try:
+                with open(path) as fh:
+                    doc = json.load(fh)
+            except (OSError, ValueError) as exc:
+                raise MissingArtifact(
+                    f"corrupt trajectory artifact {path}: {exc}"
+                ) from exc
+            metrics.update(flatten_metrics(stem, doc))
+        out.append({"name": name, "metrics": metrics})
+    return out
+
+
+def append_snapshot(traj_dir: str, src_dir: str, label: Optional[str] = None) -> str:
+    """Copy ``src_dir``'s ``*.json`` artifacts into the next snapshot slot
+    (``NNNNN[-label]``) and return the snapshot name.  Raises
+    :class:`MissingArtifact` when the source has no artifacts."""
+    paths = sorted(glob.glob(os.path.join(src_dir, "*.json")))
+    if not paths:
+        raise MissingArtifact(
+            f"no *.json benchmark artifacts in {src_dir or '.'} — run the "
+            f"benchmarks/*.py --smoke set first"
+        )
+    os.makedirs(traj_dir, exist_ok=True)
+    indices = [
+        key[0]
+        for entry in os.listdir(traj_dir)
+        if (key := _snapshot_key(entry)) is not None
+    ]
+    nxt = (max(indices) + 1) if indices else 0
+    safe_label = re.sub(r"[^A-Za-z0-9_.-]", "-", label) if label else None
+    name = f"{nxt:05d}" + (f"-{safe_label}" if safe_label else "")
+    dst = os.path.join(traj_dir, name)
+    os.makedirs(dst, exist_ok=True)
+    for path in paths:
+        shutil.copy(path, os.path.join(dst, os.path.basename(path)))
+    return name
+
+
+def gate_summary(
+    traj_dir: str,
+    candidate: int = 1,
+    min_baseline: int = MIN_BASELINE,
+    alpha: float = 0.05,
+    min_effect: float = EFFECT_MEDIUM,
+    min_rel: float = GATE_MIN_REL,
+) -> Dict[str, Any]:
+    """Judge the newest ``candidate`` snapshots against the rest.
+
+    Returns the gate-mode fleet summary document (schema-stamped,
+    deterministic for a given trajectory).  ``verdict``: ``seeding`` while
+    the baseline is shorter than ``min_baseline``, else ``regressed`` /
+    ``ok``."""
+    snaps = load_trajectory(traj_dir)
+    if not snaps:
+        raise MissingArtifact(
+            f"trajectory {traj_dir} has no snapshots — append one with "
+            f"--append DIR"
+        )
+    c = max(1, min(candidate, len(snaps) - 1)) if len(snaps) > 1 else 0
+    base_snaps = snaps[: len(snaps) - c]
+    cand_snaps = snaps[len(snaps) - c:]
+    seeding = len(base_snaps) < min_baseline
+    names = sorted({m for s in snaps for m in s["metrics"]})
+    findings: List[Dict[str, Any]] = []
+    watched = unwatched = 0
+    for name in names:
+        direction = metric_direction(name)
+        if direction == 0:
+            unwatched += 1
+            continue
+        base = [s["metrics"][name] for s in base_snaps if name in s["metrics"]]
+        cand = [s["metrics"][name] for s in cand_snaps if name in s["metrics"]]
+        # A metric must exist in most of the baseline and in the candidate
+        # to be judged (benchmarks come and go across PRs).
+        if not cand or len(base) < max(min_baseline, (len(base_snaps) + 1) // 2):
+            continue
+        watched += 1
+        if seeding:
+            continue
+        verdict = compare_windows(
+            base,
+            cand,
+            higher_is_worse=direction > 0,
+            alpha=alpha,
+            min_effect=min_effect,
+            min_rel=min_rel,
+        )
+        if verdict["verdict"] in ("regression", "improvement"):
+            findings.append(dict(verdict, metric=name, direction=direction))
+    findings.sort(
+        key=lambda f: (
+            f["verdict"] != "regression",
+            -abs(f.get("mad_z") or 0.0),
+            -abs(f["effect_size"]),
+            f["metric"],
+        )
+    )
+    regressions = sum(1 for f in findings if f["verdict"] == "regression")
+    doc = stamp(
+        {
+            "kind": "fleet",
+            "mode": "gate",
+            "trajectory": traj_dir,
+            "snapshots": [s["name"] for s in snaps],
+            "windows": {
+                "baseline_n": len(base_snaps),
+                "candidate_n": len(cand_snaps),
+                "min_baseline": min_baseline,
+            },
+            "params": {
+                "alpha": alpha,
+                "min_effect": min_effect,
+                "min_rel": min_rel,
+                "candidate": candidate,
+            },
+            "metrics_watched": watched,
+            "metrics_unwatched": unwatched,
+            "findings": findings,
+            "findings_total": regressions,
+            "series": {
+                f["metric"]: [
+                    s["metrics"].get(f["metric"]) for s in snaps
+                ]
+                for f in findings
+            },
+            "verdict": "seeding" if seeding else ("regressed" if regressions else "ok"),
+        }
+    )
+    return doc

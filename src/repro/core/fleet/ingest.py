@@ -1,0 +1,166 @@
+"""Run-population ingestion for the fleet analyzer.
+
+A "population" is N run directories of the same workload over time — CI
+runs, cron'd smoke runs, canary deployments.  Discovery reuses the merge
+layer's :func:`repro.core.merge.find_runs` (with ``meta.json`` as the
+marker so profile-only runs, which never write ``defs.json``, are still
+found) and its dedup semantics: exact duplicates — same experiment, rank
+and clock epoch, i.e. the same launch copied into the root twice — keep
+one deterministic survivor and report the rest as dropped, mirroring
+``merge_runs``'s newest-epoch-wins rank dedup.
+
+Per run, only the population-level statistics are kept resident (exclusive
+ns / visits per region, allocation columns per region, whole-process
+heap/RSS timeline slopes) — ingesting thousands of runs holds a few
+hundred bytes per run per region, never the event streams.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..schema import MissingArtifact
+from .stats import slope_per_second
+
+
+@dataclass
+class RunStat:
+    """One population member, reduced to its per-region statistics."""
+
+    run_dir: str
+    experiment: str = ""
+    rank: int = 0
+    epoch_time_ns: int = 0
+    #: region -> exclusive ns / visits (profile.json flat table)
+    excl_ns: Dict[str, int] = field(default_factory=dict)
+    visits: Dict[str, int] = field(default_factory=dict)
+    kinds: Dict[str, str] = field(default_factory=dict)
+    #: region -> allocation columns (memory.json heap.regions)
+    alloc_bytes: Dict[str, int] = field(default_factory=dict)
+    freed_bytes: Dict[str, int] = field(default_factory=dict)
+    net_bytes: Dict[str, int] = field(default_factory=dict)
+    #: whole-process memsys signals (0.0 / None when memsys was off)
+    heap_slope_bytes_s: float = 0.0
+    rss_slope_bytes_s: float = 0.0
+    rss_peak_bytes: int = 0
+    heap_end_bytes: int = 0
+    has_profile: bool = False
+    has_memory: bool = False
+
+    def label(self) -> str:
+        return os.path.basename(self.run_dir.rstrip(os.sep)) or self.run_dir
+
+
+def load_run(run_dir: str) -> Optional[RunStat]:
+    """Reduce one run dir to a :class:`RunStat` (``None`` when it has
+    neither a readable profile.json nor memory.json — not a run)."""
+    # Local imports: analysis/memsys are the stable artifact seams.
+    from ..analysis import _load_artifact
+    from ..memsys import load_memory, overview, reclaim_rows, timelines
+
+    stat = RunStat(run_dir=run_dir)
+    try:
+        profile = _load_artifact(run_dir, "profile.json", "profiling")
+    except MissingArtifact:
+        profile = None
+    if profile is not None:
+        stat.has_profile = True
+        for name, vals in profile.get("flat", {}).items():
+            stat.excl_ns[name] = int(vals.get("excl_ns", 0))
+            stat.visits[name] = int(vals.get("visits", 0))
+            kind = vals.get("kind")
+            if kind:
+                stat.kinds[name] = str(kind)
+        meta = profile.get("meta") or {}
+    else:
+        meta = {}
+    memory = load_memory(run_dir)
+    if memory is not None:
+        stat.has_memory = True
+        for row in reclaim_rows(memory):
+            stat.alloc_bytes[row["region"]] = row["alloc_bytes"]
+            stat.freed_bytes[row["region"]] = row["freed_bytes"]
+            stat.net_bytes[row["region"]] = row["net_bytes"]
+        ov = overview(memory)
+        stat.rss_peak_bytes = ov["rss_peak_bytes"]
+        stat.heap_end_bytes = ov["heap_end_bytes"]
+        series = timelines(memory)
+        # The series store MB (for Perfetto counter tracks); slopes are
+        # reported in bytes/s, the leak literature's unit.
+        stat.heap_slope_bytes_s = slope_per_second(series.get("mem.heap_mb", [])) * 1e6
+        stat.rss_slope_bytes_s = slope_per_second(series.get("mem.rss_mb", [])) * 1e6
+        meta = meta or (memory.get("meta") or {})
+    if profile is None and memory is None:
+        return None
+    # meta.json is authoritative when present (always written); profile /
+    # memory carry an embedded copy as fallback for partial run dirs.
+    from ..report.model import _load_json
+
+    meta = _load_json(run_dir, "meta.json") or meta
+    topo = meta.get("topology") or {}
+    stat.rank = int(topo.get("rank", meta.get("rank", 0)) or 0)
+    stat.experiment = str(meta.get("experiment") or "")
+    stat.epoch_time_ns = int(meta.get("epoch_time_ns", 0) or 0)
+    return stat
+
+
+def discover(roots: Sequence[str], experiment: Optional[str] = None) -> List[str]:
+    """Candidate run dirs under ``roots``: every root that is itself a run
+    dir plus every run found by the merge layer's discovery (``meta.json``
+    marker).  Raises :class:`MissingArtifact` for a nonexistent root."""
+    from ..merge import find_runs
+
+    dirs: List[str] = []
+    for root in roots:
+        if not os.path.isdir(root):
+            raise MissingArtifact(
+                f"no such run population root: {root or '.'} — pass run "
+                f"directories or a directory containing them"
+            )
+        if os.path.exists(os.path.join(root, "meta.json")):
+            dirs.append(root)
+        dirs.extend(find_runs(root, experiment=experiment, marker="meta.json"))
+    # De-dup paths while keeping them sorted for deterministic ingestion.
+    return sorted(set(os.path.normpath(d) for d in dirs))
+
+
+def ingest(
+    roots: Sequence[str], experiment: Optional[str] = None
+) -> Tuple[List[RunStat], List[Dict[str, Any]]]:
+    """Load every run under ``roots`` into the population.
+
+    Returns ``(runs, dropped)`` with ``runs`` ordered by clock epoch (ties
+    broken by path, so ingestion order never changes the result) and
+    ``dropped`` the exact-duplicate run dirs removed by dedup.  Raises
+    :class:`MissingArtifact` when no usable run is found at all.
+    """
+    stats: List[RunStat] = []
+    for d in discover(roots, experiment=experiment):
+        stat = load_run(d)
+        if stat is not None:
+            stats.append(stat)
+    if not stats:
+        raise MissingArtifact(
+            f"no runs with profile.json or memory.json under "
+            f"{', '.join(roots) or '.'} — is this a run population root?"
+        )
+    stats.sort(key=lambda s: (s.epoch_time_ns, s.label(), s.run_dir))
+    survivors: Dict[Tuple[str, int, int], RunStat] = {}
+    dropped: List[Dict[str, Any]] = []
+    for stat in stats:
+        key = (stat.experiment, stat.rank, stat.epoch_time_ns)
+        cur = survivors.get(key)
+        if cur is None:
+            survivors[key] = stat
+        else:
+            # Same launch present twice: the lexically-first path (already
+            # in ``survivors`` thanks to the sort) wins deterministically.
+            dropped.append(
+                {"run_dir": stat.run_dir, "duplicate_of": cur.run_dir}
+            )
+    runs = sorted(
+        survivors.values(), key=lambda s: (s.epoch_time_ns, s.label(), s.run_dir)
+    )
+    return runs, dropped

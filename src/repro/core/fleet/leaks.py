@@ -1,0 +1,150 @@
+"""Leak detection over memsys signals, fleet-wide.
+
+The per-run memory report shows *curves*; this pass turns them into
+*verdicts*, following the allocation-velocity vs reclaim-rate shape of
+scalene's leak analysis:
+
+* **Per region** (heap attribution columns across runs): a region leaks
+  when it keeps allocating (``alloc_velocity`` = median attributed alloc
+  bytes per run above a floor), reclaims little of it (``reclaim_rate`` =
+  total freed / total alloc below the threshold), and its *net* bytes are
+  consistently positive across runs (exact sign test at ``alpha``) — one
+  noisy run cannot fake a leak, and a cache that frees on churn cannot
+  either.
+* **Whole process** (RSS / traced-heap timelines per run): each run's
+  timeline is reduced to a least-squares slope in bytes/s; the process
+  leaks when the runs' slopes are consistently positive (sign test) and
+  the median slope clears a floor.  This catches leaks outside the
+  attributed regions — C extensions, caches on unmeasured threads.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+from .ingest import RunStat
+from .stats import confidence_from_p, median, sign_test_p
+
+#: Default reclaim-rate threshold: regions freeing at least this fraction
+#: of what they allocate are churn, not leaks.
+RECLAIM_THRESHOLD = 0.5
+
+#: Default floor on the per-run attributed allocation median (bytes) — a
+#: region must actually allocate to leak.
+MIN_ALLOC_VELOCITY = 64 * 1024
+
+#: Default floor on the whole-process timeline slope (bytes/s).
+MIN_SLOPE_BYTES_S = 64 * 1024
+
+
+def region_leaks(
+    runs: Sequence[RunStat],
+    alpha: float = 0.05,
+    reclaim_threshold: float = RECLAIM_THRESHOLD,
+    min_alloc_velocity: float = MIN_ALLOC_VELOCITY,
+) -> List[Dict[str, Any]]:
+    """Per-region leak verdicts across the population (leaks first, then
+    by allocation velocity; regions without memsys data are absent)."""
+    regions = sorted({name for r in runs for name in r.alloc_bytes})
+    rows: List[Dict[str, Any]] = []
+    for region in regions:
+        alloc = [float(r.alloc_bytes[region]) for r in runs if region in r.alloc_bytes]
+        freed = [float(r.freed_bytes.get(region, 0)) for r in runs if region in r.alloc_bytes]
+        net = [float(r.net_bytes.get(region, 0)) for r in runs if region in r.alloc_bytes]
+        total_alloc = sum(alloc)
+        reclaim = (sum(freed) / total_alloc) if total_alloc > 0 else 1.0
+        velocity = median(alloc)
+        positive = sum(1 for v in net if v > 0)
+        p = sign_test_p(positive, len(net))
+        leaking = (
+            velocity >= min_alloc_velocity
+            and reclaim < reclaim_threshold
+            and p <= alpha
+        )
+        rows.append(
+            {
+                "region": region,
+                "runs": len(net),
+                "alloc_velocity_bytes": velocity,
+                "reclaim_rate": reclaim,
+                "net_median_bytes": median(net),
+                "net_positive_runs": positive,
+                "p": p,
+                "verdict": "leak" if leaking else "ok",
+                "confidence": confidence_from_p(p) if leaking else "none",
+            }
+        )
+    rows.sort(
+        key=lambda r: (
+            r["verdict"] != "leak",
+            -r["alloc_velocity_bytes"],
+            r["region"],
+        )
+    )
+    return rows
+
+
+def _process_signal(
+    slopes: Sequence[float], alpha: float, min_slope: float
+) -> Dict[str, Any]:
+    vals = list(slopes)
+    positive = sum(1 for s in vals if s > 0)
+    p = sign_test_p(positive, len(vals))
+    med = median(vals)
+    leaking = bool(vals) and med >= min_slope and p <= alpha
+    return {
+        "runs": len(vals),
+        "median_slope_bytes_s": med,
+        "positive_runs": positive,
+        "p": p,
+        "verdict": "leak" if leaking else "ok",
+        "confidence": confidence_from_p(p) if leaking else "none",
+        "slopes_bytes_s": vals,
+    }
+
+
+def process_leaks(
+    runs: Sequence[RunStat],
+    alpha: float = 0.05,
+    min_slope_bytes_s: float = MIN_SLOPE_BYTES_S,
+) -> Dict[str, Any]:
+    """Whole-process leak verdicts from the heap and RSS timeline slopes
+    of every run that carried memsys data."""
+    with_mem = [r for r in runs if r.has_memory]
+    return {
+        "heap": _process_signal(
+            [r.heap_slope_bytes_s for r in with_mem], alpha, min_slope_bytes_s
+        ),
+        "rss": _process_signal(
+            [r.rss_slope_bytes_s for r in with_mem], alpha, min_slope_bytes_s
+        ),
+    }
+
+
+def leak_section(
+    runs: Sequence[RunStat],
+    alpha: float = 0.05,
+    reclaim_threshold: float = RECLAIM_THRESHOLD,
+    min_alloc_velocity: float = MIN_ALLOC_VELOCITY,
+    min_slope_bytes_s: float = MIN_SLOPE_BYTES_S,
+    top: int = 25,
+) -> Dict[str, Any]:
+    """The fleet summary's ``leaks`` section: per-region rows (capped at
+    ``top``, leak verdicts always kept) + whole-process verdicts."""
+    rows = region_leaks(
+        runs,
+        alpha=alpha,
+        reclaim_threshold=reclaim_threshold,
+        min_alloc_velocity=min_alloc_velocity,
+    )
+    leaks = [r for r in rows if r["verdict"] == "leak"]
+    kept = rows[:top] if top > 0 else rows
+    for row in leaks:  # never cut a leak verdict off the table
+        if row not in kept:
+            kept.append(row)
+    return {
+        "regions": kept,
+        "region_leaks": len(leaks),
+        "checked_regions": len(rows),
+        "process": process_leaks(runs, alpha=alpha, min_slope_bytes_s=min_slope_bytes_s),
+    }

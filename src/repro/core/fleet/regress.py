@@ -1,0 +1,146 @@
+"""Per-region regression detection over a run population.
+
+The population is split into a *baseline window* (the older runs) and a
+*candidate window* (the newest runs); every region's per-run exclusive-time
+and allocation distributions are compared window-vs-window with the
+effect-size kernel (:func:`repro.core.fleet.stats.compare_windows`).  No
+raw thresholds anywhere: a region regresses when the rank test says the
+windows differ (p <= alpha), the effect is at least medium (|Cliff's
+delta|), and the median moved by at least ``min_rel`` in the *worse*
+direction (higher time / higher alloc).  Improvements are reported too —
+a perf win showing up in the fleet view is signal, not noise.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from .ingest import RunStat
+from .stats import EFFECT_MEDIUM, compare_windows
+
+#: Regions seen in fewer than this fraction of the window's runs are not
+#: compared — a region that only exists in two runs has no distribution.
+MIN_PRESENCE = 0.5
+
+
+def default_candidate(n_runs: int) -> int:
+    """Default candidate-window size for an ``n_runs`` population: a third
+    of the population, clamped to [1, 8]."""
+    return max(1, min(n_runs // 3, 8))
+
+
+def split_windows(runs: Sequence[RunStat], candidate: int = 0):
+    """Split epoch-ordered ``runs`` into (baseline, candidate) windows.
+    ``candidate <= 0`` picks :func:`default_candidate`."""
+    n = len(runs)
+    c = candidate if candidate > 0 else default_candidate(n)
+    c = min(c, max(n - 1, 0))
+    return list(runs[: n - c]), list(runs[n - c:])
+
+
+def _series(
+    runs: Sequence[RunStat], region: str, column: str
+) -> List[float]:
+    """The per-run series of one region column, absent runs skipped."""
+    out = []
+    for r in runs:
+        table = getattr(r, column)
+        if region in table:
+            out.append(float(table[region]))
+    return out
+
+
+def region_findings(
+    baseline: Sequence[RunStat],
+    candidate: Sequence[RunStat],
+    column: str = "excl_ns",
+    metric: str = "excl_ns",
+    alpha: float = 0.05,
+    min_effect: float = EFFECT_MEDIUM,
+    min_rel: float = 0.05,
+    min_abs: float = 0.0,
+) -> Dict[str, Any]:
+    """Window-vs-window comparison of every region's ``column`` series.
+
+    Returns ``{"findings": [...], "checked_regions": n, "skipped_regions":
+    n}``; findings carry the full :func:`compare_windows` verdict dict plus
+    the region name and metric, regressions first, sorted by effect size.
+    ``min_abs`` drops regions whose candidate median is below it (noise
+    floor: a 2x shift on a 3 µs region is not a fleet event).
+    """
+    regions = sorted(
+        {name for r in list(baseline) + list(candidate) for name in getattr(r, column)}
+    )
+    findings: List[Dict[str, Any]] = []
+    checked = skipped = 0
+    for region in regions:
+        base = _series(baseline, region, column)
+        cand = _series(candidate, region, column)
+        # Presence gate: the region must exist in enough of each window to
+        # have a distribution at all (new/vanished regions are future work
+        # for a dedicated churn section, not fake regressions).
+        if (
+            len(base) < max(1, MIN_PRESENCE * len(baseline))
+            or len(cand) < max(1, MIN_PRESENCE * len(candidate))
+        ):
+            skipped += 1
+            continue
+        checked += 1
+        verdict = compare_windows(
+            base,
+            cand,
+            higher_is_worse=True,
+            alpha=alpha,
+            min_effect=min_effect,
+            min_rel=min_rel,
+        )
+        if verdict["verdict"] in ("regression", "improvement"):
+            if verdict["candidate"]["median"] < min_abs and verdict["baseline"]["median"] < min_abs:
+                skipped += 1
+                continue
+            findings.append(dict(verdict, region=region, metric=metric))
+    findings.sort(
+        key=lambda f: (
+            f["verdict"] != "regression",       # regressions first
+            -abs(f["effect_size"]),
+            -abs(f["rel_change"] or 0.0),
+            f["region"],
+        )
+    )
+    return {
+        "findings": findings,
+        "checked_regions": checked,
+        "skipped_regions": skipped,
+    }
+
+
+def sparkline_series(
+    runs: Sequence[RunStat],
+    findings: Sequence[Dict[str, Any]],
+    column: str = "excl_ns",
+    top: int = 12,
+) -> Dict[str, List[Optional[float]]]:
+    """Per-run series for the report's fleet sparklines: every finding's
+    region plus the biggest regions by candidate median, capped at ``top``.
+    Absent runs yield ``None`` points (renderers skip them)."""
+    chosen: List[str] = []
+    for f in findings:
+        if f["region"] not in chosen:
+            chosen.append(f["region"])
+    if len(chosen) < top:
+        totals: Dict[str, float] = {}
+        for r in runs:
+            for name, v in getattr(r, column).items():
+                totals[name] = totals.get(name, 0.0) + float(v)
+        for name in sorted(totals, key=lambda n: (-totals[n], n)):
+            if name not in chosen:
+                chosen.append(name)
+            if len(chosen) >= top:
+                break
+    out: Dict[str, List[Optional[float]]] = {}
+    for name in chosen[:top]:
+        out[name] = [
+            float(getattr(r, column)[name]) if name in getattr(r, column) else None
+            for r in runs
+        ]
+    return out

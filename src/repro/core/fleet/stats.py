@@ -1,0 +1,300 @@
+"""Statistics kernel for fleet-scale regression detection.
+
+Run-population analytics cannot use raw thresholds: CI machines, schedulers
+and allocator state add noise that a single pairwise ``--diff`` (or a fixed
+"20% slower" rule) cannot distinguish from a real regression.  Everything
+here is therefore *rank-based and effect-size driven*:
+
+* :func:`cliffs_delta` — Cliff's delta, the ordinal effect size in
+  ``[-1, 1]``: the probability a candidate sample exceeds a baseline sample
+  minus the reverse.  Robust to outliers, scale-free, exactly antisymmetric
+  under swapping the windows.
+* :func:`mann_whitney` — the Mann-Whitney U rank-sum test (two-sided,
+  tie-corrected normal approximation with continuity correction): "are
+  these two windows draws from the same distribution?"
+* :func:`compare_windows` — the decision procedure combining both (plus a
+  robust MAD-outlier fallback when a window is too small for a rank test,
+  which is the CI-gate case of one candidate snapshot vs N baselines).
+
+Degenerate-input contract (property-tested): every function accepts empty,
+single-element, constant, and duplicate-heavy inputs without raising, and
+never returns NaN/inf — non-finite input values are dropped up front.
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+from bisect import bisect_left, bisect_right
+from typing import Any, Dict, List, Optional, Sequence
+
+#: |Cliff's delta| interpretation thresholds (Romano et al.): below small
+#: is negligible; the default regression gate asks for at least MEDIUM.
+EFFECT_SMALL = 0.147
+EFFECT_MEDIUM = 0.33
+EFFECT_LARGE = 0.474
+
+#: Smallest window size the rank test is allowed on; below it the
+#: MAD-outlier rule takes over (a U test on 1-2 samples is numerology).
+MIN_RANK_WINDOW = 3
+
+#: MAD z-score (robust sigmas) a small candidate window must exceed.
+MAD_K = 3.0
+
+#: Floor on the baseline's robust spread, as a fraction of |median| — a
+#: near-constant baseline must not hair-trigger the outlier rule on
+#: sub-percent wiggle.
+MAD_FLOOR_FRAC = 0.05
+
+
+def finite(values: Sequence[float]) -> List[float]:
+    """``values`` with every non-finite (NaN/inf) entry dropped — the
+    kernel's NaN-free input guarantee."""
+    return [float(v) for v in values if isinstance(v, (int, float)) and math.isfinite(v)]
+
+
+def median(values: Sequence[float]) -> float:
+    """Median of ``values`` (0.0 for an empty sequence, never raises)."""
+    vs = sorted(finite(values))
+    if not vs:
+        return 0.0
+    n = len(vs)
+    mid = n // 2
+    # Halve before adding: (a + b) / 2 overflows to inf near float max.
+    return vs[mid] if n % 2 else vs[mid - 1] / 2.0 + vs[mid] / 2.0
+
+
+def mad(values: Sequence[float]) -> float:
+    """Median absolute deviation (0.0 for fewer than 2 samples)."""
+    vs = finite(values)
+    if len(vs) < 2:
+        return 0.0
+    m = median(vs)
+    # abs(v - m) can overflow for opposite-sign huge values; saturate so
+    # the result honours the kernel's never-inf guarantee.
+    big = sys.float_info.max
+    return median([min(abs(v - m), big) for v in vs])
+
+
+def cliffs_delta(candidate: Sequence[float], baseline: Sequence[float]) -> float:
+    """Cliff's delta of ``candidate`` vs ``baseline``.
+
+    ``+1`` means every candidate sample exceeds every baseline sample
+    (candidate stochastically larger), ``-1`` the reverse, ``0`` perfect
+    overlap.  Either window empty -> ``0.0`` (no evidence, not an error).
+    Exactly antisymmetric: ``cliffs_delta(a, b) == -cliffs_delta(b, a)``.
+    """
+    a = finite(candidate)
+    b = sorted(finite(baseline))
+    if not a or not b:
+        return 0.0
+    m = len(b)
+    gt = lt = 0
+    for x in a:
+        gt += bisect_left(b, x)        # baseline samples strictly below x
+        lt += m - bisect_right(b, x)   # baseline samples strictly above x
+    return (gt - lt) / (len(a) * m)
+
+
+def mann_whitney(candidate: Sequence[float], baseline: Sequence[float]):
+    """Two-sided Mann-Whitney U test of ``candidate`` vs ``baseline``.
+
+    Returns ``(u, p)`` where ``u`` is the candidate-side U statistic and
+    ``p`` the two-sided p-value from the tie-corrected normal approximation
+    with continuity correction.  Degenerate inputs (either window empty,
+    or every value tied) return ``p = 1.0`` — never NaN, never a raise.
+    """
+    a = finite(candidate)
+    b = finite(baseline)
+    n, m = len(a), len(b)
+    if n == 0 or m == 0:
+        return 0.0, 1.0
+    pooled = sorted([(v, 0) for v in a] + [(v, 1) for v in b])
+    ranks_a = 0.0
+    tie_term = 0.0
+    i = 0
+    total = n + m
+    while i < total:
+        j = i
+        while j + 1 < total and pooled[j + 1][0] == pooled[i][0]:
+            j += 1
+        t = j - i + 1
+        avg_rank = (i + j) / 2.0 + 1.0  # ranks are 1-based
+        if t > 1:
+            tie_term += t * (t * t - 1.0)
+        for k in range(i, j + 1):
+            if pooled[k][1] == 0:
+                ranks_a += avg_rank
+        i = j + 1
+    u = ranks_a - n * (n + 1) / 2.0
+    mu = n * m / 2.0
+    var = n * m / 12.0 * ((total + 1) - tie_term / (total * (total - 1.0))) if total > 1 else 0.0
+    if var <= 0.0:  # all values tied: the windows are indistinguishable
+        return u, 1.0
+    z = (abs(u - mu) - 0.5) / math.sqrt(var)
+    if z < 0.0:
+        z = 0.0
+    p = math.erfc(z / math.sqrt(2.0))
+    # erfc underflow/rounding can nick just past 1.0; clamp to a valid p.
+    return u, min(max(p, 0.0), 1.0)
+
+
+def sign_test_p(positives: int, n: int) -> float:
+    """One-sided exact sign test: probability of >= ``positives`` successes
+    in ``n`` fair coin flips.  ``n == 0`` -> 1.0 (no evidence)."""
+    if n <= 0:
+        return 1.0
+    k = max(0, min(positives, n))
+    tail = sum(math.comb(n, i) for i in range(k, n + 1))
+    return min(1.0, tail / (2.0 ** n))
+
+
+def slope_per_second(series: Sequence[Sequence[float]]) -> float:
+    """Least-squares slope of a ``[[t_ns, value], ...]`` timeline in
+    value-units per second (0.0 for < 2 distinct timestamps)."""
+    pts = [(float(t), float(v)) for t, v in series
+           if math.isfinite(float(t)) and math.isfinite(float(v))]
+    if len(pts) < 2:
+        return 0.0
+    ts = [t / 1e9 for t, _ in pts]
+    vs = [v for _, v in pts]
+    n = len(pts)
+    mt = sum(ts) / n
+    mv = sum(vs) / n
+    den = sum((t - mt) ** 2 for t in ts)
+    if den <= 0.0:
+        return 0.0
+    slope = sum((t - mt) * (v - mv) for t, v in zip(ts, vs)) / den
+    return slope if math.isfinite(slope) else 0.0
+
+
+def confidence_from_p(p: Optional[float]) -> str:
+    """Map a p-value to the coarse confidence label carried in verdicts."""
+    if p is None:
+        return "heuristic"
+    if p < 0.001:
+        return "high"
+    if p < 0.01:
+        return "medium"
+    return "low"
+
+
+def effect_label(delta: float) -> str:
+    """Romano et al. qualitative label for a Cliff's delta magnitude."""
+    d = abs(delta)
+    if d >= EFFECT_LARGE:
+        return "large"
+    if d >= EFFECT_MEDIUM:
+        return "medium"
+    if d >= EFFECT_SMALL:
+        return "small"
+    return "negligible"
+
+
+def compare_windows(
+    baseline: Sequence[float],
+    candidate: Sequence[float],
+    higher_is_worse: bool = True,
+    alpha: float = 0.05,
+    min_effect: float = EFFECT_MEDIUM,
+    min_rel: float = 0.05,
+) -> Dict[str, Any]:
+    """Decide whether ``candidate`` regressed (or improved) vs ``baseline``.
+
+    Both windows big enough (>= :data:`MIN_RANK_WINDOW`): Mann-Whitney p
+    gated at ``alpha`` AND |Cliff's delta| gated at ``min_effect``.  A
+    too-small window (the one-snapshot CI-gate case) falls back to the
+    robust MAD-outlier rule: the candidate median must sit at least
+    :data:`MAD_K` robust sigmas outside the baseline, with the spread
+    floored at :data:`MAD_FLOOR_FRAC` of |median| so near-constant
+    baselines don't hair-trigger.  Either way the median shift must also
+    clear ``min_rel`` relative change — statistically-significant nothings
+    are reported as ``stable``.
+
+    Returns a JSON-ready dict: ``verdict`` (``regression`` / ``improvement``
+    / ``stable`` / ``insufficient``), ``method``, ``effect_size`` (Cliff's
+    delta, candidate vs baseline), ``effect``, ``p``, ``confidence``,
+    ``rel_change``, and per-window ``n`` / ``median`` / ``mean``.
+    """
+    base = finite(baseline)
+    cand = finite(candidate)
+    med_b = median(base)
+    med_c = median(cand)
+
+    def _mean(vs: List[float], med: float) -> float:
+        if not vs:
+            return 0.0
+        m = sum(vs) / len(vs)
+        # Extreme finite inputs can overflow the sum; the median is the
+        # robust stand-in and keeps the output NaN/inf-free.
+        return m if math.isfinite(m) else med
+
+    out: Dict[str, Any] = {
+        "baseline": {
+            "n": len(base),
+            "median": med_b,
+            "mean": _mean(base, med_b),
+        },
+        "candidate": {
+            "n": len(cand),
+            "median": med_c,
+            "mean": _mean(cand, med_c),
+        },
+        "effect_size": 0.0,
+        "effect": "negligible",
+        "p": None,
+        "method": None,
+        "confidence": "none",
+        "rel_change": None,
+        "verdict": "insufficient",
+    }
+    if not base or not cand:
+        return out
+    delta = cliffs_delta(cand, base)
+    out["effect_size"] = delta
+    out["effect"] = effect_label(delta)
+    if med_b != 0.0:
+        rel = (med_c - med_b) / abs(med_b)
+        if not math.isfinite(rel):
+            # Opposite-sign medians near float max: the difference itself
+            # overflowed — a shift that large is trivially past min_rel.
+            rel = math.copysign(sys.float_info.max, med_c - med_b if med_c != med_b else 1.0)
+        out["rel_change"] = rel
+        rel_ok = abs(rel) >= min_rel
+    else:
+        # Baseline median exactly zero: any nonzero candidate is "new".
+        out["rel_change"] = None
+        rel_ok = med_c != 0.0
+    if len(base) >= MIN_RANK_WINDOW and len(cand) >= MIN_RANK_WINDOW:
+        _, p = mann_whitney(cand, base)
+        out["p"] = p
+        out["method"] = "mann-whitney"
+        significant = p <= alpha and abs(delta) >= min_effect
+        worse = delta > 0.0
+    else:
+        spread = mad(base)
+        floor = MAD_FLOOR_FRAC * abs(med_b)
+        sigma = 1.4826 * max(spread, floor / 1.4826)
+        out["method"] = "mad-outlier"
+        if sigma <= 0.0:
+            # Constant-zero baseline: fall back on the rel_ok rule alone.
+            significant = med_c != med_b
+            z = 0.0
+        else:
+            z = (med_c - med_b) / sigma
+            if math.isnan(z):  # inf/inf: both windows astronomically spread
+                z = 0.0
+            elif math.isinf(z):
+                z = math.copysign(sys.float_info.max, z)
+            significant = abs(z) >= MAD_K
+        out["mad_z"] = z
+        worse = med_c > med_b
+    if not higher_is_worse:
+        worse = not worse
+    if significant and rel_ok:
+        out["verdict"] = "regression" if worse else "improvement"
+        out["confidence"] = confidence_from_p(out["p"])
+    else:
+        out["verdict"] = "stable"
+        out["confidence"] = "none"
+    return out

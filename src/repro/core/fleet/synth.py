@@ -1,0 +1,208 @@
+"""Synthetic run populations — fixtures for the fleet analyzer.
+
+Generates run directories carrying *real-schema* artifacts (meta.json,
+profile.json, memory.json exactly as the measurement writes them) for four
+canonical population shapes:
+
+* ``stable``   — stationary noise; the analyzer must report zero findings.
+* ``step``     — one region's exclusive time jumps +60% partway through
+  (a merged regression); must be flagged with a large effect size.
+* ``drift``    — one region grows a few percent per run (a slow
+  degradation no pairwise diff would catch); must be flagged.
+* ``leak``     — one region allocates heavily, reclaims almost nothing,
+  and the process heap/RSS timelines climb within every run; must produce
+  region and whole-process leak verdicts.
+
+Everything is seeded and string-keyed (``random.Random(str)`` hashes with
+SHA-512, stable across processes — never ``hash()``, which is randomized),
+so the same spec always yields byte-identical artifacts: the determinism
+tests and ``analysis fleet --smoke`` rely on that.
+
+The checked-in entry point for tests lives at
+``tests/fixtures/fleet/generate.py`` and simply drives
+:func:`write_population` / :func:`write_all`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+from typing import Any, Dict, List, Optional
+
+from ..schema import stamp
+
+#: Canonical population specs.  ``regions`` maps region -> (base excl_ns,
+#: kind); the special roles name which region carries the anomaly.
+CANONICAL: Dict[str, Dict[str, Any]] = {
+    "stable": {"runs": 18},
+    "step": {"runs": 18, "step_region": "app:transform", "step_at": 12, "step_factor": 1.6},
+    "drift": {"runs": 18, "drift_region": "app:decode", "drift_per_run": 1.035},
+    "leak": {"runs": 14, "leak_region": "app:cache_fill", "leak_growth": 1.05},
+}
+
+REGIONS: Dict[str, Any] = {
+    "user:step": (50_000_000, "user"),
+    "app:transform": (20_000_000, "python"),
+    "app:decode": (15_000_000, "python"),
+    "app:load": (8_000_000, "python"),
+    "builtins:sum": (5_000_000, "c"),
+}
+
+#: Heap-attribution bases: region -> (alloc bytes/run, reclaim fraction).
+ALLOC: Dict[str, Any] = {
+    "app:cache_fill": (8_000_000, 0.975),
+    "app:transform": (2_000_000, 0.95),
+    "app:decode": (1_000_000, 0.9),
+}
+
+BASE_EPOCH_NS = 1_700_000_000_000_000_000  # fixed, not wall clock
+RUN_SPACING_NS = 3_600 * 10**9  # one run per hour
+NOISE_SIGMA = 0.02
+
+
+def _rng(*key: Any) -> random.Random:
+    return random.Random(":".join(str(k) for k in key))
+
+
+def _series(start: float, slope_per_s: float, rng: random.Random,
+            points: int = 24, duration_s: float = 60.0) -> List[List[float]]:
+    t0 = 10**12
+    out = []
+    for i in range(points):
+        t_s = duration_s * i / (points - 1)
+        value = start + slope_per_s * t_s + rng.gauss(0.0, 0.05)
+        out.append([t0 + int(t_s * 1e9), round(value, 6)])
+    return out
+
+
+def write_run(out_dir: str, kind: str, index: int, spec: Dict[str, Any],
+              seed: int = 0) -> str:
+    """Write one synthetic run dir (meta/profile/memory.json) and return
+    its path."""
+    run_dir = os.path.join(out_dir, f"fleet-{kind}-{index:03d}")
+    os.makedirs(run_dir, exist_ok=True)
+    epoch = BASE_EPOCH_NS + index * RUN_SPACING_NS
+    meta = stamp(
+        {
+            "rank": 0,
+            "topology": {"rank": 0, "world_size": 1, "local_rank": 0, "mesh_shape": []},
+            "pid": 10_000 + index,
+            "experiment": f"fleet-{kind}",
+            "instrumenter": "profile",
+            "buffer_strategy": "numpy",
+            "epoch_time_ns": epoch,
+            "epoch_perf_ns": 10**12,
+            "finalize_time_ns": epoch + 60 * 10**9,
+            "n_regions": len(REGIONS),
+            "events_flushed": 1000,
+        }
+    )
+    pmeta = {
+        "rank": 0,
+        "topology": meta["topology"],
+        "pid": meta["pid"],
+        "experiment": meta["experiment"],
+        "instrumenter": "profile",
+        "substrates": ["profiling", "metrics", "memory"],
+        "epoch_time_ns": epoch,
+        "epoch_perf_ns": 10**12,
+    }
+
+    flat: Dict[str, Any] = {}
+    for region, (base_ns, rkind) in REGIONS.items():
+        rng = _rng(seed, kind, index, "time", region)
+        scale = rng.gauss(1.0, NOISE_SIGMA)
+        if region == spec.get("step_region") and index >= spec.get("step_at", 0):
+            scale *= spec["step_factor"]
+        if region == spec.get("drift_region"):
+            scale *= spec["drift_per_run"] ** index
+        excl = max(1, int(base_ns * scale))
+        flat[region] = {
+            "visits": 100,
+            "incl_ns": int(excl * 1.1),
+            "excl_ns": excl,
+            "kind": rkind,
+        }
+    profile = stamp({"meta": pmeta, "metrics": {}, "threads": {}, "flat": flat})
+
+    heap_regions: Dict[str, Any] = {}
+    for region, (base_alloc, reclaim) in ALLOC.items():
+        rng = _rng(seed, kind, index, "alloc", region)
+        alloc = base_alloc * rng.gauss(1.0, NOISE_SIGMA)
+        if region == spec.get("leak_region"):
+            alloc *= spec["leak_growth"] ** index
+            reclaim = 0.02  # almost nothing comes back
+        alloc = max(1, int(alloc))
+        freed = int(alloc * reclaim)
+        # Non-leaking regions jitter around net zero (churn), so the sign
+        # test sees an honest coin flip instead of a tiny constant bias.
+        net = alloc - freed if region == spec.get("leak_region") else int(
+            (alloc - freed) * rng.choice([-1.0, 1.0])
+        )
+        heap_regions[region] = {
+            "alloc_bytes": alloc,
+            "freed_bytes": freed,
+            "net_bytes": net,
+            "alloc_blocks": max(1, alloc // 512),
+            "flushes": 4,
+        }
+    leaking = "leak_region" in spec
+    slope_mb_s = 0.5 if leaking else 0.0  # ~524 kB/s, well over the floor
+    rng = _rng(seed, kind, index, "series")
+    rss0 = 30.0 + rng.gauss(0.0, 0.2)
+    memory = stamp(
+        {
+            "meta": pmeta,
+            "config": {"period_s": 0.01, "topn": 25},
+            "heap": {
+                "regions": heap_regions,
+                "dropped_regions": 0,
+                "start_bytes": 0,
+                "end_bytes": int((2.0 + slope_mb_s * 60) * 1e6),
+                "peak_bytes": int((2.5 + slope_mb_s * 60) * 1e6),
+                "threads": {},
+            },
+            "rss": {
+                "peak_bytes": int((rss0 + slope_mb_s * 60) * 1e6),
+                "end_bytes": int((rss0 + slope_mb_s * 60) * 1e6),
+                "samples": 24,
+                "source": "statm",
+            },
+            "gc": {
+                "collections": 12,
+                "pause_ns_total": 1_500_000,
+                "collected": 480,
+                "uncollectable": 0,
+                "per_generation": {},
+            },
+            "fds": {"peak": 8, "end": 8},
+            "series": {
+                "mem.rss_mb": _series(rss0, slope_mb_s, _rng(seed, kind, index, "rss")),
+                "mem.heap_mb": _series(2.0, slope_mb_s, _rng(seed, kind, index, "heap")),
+            },
+        }
+    )
+
+    for name, doc in (("meta.json", meta), ("profile.json", profile), ("memory.json", memory)):
+        with open(os.path.join(run_dir, name), "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+    return run_dir
+
+
+def write_population(out_dir: str, kind: str, runs: Optional[int] = None,
+                     seed: int = 0) -> str:
+    """Materialize one canonical population under ``out_dir/<kind>/`` and
+    return that root.  ``kind`` must be a :data:`CANONICAL` key."""
+    spec = dict(CANONICAL[kind])
+    n = runs if runs is not None else spec["runs"]
+    root = os.path.join(out_dir, kind)
+    os.makedirs(root, exist_ok=True)
+    for i in range(n):
+        write_run(root, kind, i, spec, seed=seed)
+    return root
+
+
+def write_all(out_dir: str, seed: int = 0) -> Dict[str, str]:
+    """All four canonical populations; returns ``{kind: root}``."""
+    return {kind: write_population(out_dir, kind, seed=seed) for kind in CANONICAL}

@@ -30,6 +30,7 @@ from .substrate import (  # noqa: F401
     MemorySubstrate,
     load_memory,
     overview,
+    reclaim_rows,
     region_rows,
     timelines,
 )
@@ -45,6 +46,7 @@ __all__ = [
     "load_memory",
     "open_fd_count",
     "overview",
+    "reclaim_rows",
     "region_rows",
     "rss_bytes",
     "timelines",

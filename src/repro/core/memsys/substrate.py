@@ -185,3 +185,28 @@ def timelines(doc: Dict[str, Any]) -> Dict[str, List[List[float]]]:
     """The ``mem.*`` counter series of a memory.json document as
     ``{name: [[t_ns, value], ...]}`` (empty when series were not kept)."""
     return {k: v for k, v in doc.get("series", {}).items() if v}
+
+
+def reclaim_rows(doc: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Per-region allocation/reclaim columns for leak analysis, sorted by
+    alloc bytes descending.  Each row: ``{"region", "alloc_bytes",
+    "freed_bytes", "net_bytes", "reclaim_rate"}`` where ``reclaim_rate`` is
+    ``freed / alloc`` (1.0 when the region allocated nothing — nothing to
+    reclaim is fully reclaimed).  The fleet leak detector's seam into
+    memory.json; keep it in sync with :func:`region_rows`."""
+    regions = doc.get("heap", {}).get("regions", {})
+    rows = []
+    for name, row in regions.items():
+        alloc = int(row.get("alloc_bytes", 0))
+        freed = int(row.get("freed_bytes", 0))
+        rows.append(
+            {
+                "region": name,
+                "alloc_bytes": alloc,
+                "freed_bytes": freed,
+                "net_bytes": int(row.get("net_bytes", alloc - freed)),
+                "reclaim_rate": (freed / alloc) if alloc > 0 else 1.0,
+            }
+        )
+    rows.sort(key=lambda r: (-r["alloc_bytes"], r["region"]))
+    return rows

@@ -208,12 +208,18 @@ def profile_summary(
     }
 
 
-def find_runs(root: str, experiment: Optional[str] = None) -> List[str]:
-    """Locate run directories (those containing defs.json) under ``root``.
+def find_runs(
+    root: str, experiment: Optional[str] = None, marker: str = "defs.json"
+) -> List[str]:
+    """Locate run directories (those containing ``marker``) under ``root``.
 
     ``experiment`` matches on the ``<experiment>-`` run-dir boundary (or the
     exact name), so sibling experiments sharing a prefix (``run`` vs
     ``run2``) never bleed into each other's merge.
+
+    The default marker is ``defs.json`` (merge needs event streams); the
+    fleet analyzer passes ``meta.json`` so profile-only runs — which never
+    write defs.json — join the population too.
     """
     runs = []
     for path in sorted(glob.glob(os.path.join(root, "*"))):
@@ -223,7 +229,7 @@ def find_runs(root: str, experiment: Optional[str] = None) -> List[str]:
             base = os.path.basename(path)
             if base != experiment and not base.startswith(experiment + "-"):
                 continue
-        if os.path.exists(os.path.join(path, "defs.json")):
+        if os.path.exists(os.path.join(path, marker)):
             runs.append(path)
     return runs
 

@@ -590,6 +590,155 @@ def _diff_section(doc: Dict[str, Any]) -> str:
     return "".join(out)
 
 
+def _fleet_verdict_cls(verdict: str) -> str:
+    return "ok" if verdict in ("ok", "seeding", "improvement", "stable") else "bad"
+
+
+def _fleet_findings_table(findings, value_fmt) -> str:
+    body = []
+    for f in findings[:25]:
+        name = f.get("region") or f.get("metric") or "?"
+        rel = f.get("rel_change")
+        p = f.get("p")
+        body.append(
+            f'<tr><td class="l"><span class="v {_fleet_verdict_cls(f["verdict"])}">'
+            f'{esc(f["verdict"])}</span></td>'
+            f'<td class="l" title="{esc(name)}">{esc(name)}</td>'
+            f'<td data-v="{f["baseline"]["median"]}">{value_fmt(f["baseline"]["median"])}</td>'
+            f'<td data-v="{f["candidate"]["median"]}">{value_fmt(f["candidate"]["median"])}</td>'
+            f'<td data-v="{rel if rel is not None else 0}">'
+            + ("new" if rel is None else f"{rel:+.1%}") + "</td>"
+            f'<td data-v="{f["effect_size"]}">{f["effect_size"]:+.2f} '
+            f'({esc(f["effect"])})</td>'
+            f'<td class="l">{"p=" + format(p, ".2g") if p is not None else esc(f.get("method") or "—")}'
+            f' · {esc(f["confidence"])}</td></tr>'
+        )
+    return (
+        '<table class="sortable"><thead><tr>'
+        '<th class="l">verdict <span class="dir"></span></th>'
+        '<th class="l">region / metric <span class="dir"></span></th>'
+        '<th>baseline <span class="dir"></span></th>'
+        '<th>candidate <span class="dir"></span></th>'
+        '<th>Δ <span class="dir"></span></th>'
+        '<th>effect <span class="dir"></span></th>'
+        '<th class="l">evidence</th></tr></thead>'
+        f"<tbody>{''.join(body)}</tbody></table>"
+    )
+
+
+def _fleet_sparklines(series: Dict[str, Any], note: str, limit: int = 8) -> str:
+    from .svg import sparkline
+
+    rows = []
+    for name in list(series)[:limit]:
+        pts = [
+            (float(i) * 1e9, float(v))
+            for i, v in enumerate(series[name] or [])
+            if v is not None
+        ]
+        svg = sparkline(pts)
+        if not svg:
+            continue
+        vals = [v for _, v in pts]
+        rows.append(
+            f'<div class="sparkrow"><div class="name mono">{esc(name)}</div>{svg}'
+            f'<div class="range">min {min(vals):,.3g} · max {max(vals):,.3g} · '
+            f"last {vals[-1]:,.3g}</div></div>"
+        )
+    if not rows:
+        return ""
+    return f'<p class="note">{esc(note)}</p>' + "".join(rows)
+
+
+def _fleet_section(doc: Dict[str, Any]) -> str:
+    fleet = doc.get("fleet")
+    if not fleet:
+        return ""
+    verdict = fleet.get("verdict", "?")
+    badge = (
+        f'<span class="v {_fleet_verdict_cls(verdict)}">{esc(verdict)}</span>'
+    )
+    w = fleet.get("windows") or {}
+    out = ["<h2>Fleet — run-population analytics</h2>"]
+    if fleet.get("mode") == "gate":
+        out.append(
+            f'<p class="sub">perf gate: {len(fleet.get("snapshots", []))} '
+            f"trajectory snapshot(s), {w.get('baseline_n', 0)} baseline / "
+            f"{w.get('candidate_n', 0)} candidate · "
+            f"{fleet.get('metrics_watched', 0)} watched metric(s) · verdict "
+            + badge + "</p>"
+        )
+        findings = fleet.get("findings") or []
+        if findings:
+            out.append(_fleet_findings_table(findings, lambda v: f"{v:,.4g}"))
+        out.append(
+            _fleet_sparklines(
+                fleet.get("series") or {},
+                "watched metrics across trajectory snapshots (x = snapshot index)",
+            )
+        )
+        return "".join(out)
+    out.append(
+        f'<p class="sub">{len(fleet.get("runs", []))} run(s), '
+        f"{w.get('baseline_n', 0)} baseline / {w.get('candidate_n', 0)} "
+        f"candidate (effect-size windows) · verdict " + badge + "</p>"
+    )
+    for title, key, fmt in (
+        ("Exclusive-time shifts", "time", _ms),
+        ("Allocation shifts", "alloc", _mb),
+    ):
+        section = fleet.get(key) or {}
+        findings = section.get("findings") or []
+        if findings:
+            out.append(f"<h3>{title}</h3>")
+            out.append(_fleet_findings_table(findings, fmt))
+    leaks = fleet.get("leaks") or {}
+    leak_rows = [r for r in leaks.get("regions", []) if r.get("verdict") == "leak"]
+    process = leaks.get("process") or {}
+    process_leaks = {k: v for k, v in sorted(process.items()) if v.get("verdict") == "leak"}
+    if leak_rows or process_leaks:
+        out.append("<h3>Leak verdicts</h3>")
+        body = []
+        for r in leak_rows:
+            body.append(
+                f'<tr><td class="l">{esc(r["region"])}</td>'
+                f'<td data-v="{r["alloc_velocity_bytes"]}">{_mb(r["alloc_velocity_bytes"])}</td>'
+                f'<td data-v="{r["reclaim_rate"]}">{r["reclaim_rate"]:.1%}</td>'
+                f'<td data-v="{r["net_median_bytes"]}">{_mb(r["net_median_bytes"])}</td>'
+                f'<td>{r["net_positive_runs"]}/{r["runs"]}</td>'
+                f'<td class="l">p={r["p"]:.2g} · {esc(r["confidence"])}</td></tr>'
+            )
+        for name, sig in process_leaks.items():
+            body.append(
+                f'<tr><td class="l">process {esc(name)}</td>'
+                f'<td data-v="{sig["median_slope_bytes_s"]}">'
+                f'{sig["median_slope_bytes_s"] / 1e3:,.1f} kB/s</td>'
+                f"<td>—</td><td>—</td>"
+                f'<td>{sig["positive_runs"]}/{sig["runs"]}</td>'
+                f'<td class="l">p={sig["p"]:.2g} · {esc(sig["confidence"])}</td></tr>'
+            )
+        out.append(
+            '<table><thead><tr><th class="l">region</th>'
+            "<th>alloc velocity /run</th><th>reclaim</th><th>net median /run</th>"
+            '<th>runs climbing</th><th class="l">evidence</th></tr></thead>'
+            f"<tbody>{''.join(body)}</tbody></table>"
+        )
+    elif leaks:
+        out.append(
+            f'<p class="note">no leak verdicts over '
+            f"{leaks.get('checked_regions', 0)} region(s) + process "
+            f"heap/RSS timelines.</p>"
+        )
+    series = fleet.get("series") or {}
+    out.append(
+        _fleet_sparklines(
+            (series.get("time") or {}),
+            "per-region exclusive time across the population (x = run index)",
+        )
+    )
+    return "".join(out)
+
+
 def _metrics_section(doc: Dict[str, Any]) -> str:
     metrics = doc.get("metrics")
     if not metrics:
@@ -627,6 +776,7 @@ def render_report(doc: Dict[str, Any]) -> str:
         _governor_section(doc),
         _plan_section(doc),
         _merge_section(doc),
+        _fleet_section(doc),
         _diff_section(doc),
         f'<p class="note">generated by repro.core.report · schema '
         f"v{doc.get(SCHEMA_KEY, '?')} · data: embedded JSON payload "

@@ -21,6 +21,7 @@ Layout (``report_schema_version`` stamped at the top level)::
     governor    {overview..., "actions": [...]} or None
     merge       merged_trace_summary.json content or None
     diff        {"base", "profile": rows, "memory": rows or None} or None
+    fleet       fleet_summary.json content or None (run-population verdicts)
 """
 
 from __future__ import annotations
@@ -184,11 +185,13 @@ def build_report(run_dir: str, diff_base: Optional[str] = None) -> Dict[str, Any
     governor = _load_json(run_dir, "governor.json")
     meta = _load_json(run_dir, "meta.json")
     merge = _load_json(run_dir, MERGE_SUMMARY)
-    if all(doc is None for doc in (profile, memory, metrics, governor, merge)):
+    fleet = _load_json(run_dir, "fleet_summary.json")
+    if all(doc is None for doc in (profile, memory, metrics, governor, merge, fleet)):
         raise MissingArtifact(
             f"no artifacts in {run_dir or '.'} — expected at least one of "
             f"profile.json / memory.json / metrics.json / governor.json / "
-            f"{MERGE_SUMMARY} (is this a run dir or merge root?)"
+            f"{MERGE_SUMMARY} / fleet_summary.json (is this a run dir, merge "
+            f"root or fleet root?)"
         )
     if meta is None:
         meta = (profile or memory or metrics or {}).get("meta") or {}
@@ -196,7 +199,8 @@ def build_report(run_dir: str, diff_base: Optional[str] = None) -> Dict[str, Any
     # at (the sections still render best-effort — fields we know may have
     # moved, which the warning makes diagnosable).
     newest = max(
-        (schema_version(doc) for doc in (profile, memory, metrics, governor, meta, merge)
+        (schema_version(doc)
+         for doc in (profile, memory, metrics, governor, meta, merge, fleet)
          if doc is not None),
         default=0,
     )
@@ -229,6 +233,7 @@ def build_report(run_dir: str, diff_base: Optional[str] = None) -> Dict[str, Any
             "merge": merge,
             "plan": _plan_section(run_dir, governor),
             "diff": _diff_section(run_dir, diff_base) if diff_base else None,
+            "fleet": fleet,
         }
     )
     return doc

@@ -1,0 +1,1 @@
+"""Synthetic fleet run-population fixtures (see generate.py)."""

@@ -1,0 +1,56 @@
+"""Materialize the canonical synthetic run populations for fleet tests.
+
+The population shapes (stable / step / drift / leak) and the real-schema
+artifact writer live in :mod:`repro.core.fleet.synth` so that
+``analysis fleet --smoke`` and the unit tests exercise the *same*
+generator.  This module is the checked-in driver: import
+:func:`materialize` from tests, or run it directly to inspect a
+population by hand::
+
+    PYTHONPATH=src python tests/fixtures/fleet/generate.py /tmp/fleet-pops
+    PYTHONPATH=src python -m repro.core.analysis fleet /tmp/fleet-pops/step
+
+Everything is seeded — the same ``seed`` always yields byte-identical
+artifacts, which the determinism tests rely on.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, Optional
+
+from repro.core.fleet import synth
+
+#: The canonical population names, in spec order.
+POPULATIONS = tuple(synth.CANONICAL)
+
+
+def materialize(out_dir: str, kind: Optional[str] = None, runs: Optional[int] = None,
+                seed: int = 0) -> Dict[str, str]:
+    """Write population(s) under ``out_dir`` and return ``{kind: root}``.
+
+    ``kind=None`` writes all four canonical populations; otherwise just
+    the named one (optionally overriding its run count).
+    """
+    if kind is None:
+        return synth.write_all(out_dir, seed=seed)
+    return {kind: synth.write_population(out_dir, kind, runs=runs, seed=seed)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("out_dir", help="directory to write populations under")
+    ap.add_argument("--kind", choices=POPULATIONS, default=None,
+                    help="one population only (default: all four)")
+    ap.add_argument("--runs", type=int, default=None,
+                    help="override the population's run count")
+    ap.add_argument("--seed", type=int, default=0)
+    ns = ap.parse_args(argv)
+    roots = materialize(ns.out_dir, kind=ns.kind, runs=ns.runs, seed=ns.seed)
+    for kind, root in sorted(roots.items()):
+        print(f"{kind}: {root}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

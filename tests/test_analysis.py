@@ -85,6 +85,12 @@ def test_missing_artifact_exit_codes_are_uniform(tmp_path, capsys):
         ["lint", str(empty)],
         ["concurrency", str(empty / "nope")],
         ["concurrency", str(empty)],  # dir form: no Python sources inside
+        ["fleet", str(empty)],  # shorthand analyze: no runs under root
+        ["fleet", "analyze", str(empty / "nope")],  # bad path: no such root
+        ["fleet", "analyze"],  # no roots and no --smoke
+        ["fleet", "gate", str(empty / "no-traj")],  # no trajectory dir
+        ["fleet", "show", str(empty)],  # dir form: no fleet_summary.json
+        ["fleet", "show", str(empty / "nope.json")],
     ):
         assert main(argv) == 2, argv
         err = capsys.readouterr().err
@@ -211,3 +217,14 @@ def test_corrupt_artifact_exits_2(tmp_path, capsys):
     (run / "profile.json").write_text("{truncated")
     assert main(["top", str(run)]) == 2
     assert "error:" in capsys.readouterr().err
+
+    # Fleet follows suit: a corrupt saved summary and a corrupt trajectory
+    # snapshot both fail loud with the uniform exit 2.
+    (run / "fleet_summary.json").write_text("{truncated")
+    assert main(["fleet", "show", str(run)]) == 2
+    assert capsys.readouterr().err.startswith("error:")
+    traj = tmp_path / "traj" / "00000"
+    traj.mkdir(parents=True)
+    (traj / "bench.json").write_text("{truncated")
+    assert main(["fleet", "gate", str(tmp_path / "traj")]) == 2
+    assert capsys.readouterr().err.startswith("error:")

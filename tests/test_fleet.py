@@ -1,0 +1,475 @@
+"""Fleet-scale regression service: population verdicts, stats-kernel
+properties, byte-determinism, and the CI perf gate.
+
+The synthetic populations come from the checked-in fixture driver
+(tests/fixtures/fleet/generate.py) over repro.core.fleet.synth — the same
+generator ``analysis fleet --smoke`` uses, so the contract asserted here
+is the contract the smoke self-check enforces in CI.
+"""
+
+import importlib.util
+import json
+import math
+import os
+import random
+import shutil
+
+import pytest
+
+from repro.core.fleet import (
+    ARTIFACT,
+    EFFECT_LARGE,
+    EFFECT_MEDIUM,
+    append_snapshot,
+    build_fleet_summary,
+    cliffs_delta,
+    compare_windows,
+    gate_summary,
+    ingest,
+    load_fleet_summary,
+    mann_whitney,
+    metric_direction,
+    save_fleet_summary,
+    sign_test_p,
+)
+from repro.core.fleet.stats import finite, mad, median, slope_per_second
+from repro.core.schema import MissingArtifact
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+_GEN_PATH = os.path.join(os.path.dirname(__file__), "fixtures", "fleet", "generate.py")
+
+
+def _load_generator():
+    spec = importlib.util.spec_from_file_location("fleet_fixture_generate", _GEN_PATH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+generate = _load_generator()
+
+
+@pytest.fixture(scope="module")
+def populations(tmp_path_factory):
+    """All four canonical populations plus their analyzed summaries."""
+    out = str(tmp_path_factory.mktemp("fleet-pops"))
+    roots = generate.materialize(out)
+    docs = {kind: build_fleet_summary([root]) for kind, root in roots.items()}
+    return roots, docs
+
+
+# -- fixture generator --------------------------------------------------------
+
+
+def test_generator_writes_real_schemas_deterministically(tmp_path, capsys):
+    assert generate.main([str(tmp_path / "a"), "--kind", "stable", "--runs", "3"]) == 0
+    assert "stable:" in capsys.readouterr().out
+    root = tmp_path / "a" / "stable"
+    runs = sorted(os.listdir(root))
+    assert len(runs) == 3
+    for name in ("meta.json", "profile.json", "memory.json"):
+        doc = json.loads((root / runs[0] / name).read_text())
+        assert doc["report_schema_version"] >= 1, name
+    profile = json.loads((root / runs[0] / "profile.json").read_text())
+    assert set(profile["flat"]) == set(generate.synth.REGIONS)
+    memory = json.loads((root / runs[0] / "memory.json").read_text())
+    assert set(memory["heap"]["regions"]) == set(generate.synth.ALLOC)
+    assert memory["series"]["mem.rss_mb"]
+
+    # Seeded: a regeneration is byte-identical, a different seed is not.
+    generate.materialize(str(tmp_path / "b"), kind="stable", runs=3)
+    generate.materialize(str(tmp_path / "c"), kind="stable", runs=3, seed=7)
+    a = (root / runs[0] / "profile.json").read_bytes()
+    assert (tmp_path / "b" / "stable" / runs[0] / "profile.json").read_bytes() == a
+    assert (tmp_path / "c" / "stable" / runs[0] / "profile.json").read_bytes() != a
+
+
+# -- population verdicts ------------------------------------------------------
+
+
+def test_stable_population_is_clean(populations):
+    _, docs = populations
+    doc = docs["stable"]
+    assert doc["verdict"] == "ok"
+    assert doc["findings_total"] == 0
+    assert doc["time"]["findings"] == []
+    assert doc["alloc"]["findings"] == []
+    assert doc["leaks"]["region_leaks"] == 0
+    assert all(sig["verdict"] != "leak" for sig in doc["leaks"]["process"].values())
+
+
+def test_step_population_flags_the_stepped_region(populations):
+    _, docs = populations
+    doc = docs["step"]
+    regressions = [f for f in doc["time"]["findings"] if f["verdict"] == "regression"]
+    assert regressions, doc["time"]
+    top = regressions[0]
+    assert top["region"] == "app:transform"
+    assert top["effect_size"] >= EFFECT_LARGE  # +60% step: stochastic dominance
+    assert top["method"] == "mann-whitney"
+    assert top["p"] is not None and top["p"] <= 0.05
+    assert top["candidate"]["median"] > top["baseline"]["median"]
+    assert "regressed" in doc["verdict"]
+    # The flagged region's sparkline series rides along for the report.
+    assert "app:transform" in doc["series"]["time"]
+
+
+def test_drift_population_flags_the_drifting_region(populations):
+    _, docs = populations
+    doc = docs["drift"]
+    regressions = [f for f in doc["time"]["findings"] if f["verdict"] == "regression"]
+    assert regressions and regressions[0]["region"] == "app:decode", doc["time"]
+    assert abs(regressions[0]["effect_size"]) >= EFFECT_MEDIUM
+    # 3.5%/run compounding: the candidate window is unambiguously above.
+    assert regressions[0]["rel_change"] > 0.05
+
+
+def test_leak_population_produces_region_and_process_verdicts(populations):
+    _, docs = populations
+    doc = docs["leak"]
+    leak_rows = [r for r in doc["leaks"]["regions"] if r["verdict"] == "leak"]
+    assert leak_rows and leak_rows[0]["region"] == "app:cache_fill", doc["leaks"]
+    row = leak_rows[0]
+    assert row["reclaim_rate"] < 0.5
+    assert row["p"] <= 0.05
+    assert row["net_median_bytes"] > 0
+    # Whole-process heap timelines climb in every run -> process verdict.
+    assert doc["leaks"]["process"]["heap"]["verdict"] == "leak"
+    assert doc["leaks"]["process"]["heap"]["median_slope_bytes_s"] > 0
+    assert "leaking" in doc["verdict"]
+    # The healthy allocators must not be dragged in.
+    assert all(r["verdict"] != "leak" for r in doc["leaks"]["regions"]
+               if r["region"] != "app:cache_fill")
+
+
+def test_ingest_dedups_exact_duplicate_runs(populations, tmp_path):
+    roots, _ = populations
+    root = tmp_path / "dup"
+    shutil.copytree(roots["stable"], root)
+    runs, dropped = ingest([str(root)])
+    n = len(runs)
+    assert dropped == []
+    # A re-discovered copy of an existing run (same experiment/rank/epoch)
+    # must be dropped, not double-counted.
+    src = os.path.join(str(root), sorted(os.listdir(root))[0])
+    shutil.copytree(src, os.path.join(str(root), "zz-copy"))
+    runs2, dropped2 = ingest([str(root)])
+    assert len(runs2) == n
+    assert len(dropped2) == 1 and "zz-copy" in dropped2[0]["run_dir"]
+
+
+# -- determinism --------------------------------------------------------------
+
+
+def test_summary_bytes_independent_of_ingestion_order(populations, tmp_path):
+    roots, _ = populations
+    run_dirs = sorted(
+        os.path.join(roots["leak"], d) for d in os.listdir(roots["leak"])
+    )
+    rng = random.Random(42)
+    paths = []
+    for i in range(3):
+        shuffled = list(run_dirs)
+        rng.shuffle(shuffled)
+        doc = build_fleet_summary(shuffled)
+        paths.append(save_fleet_summary(doc, str(tmp_path / f"s{i}.json")))
+    blobs = [open(p, "rb").read() for p in paths]
+    assert blobs[0] == blobs[1] == blobs[2]
+    # Repeat invocation on the same order is also byte-identical (no
+    # wall-clock, pids, or dict-order effects in the artifact).
+    again = save_fleet_summary(build_fleet_summary(run_dirs), str(tmp_path / "again.json"))
+    assert open(again, "rb").read() == blobs[0]
+
+
+def test_save_load_round_trip_and_error_contract(populations, tmp_path):
+    _, docs = populations
+    out_dir = tmp_path / "out"
+    path = save_fleet_summary(docs["stable"], str(out_dir) + os.sep)
+    assert os.path.basename(path) == ARTIFACT
+    assert load_fleet_summary(str(out_dir)) == docs["stable"]  # dir form
+    assert load_fleet_summary(path) == docs["stable"]
+    with pytest.raises(MissingArtifact):
+        load_fleet_summary(str(tmp_path / "nope.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(MissingArtifact):
+        load_fleet_summary(str(bad))
+    with pytest.raises(MissingArtifact):
+        ingest([str(tmp_path / "no-such-root")])
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(MissingArtifact):
+        ingest([str(empty)])
+
+
+# -- statistics kernel: properties --------------------------------------------
+
+_DEGENERATE = [
+    [],
+    [0.0],
+    [5.0],
+    [float("nan")],
+    [float("inf"), float("-inf")],
+    [float("nan"), 1.0, float("inf")],
+    [3.0] * 10,
+    [0.0] * 7,
+    [1e308, -1e308, 1e308],
+    [1e-320, 0.0, -1e-320],
+    list(range(5)),
+]
+
+
+def _assert_kernel_invariants(a, b):
+    d = cliffs_delta(a, b)
+    assert -1.0 <= d <= 1.0 and math.isfinite(d)
+    assert d == -cliffs_delta(b, a)  # exact antisymmetry
+    _, p = mann_whitney(a, b)
+    assert 0.0 <= p <= 1.0 and math.isfinite(p)
+    _, p_swap = mann_whitney(b, a)
+    assert abs(p - p_swap) < 1e-12  # two-sided: symmetric under swap
+    for hib in (True, False):
+        out = compare_windows(b, a, higher_is_worse=hib)
+        assert out["verdict"] in ("regression", "improvement", "stable", "insufficient")
+        json.dumps(out, allow_nan=False)  # JSON-ready and NaN/inf-free throughout
+
+
+def test_stats_kernel_survives_degenerate_inputs():
+    """Every kernel function accepts empty / constant / single-element /
+    non-finite inputs without raising and never emits NaN or inf."""
+    for a in _DEGENERATE:
+        assert all(math.isfinite(v) for v in finite(a))
+        assert math.isfinite(median(a))
+        assert math.isfinite(mad(a))
+        for b in _DEGENERATE:
+            _assert_kernel_invariants(a, b)
+    for k, n in ((0, 0), (0, 5), (5, 5), (7, 5), (-3, 5), (3, 1000)):
+        p = sign_test_p(k, n)
+        assert 0.0 <= p <= 1.0
+    assert slope_per_second([]) == 0.0
+    assert slope_per_second([[0, 1.0]]) == 0.0
+    assert slope_per_second([[10**9, 2.0], [10**9, 9.0]]) == 0.0  # one distinct t
+    assert slope_per_second([[0, 0.0], [10**9, 3.0]]) == pytest.approx(3.0)
+
+
+def test_stats_kernel_manual_fuzz():
+    """Seeded random battery — the always-on fallback for environments
+    without hypothesis (the @given generalisation below runs when it is
+    installed, mirroring test_property_core.py)."""
+    rng = random.Random(20260808)
+    specials = [float("nan"), float("inf"), float("-inf"), 0.0, -0.0, 1e300, -1e300]
+    for _ in range(200):
+        def window():
+            n = rng.randrange(0, 12)
+            return [
+                rng.choice(specials) if rng.random() < 0.15
+                else rng.gauss(rng.choice([0.0, 100.0]), 10.0)
+                for _ in range(n)
+            ]
+        _assert_kernel_invariants(window(), window())
+
+
+def test_compare_windows_detects_injected_shift():
+    rng = random.Random(7)
+    base = [rng.gauss(100.0, 4.0) for _ in range(20)]
+    cand = [rng.gauss(160.0, 4.0) for _ in range(8)]
+    out = compare_windows(base, cand)
+    assert out["verdict"] == "regression"
+    assert out["effect_size"] >= EFFECT_LARGE
+    assert out["confidence"] in ("medium", "high")
+    # Swapping windows turns the same shift into an improvement...
+    assert compare_windows(cand, base)["verdict"] == "improvement"
+    # ...and flipping the metric direction does too.
+    assert compare_windows(base, cand, higher_is_worse=False)["verdict"] == "improvement"
+    # A sub-threshold nudge stays stable (min_rel floor).
+    near = [v * 1.01 for v in base]
+    assert compare_windows(base, near, min_rel=0.05)["verdict"] == "stable"
+
+
+def test_compare_windows_mad_fallback_for_single_candidate():
+    base = [10.0, 10.1, 9.9, 10.05, 10.02, 9.95]
+    out = compare_windows(base, [20.0])
+    assert out["method"] == "mad-outlier"
+    assert out["verdict"] == "regression"
+    assert out["p"] is None and out["confidence"] == "heuristic"
+    assert out["mad_z"] > 3.0
+    assert compare_windows(base, [10.03])["verdict"] == "stable"
+
+
+if HAVE_HYPOTHESIS:
+    finite_or_not = st.floats(allow_nan=True, allow_infinity=True, width=64)
+    windows = st.lists(finite_or_not, min_size=0, max_size=20)
+
+    @given(windows, windows)
+    @settings(max_examples=120, deadline=None)
+    def test_kernel_properties_hypothesis(a, b):
+        _assert_kernel_invariants(a, b)
+
+    @given(
+        st.lists(st.floats(min_value=-1e6, max_value=1e6), min_size=4, max_size=20),
+        st.floats(min_value=1.0, max_value=1e6),
+    )
+    @settings(max_examples=80, deadline=None)
+    def test_cliffs_delta_detects_dominant_shift_hypothesis(base, shift):
+        # Shift everything above the baseline's max: full stochastic
+        # dominance, so delta must be exactly +1.
+        cand = [max(base) + shift + i for i in range(3)]
+        assert cliffs_delta(cand, base) == 1.0
+else:  # keep the skip visible/explained in -rs output
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_kernel_properties_hypothesis():
+        pass
+
+
+# -- CI perf gate -------------------------------------------------------------
+
+
+def _write_artifact(path, beta_us, per_s, extra=None):
+    doc = {"beta_us": beta_us, "records_per_s": per_s, "sizes": [1, 2, 3],
+           "report_schema_version": 1}
+    doc.update(extra or {})
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(doc, fh)
+
+
+def _seed_trajectory(traj, n, beta=10.0, per_s=5000.0, jitter=0.01):
+    rng = random.Random(99)
+    for i in range(n):
+        _write_artifact(
+            os.path.join(traj, f"{i:05d}", "bench.json"),
+            beta * rng.gauss(1.0, jitter),
+            per_s * rng.gauss(1.0, jitter),
+        )
+
+
+def test_metric_direction_classification():
+    assert metric_direction("bench.beta_us") == 1
+    assert metric_direction("agent.publish_p50_us") == 1
+    assert metric_direction("bench.records_per_s") == -1  # throughput, not a _s timing
+    assert metric_direction("merge.wall_s") == 1  # bare _s leaf is a timing
+    assert metric_direction("bench.sizes") == 0
+    assert metric_direction("config.world") == 0
+
+
+def test_gate_seeds_then_passes_then_catches_regression(tmp_path):
+    traj = str(tmp_path / "traj")
+    _seed_trajectory(traj, 2)
+    doc = gate_summary(traj)
+    assert doc["verdict"] == "seeding"  # baseline shorter than min_baseline
+    assert doc["findings"] == []
+
+    _seed_trajectory(traj, 6)  # overwrite + extend to 6 healthy snapshots
+    doc = gate_summary(traj)
+    assert doc["verdict"] == "ok"
+    assert doc["metrics_watched"] >= 2
+    assert doc["findings_total"] == 0
+
+    # A candidate snapshot with 2x beta: the single-sample MAD path fires.
+    _write_artifact(os.path.join(traj, "00006", "bench.json"), 20.0, 5000.0)
+    doc = gate_summary(traj)
+    assert doc["verdict"] == "regressed"
+    metrics = [f["metric"] for f in doc["findings"] if f["verdict"] == "regression"]
+    assert metrics == ["bench.beta_us"]
+    top = doc["findings"][0]
+    assert top["method"] == "mad-outlier" and top["direction"] == 1
+    assert doc["series"]["bench.beta_us"][-1] == 20.0
+
+
+def test_gate_throughput_drop_and_improvement_directions(tmp_path):
+    traj = str(tmp_path / "traj")
+    _seed_trajectory(traj, 6)
+    # Throughput halves -> regression even though the value went *down*.
+    _write_artifact(os.path.join(traj, "00006", "bench.json"), 10.0, 2500.0)
+    doc = gate_summary(traj)
+    assert doc["verdict"] == "regressed"
+    assert [f["metric"] for f in doc["findings"]
+            if f["verdict"] == "regression"] == ["bench.records_per_s"]
+    assert doc["findings"][0]["direction"] == -1
+
+    # beta_us halves -> an improvement finding, but the gate stays green.
+    _write_artifact(os.path.join(traj, "00006", "bench.json"), 5.0, 5000.0)
+    doc = gate_summary(traj)
+    assert doc["verdict"] == "ok"
+    assert doc["findings_total"] == 0
+    assert any(f["verdict"] == "improvement" for f in doc["findings"])
+
+
+def test_append_snapshot_numbering_labels_and_errors(tmp_path):
+    traj = str(tmp_path / "traj")
+    src = tmp_path / "artifacts"
+    src.mkdir()
+    with pytest.raises(MissingArtifact):
+        append_snapshot(traj, str(src))  # no *.json yet
+    _write_artifact(str(src / "bench.json"), 10.0, 5000.0)
+    assert append_snapshot(traj, str(src)) == "00000"
+    assert append_snapshot(traj, str(src), label="abc1234") == "00001-abc1234"
+    # Labels are sanitized into the [A-Za-z0-9_.-] alphabet.
+    assert append_snapshot(traj, str(src), label="pr #7/x") == "00002-pr--7-x"
+    assert os.path.exists(os.path.join(traj, "00002-pr--7-x", "bench.json"))
+    # Stray entries don't confuse the numbering; corrupt snapshots fail loud.
+    os.makedirs(os.path.join(traj, "not-a-snapshot"))
+    assert append_snapshot(traj, str(src)) == "00003"
+    with open(os.path.join(traj, "00003", "bench.json"), "w") as fh:
+        fh.write("{truncated")
+    with pytest.raises(MissingArtifact):
+        gate_summary(traj)
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def test_fleet_cli_analyze_show_and_exit_codes(populations, tmp_path, capsys):
+    from repro.core.analysis import main
+
+    roots, _ = populations
+    out_dir = str(tmp_path / "fleetout")
+    # Shorthand form (`fleet ROOT`), clean population -> 0; a directory
+    # --out resolves to fleet_summary.json inside.
+    assert main(["fleet", roots["stable"], "--out", out_dir + os.sep]) == 0
+    assert "verdict: ok" in capsys.readouterr().out
+    out = os.path.join(out_dir, ARTIFACT)
+    assert json.loads(open(out).read())["verdict"] == "ok"
+    # Confirmed findings -> 1, with the region named on stdout.
+    assert main(["fleet", "analyze", roots["step"]]) == 1
+    captured = capsys.readouterr()
+    assert "app:transform" in captured.out
+    assert "confirmed finding" in captured.err
+    assert main(["fleet", roots["leak"]]) == 1
+    assert "app:cache_fill" in capsys.readouterr().out
+    # show renders a previously saved summary.
+    assert main(["fleet", "show", str(out)]) == 0
+    assert "verdict: ok" in capsys.readouterr().out
+    # No roots and no --smoke -> usage error on the uniform contract.
+    assert main(["fleet", "analyze"]) == 2
+    assert capsys.readouterr().err.startswith("error:")
+
+
+def test_fleet_gate_cli_seeding_and_regression(tmp_path, capsys):
+    from repro.core.analysis import main
+
+    traj = str(tmp_path / "traj")
+    src = tmp_path / "artifacts"
+    src.mkdir()
+    _write_artifact(str(src / "bench.json"), 10.0, 5000.0)
+    # First run: --append seeds snapshot 00000, gate passes, summary lands
+    # in the trajectory dir (the CI cache round-trips both together).
+    assert main(["fleet", "gate", traj, "--append", str(src), "--label", "seed"]) == 0
+    out = capsys.readouterr().out
+    assert "appended snapshot 00000-seed" in out
+    assert "verdict: seeding" in out
+    assert os.path.exists(os.path.join(traj, ARTIFACT))
+
+    _seed_trajectory(traj, 6)
+    _write_artifact(str(src / "bench.json"), 30.0, 5000.0)
+    assert main(["fleet", "gate", traj, "--append", str(src)]) == 1
+    captured = capsys.readouterr()
+    assert "bench.beta_us" in captured.out
+    assert "confirmed regression" in captured.err
+    assert json.loads(
+        open(os.path.join(traj, ARTIFACT)).read()
+    )["verdict"] == "regressed"
